@@ -1,0 +1,77 @@
+"""Shared benchmark context: cached final DNNs, AccModels, scenes.
+
+Benchmarks run at 192x320 (the paper's 1280x720 scaled to CPU budgets; the
+macroblock grid scales with it — noted in DESIGN.md). Everything is cached
+under experiments/models so re-runs are cheap.
+"""
+from __future__ import annotations
+
+import functools
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+H, W = 192, 320
+QP_HI, QP_LO = 30, 42
+
+_STATE = {}
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timer():
+    return time.perf_counter()
+
+
+@functools.lru_cache()
+def final_dnn(task: str = "detection", genre: str = "dashcam",
+              steps: int = 600, width: int = 32, name: str | None = None):
+    from repro.vision.train import train_final_dnn
+
+    return train_final_dnn(task, genre, steps=steps, H=H, W=W, width=width,
+                           cache=True,
+                           name=name or f"bench_{task}_{genre}_w{width}")
+
+
+@functools.lru_cache()
+def train_scenes(genre: str = "dashcam", n: int = 10, T: int = 10):
+    from repro.data.video import make_scene
+
+    return np.concatenate([
+        make_scene(genre, seed=100 + i, T=T, H=H, W=W).frames
+        for i in range(n)])
+
+
+@functools.lru_cache()
+def test_scene(genre: str = "dashcam", seed: int = 999, T: int = 20):
+    from repro.data.video import make_scene
+
+    return make_scene(genre, seed=seed, T=T, H=H, W=W)
+
+
+@functools.lru_cache()
+def accmodel_for(task: str = "detection", genre: str = "dashcam",
+                 epochs: int = 15, width: int = 24):
+    from repro.core.training import train_accmodel
+
+    dnn = final_dnn(task, genre)
+    frames = train_scenes(genre)
+    rep = train_accmodel(dnn, frames, qp_hi=QP_HI, qp_lo=QP_LO,
+                         epochs=epochs, width=width)
+    return rep.accmodel
+
+
+@functools.lru_cache()
+def references(task: str = "detection", genre: str = "dashcam"):
+    from repro.core.pipeline import make_reference
+
+    return make_reference(test_scene(genre).frames, final_dnn(task, genre),
+                          qp_hi=QP_HI)

@@ -1,0 +1,64 @@
+"""Kernel microbenchmarks: wall time of the jnp reference path on this CPU
+(the Pallas path is TPU-targeted and validated in interpret mode — its
+correctness is in tests, its projected TPU role in EXPERIMENTS.md §Perf)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+
+
+def _time(fn, *args, reps=5):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def kernel_microbench():
+    from repro.kernels.accgrad_reduce.ref import accgrad_reduce_ref
+    from repro.kernels.decode_attn.ref import decode_attn_ref
+    from repro.kernels.mbcodec.ref import mbcodec_ref
+    from repro.kernels.wkv6.ref import wkv6_ref
+    from repro.models.rwkv6 import wkv_chunked
+
+    # mbcodec: one 720p frame worth of macroblocks (3600 x 3 channels)
+    blocks = jax.random.uniform(jax.random.PRNGKey(0), (10800, 16, 16))
+    qp = jnp.full((10800,), 35.0)
+    f = jax.jit(mbcodec_ref)
+    t = _time(f, blocks, qp)
+    emit("kernel/mbcodec_720p_frame", t * 1e6,
+         f"gb_per_s={(blocks.nbytes * 2) / t / 1e9:.2f}")
+
+    g = jax.random.normal(jax.random.PRNGKey(1), (720, 1280, 3))
+    h = jax.random.normal(jax.random.PRNGKey(2), (720, 1280, 3))
+    l = jax.random.normal(jax.random.PRNGKey(3), (720, 1280, 3))
+    f = jax.jit(accgrad_reduce_ref)
+    t = _time(f, g, h, l)
+    emit("kernel/accgrad_reduce_720p", t * 1e6,
+         f"gb_per_s={(3 * g.nbytes) / t / 1e9:.2f}")
+
+    B, S, Hh, hd = 1, 512, 8, 64
+    ks = jax.random.split(jax.random.PRNGKey(4), 6)
+    r, k, v = (0.5 * jax.random.normal(kk, (B, S, Hh, hd)) for kk in ks[:3])
+    ld = -jnp.exp(jax.random.normal(ks[3], (B, S, Hh, hd)) - 1)
+    u = 0.3 * jax.random.normal(ks[4], (Hh, hd))
+    s0 = jnp.zeros((B, Hh, hd, hd))
+    t_seq = _time(jax.jit(wkv6_ref), r, k, v, ld, u, s0, reps=2)
+    t_chunk = _time(jax.jit(wkv_chunked), r, k, v, ld, u, s0, reps=2)
+    emit("kernel/wkv6_sequential", t_seq * 1e6, "")
+    emit("kernel/wkv6_chunked", t_chunk * 1e6,
+         f"speedup_vs_sequential={t_seq / t_chunk:.1f}x")
+
+    q = jax.random.normal(jax.random.PRNGKey(5), (4, 8, 8, 128))
+    kk = jax.random.normal(jax.random.PRNGKey(6), (4, 4096, 8, 128))
+    vv = jax.random.normal(jax.random.PRNGKey(7), (4, 4096, 8, 128))
+    f = jax.jit(lambda q, k, v: decode_attn_ref(q, k, v, 4095))
+    t = _time(f, q, kk, vv)
+    emit("kernel/decode_attn_4k_cache", t * 1e6,
+         f"gb_per_s={(kk.nbytes + vv.nbytes) / t / 1e9:.2f}")

@@ -1,0 +1,111 @@
+"""Fig. 7's other two task families: semantic segmentation and keypoint
+detection on the surf genre (paper §6.2), plus the autoencoder comparison.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import H, QP_HI, W, accmodel_for, emit, final_dnn, test_scene
+from repro.core.pipeline import make_reference, run_accmpeg
+from repro.core.quality import QualityConfig
+from repro.baselines.baselines import run_uniform
+
+
+def _task_tradeoff(task: str, genre: str, qp_lo: int, alpha=0.4, gamma=2,
+                   label: str = ""):
+    from repro.core.training import train_accmodel
+    from repro.data.video import make_scene
+
+    dnn = final_dnn(task, genre, steps=500)
+    frames = np.concatenate([
+        make_scene(genre, seed=200 + i, T=10, H=H, W=W).frames
+        for i in range(6)])
+    rep = train_accmodel(dnn, frames, qp_hi=QP_HI, qp_lo=qp_lo, epochs=10,
+                         width=16)
+    scene = test_scene(genre, seed=888)
+    refs = make_reference(scene.frames, dnn, qp_hi=QP_HI)
+    qc = QualityConfig(alpha=alpha, gamma=gamma, qp_hi=QP_HI, qp_lo=qp_lo)
+    r = run_accmpeg(scene.frames, rep.accmodel, dnn, qc, refs=refs)
+    emit(f"fig7_{label}/accmpeg", r.mean_delay * 1e6,
+         f"acc={r.accuracy:.4f};bytes={r.mean_bytes:.0f}")
+    for qp in (QP_HI, (QP_HI + qp_lo) // 2, qp_lo):
+        u = run_uniform(scene.frames, dnn, qp, refs=refs)
+        emit(f"fig7_{label}/uniform_qp{qp}", u.mean_delay * 1e6,
+             f"acc={u.accuracy:.4f};bytes={u.mean_bytes:.0f}")
+
+
+def fig7_segmentation():
+    """Semantic segmentation (IoU accuracy), surf genre."""
+    _task_tradeoff("segmentation", "surf", qp_lo=42, label="seg")
+
+
+def fig7_keypoint():
+    """Keypoint detection (distance accuracy), surf genre, QP (30, 51)."""
+    _task_tradeoff("keypoint", "surf", qp_lo=51, label="kp")
+
+
+# ---------------------------------------------------------------------------
+# autoencoder baseline (§6.2): a small conv AE whose float latents are far
+# larger per frame than AccMPEG's RoI-encoded bytes — the paper's point
+# ---------------------------------------------------------------------------
+def autoencoder_baseline():
+    from repro.core.pipeline import NetworkConfig, chunk_accuracy, stream_delay
+    from repro.vision.dnn import conv, conv_init
+
+    dnn = final_dnn()
+    scene = test_scene()
+    refs = make_reference(scene.frames, dnn, qp_hi=QP_HI)
+
+    def ae_init(key, ch=12):
+        ks = jax.random.split(key, 4)
+        return {
+            "e1": conv_init(ks[0], 4, 4, 3, ch),
+            "e2": conv_init(ks[1], 4, 4, ch, ch),
+            "d1": conv_init(ks[2], 3, 3, ch, 3 * 16),
+        }
+
+    def encode(p, x):  # /4 spatial, ch channels
+        h = jax.nn.relu(conv(p["e1"], x, stride=2))
+        return jnp.tanh(conv(p["e2"], h, stride=2))
+
+    def decode(p, z):
+        y = conv(p["d1"], z)  # (B, H/4, W/4, 48) -> depth-to-space x4
+        B, h, w, c = y.shape
+        y = y.reshape(B, h, w, 4, 4, 3).transpose(0, 1, 3, 2, 4, 5)
+        return jax.nn.sigmoid(y.reshape(B, h * 4, w * 4, 3))
+
+    params = ae_init(jax.random.PRNGKey(0))
+    frames = jnp.asarray(scene.frames[:10])
+
+    @jax.jit
+    def step(p, m, v, t):
+        def loss(p):
+            return jnp.mean((decode(p, encode(p, frames)) - frames) ** 2)
+        l, g = jax.value_and_grad(loss)(p)
+        m = jax.tree_util.tree_map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree_util.tree_map(lambda a, b: 0.99 * a + 0.01 * b * b, v, g)
+        p = jax.tree_util.tree_map(
+            lambda pp, mm, vv: pp - 2e-3 * mm / (jnp.sqrt(vv) + 1e-8), p, m, v)
+        return p, m, v, l
+
+    m = jax.tree_util.tree_map(jnp.zeros_like, params)
+    v = jax.tree_util.tree_map(jnp.zeros_like, params)
+    for t in range(150):
+        params, m, v, l = step(params, m, v, t)
+
+    net = NetworkConfig()
+    accs, delays, nbytes = [], [], []
+    for ci, s in enumerate(range(0, 20, 10)):
+        chunk = jnp.asarray(scene.frames[s : s + 10])
+        z = encode(params, chunk)
+        rec = decode(params, z)
+        # float16 latents on the wire (the paper's AE sends large frames)
+        b = z.size * 2
+        accs.append(chunk_accuracy(dnn, rec, refs[ci]))
+        nbytes.append(b)
+        delays.append(stream_delay(b, net))
+    emit("fig7_ae/autoencoder", float(np.mean(delays)) * 1e6,
+         f"acc={np.mean(accs):.4f};bytes={np.mean(nbytes):.0f};"
+         f"recon_mse={float(l):.5f}")

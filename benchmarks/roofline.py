@@ -1,0 +1,121 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json, prints the per-cell three-term table and
+writes experiments/roofline.md. The roofline fraction reported is
+MODEL_FLOPS / (devices * peak * step_lower_bound): the share of the
+machine's peak that useful model math would achieve if the step ran exactly
+at its dominant-term bound.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+OUT_MD = Path(__file__).resolve().parents[1] / "experiments" / "roofline.md"
+
+PEAK = 197e12
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_records(mesh="single", variant="base"):
+    recs = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("mesh") != mesh or r.get("variant", "base") != variant:
+            continue
+        recs.append(r)
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])
+                             if r["shape"] in SHAPE_ORDER else 9))
+    return recs
+
+
+def fraction(rec):
+    rl = rec["roofline"]
+    lb = rl["step_time_lower_bound_s"]
+    if lb <= 0:
+        return 0.0
+    mf = rec["model_flops_global"]
+    return mf / (rec["n_devices"] * PEAK * lb)
+
+
+def next_lever(rec) -> str:
+    """One sentence: what would move the dominant term down (per the brief)."""
+    kind = rec["meta"]["kind"]
+    b = rec["roofline"]["bottleneck"]
+    arch = rec["arch"]
+    if kind == "decode":
+        if b == "memory":
+            return ("int8 KV cache halves the streamed bytes "
+                    "(measured 3-11x, §Perf)" if "int8" not in
+                    json.dumps(rec.get("meta", {})) else
+                    "fp8 cache / wider decode batches amortize weight reads")
+        return "batch more sequences per step to amortize the cache shards' softmax combine"
+    if kind == "prefill":
+        if b == "memory":
+            return ("fused (flash) attention kernel keeps score slabs in VMEM "
+                    "instead of HBM round-trips")
+        return "overlap the EP all-to-all / CP all-gather with the FFN matmuls"
+    # train
+    if b == "collective":
+        return ("reduce-scatter the row-parallel partials into the SP layout "
+                "before the f32 convert; compress cross-pod grads (int8 EF)")
+    if b == "memory":
+        if "jamba" in arch or "moe" in arch:
+            return ("fewer microbatches (needs >16GiB/chip or more pods) to "
+                    "cut per-microbatch fsdp re-gathers")
+        return ("train-side flash-attention kernel + bf16 partial sums cut "
+                "the softmax-chain HBM passes")
+    return "raise arithmetic intensity: larger microbatch or fused kernels"
+
+
+def roofline_table(mesh="single", variant="base", emit_csv=True):
+    recs = load_records(mesh, variant)
+    lines = [
+        f"### Roofline ({mesh}-pod, variant={variant})",
+        "",
+        "| arch | shape | compute s | memory s | collective s | bottleneck |"
+        " peak GiB/dev | MODEL/HLO flops | roofline frac | what moves the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped: {r['skip_reason'][:60]}… | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"{r['status']} | — | — | — | — |")
+            continue
+        rl = r["roofline"]
+        frac = fraction(r)
+        ratio = r.get("model_to_hlo_flops")
+        ratio_s = f"{ratio:.3f}" if ratio else "n/a"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.4f} | "
+            f"{rl['memory_s']:.4f} | {rl['collective_s']:.4f} | "
+            f"{rl['bottleneck']} | "
+            f"{r['memory']['peak_per_device_bytes'] / 2**30:.2f} | "
+            f"{ratio_s} | {frac * 100:.1f}% | {next_lever(r)} |")
+        if emit_csv:
+            emit(f"roofline/{r['arch']}/{r['shape']}/{mesh}",
+                 rl["step_time_lower_bound_s"] * 1e6,
+                 f"bottleneck={rl['bottleneck']};frac={frac * 100:.1f}%")
+    return "\n".join(lines)
+
+
+def run(write_md: bool = True):
+    parts = []
+    for mesh in ("single", "multi"):
+        recs = load_records(mesh)
+        if recs:
+            parts.append(roofline_table(mesh, emit_csv=(mesh == "single")))
+            n_ok = sum(r["status"] == "ok" for r in recs)
+            n_skip = sum(r["status"] == "skipped" for r in recs)
+            emit(f"roofline/{mesh}_cells", 0.0,
+                 f"ok={n_ok};skipped={n_skip};total={len(recs)}")
+    if write_md and parts:
+        OUT_MD.write_text("\n\n".join(parts) + "\n")

@@ -1,0 +1,53 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Usage:
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig7 fig9  # a subset
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import kernel_bench, multitask, paper_figs, roofline
+
+    benches = {
+        "fig6": paper_figs.fig6_stability,
+        "fig7": paper_figs.fig7_tradeoff,
+        "fig7seg": multitask.fig7_segmentation,
+        "fig7kp": multitask.fig7_keypoint,
+        "fig7ae": multitask.autoencoder_baseline,
+        "fig8": paper_figs.fig8_delay_breakdown,
+        "fig9": paper_figs.fig9_camera_overhead,
+        "fig10": paper_figs.fig10_bandwidth,
+        "fig11": paper_figs.fig11_reuse,
+        "table2": paper_figs.table2_training_time,
+        "fig12": paper_figs.fig12_fp_tolerance,
+        "appxc": paper_figs.appxc_size_growth,
+        "kernels": kernel_bench.kernel_microbench,
+        "roofline": roofline.run,
+    }
+    wanted = sys.argv[1:] or list(benches)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in wanted:
+        fn = benches[name]
+        t0 = time.time()
+        try:
+            fn()
+            print(f"bench/{name}_wall,{(time.time() - t0) * 1e6:.0f},ok")
+        except Exception as e:
+            failures += 1
+            traceback.print_exc()
+            print(f"bench/{name}_wall,{(time.time() - t0) * 1e6:.0f},"
+                  f"FAILED:{type(e).__name__}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""AccMPEG at datacenter scale: AccGrad over a VLM's patch-embedding stream.
+
+The paper's camera->server design maps onto the llama-3.2-vision workload
+(DESIGN.md §3): video frames are lossily encoded into patch embeddings; the
+accuracy gradient w.r.t. those embeddings says which patches deserve bits.
+
+    PYTHONPATH=src python examples/accgrad_vlm.py
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+
+def main():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import get_reduced_config
+    from repro.core.accgrad import accgrad_embeddings
+    from repro.core.quality import dilate, select_blocks
+    from repro.distributed.sharding import local_rules
+    from repro.models.transformer import build_model
+
+    cfg = get_reduced_config("llama3_2_vision_90b")
+    rules = local_rules()
+    model = build_model(cfg, rules, compute_dtype=jnp.float32,
+                        param_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+
+    B, S, P = 2, 16, cfg.n_frontend_tokens
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size)
+    # high-quality vs lossily-encoded patch embeddings (frontend stub)
+    hq = 0.3 * jax.random.normal(jax.random.PRNGKey(2), (B, P, cfg.d_model))
+    noise = 0.05 * jax.random.normal(jax.random.PRNGKey(3), hq.shape)
+    # only the first half of the patches is actually degraded
+    lq = hq.at[:, : P // 2].add(noise[:, : P // 2])
+
+    def loss_fn(embeds):
+        h, _, _ = model.hidden(params, tokens, {"context": embeds})
+        logits = model.logits(params, h)
+        ref = jax.lax.stop_gradient(
+            model.logits(params, model.hidden(params, tokens,
+                                              {"context": hq})[0]))
+        return jnp.mean((jax.nn.log_softmax(logits)
+                         - jax.nn.log_softmax(ref)) ** 2)
+
+    scores = accgrad_embeddings(loss_fn, hq, lq, group=4)
+    mask = dilate(select_blocks(scores, 0.2), 1)
+    print("per-patch-group AccGrad (sample 0):")
+    print("  scores:", [f"{s:.2f}" for s in scores[0].tolist()])
+    print("  high-quality groups:", mask[0].astype(int).tolist())
+    degraded = mask[0][: mask.shape[1] // 2].mean()
+    clean = mask[0][mask.shape[1] // 2 :].mean()
+    print(f"  selected in degraded half: {float(degraded) * 100:.0f}% vs "
+          f"clean half: {float(clean) * 100:.0f}%")
+    assert float(degraded) > float(clean), "AccGrad must find degraded patches"
+    print("OK: the accuracy gradient localizes the lossy patches.")
+
+
+if __name__ == "__main__":
+    main()

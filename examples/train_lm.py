@@ -1,0 +1,34 @@
+"""Train a small LM for a few hundred steps through the production stack
+(scan-over-blocks model, AdamW, deterministic loader, async checkpoints):
+
+    PYTHONPATH=src python examples/train_lm.py --arch smollm_360m --steps 200
+
+Any of the 10 assigned architectures works via --arch (reduced configs on
+CPU; the full configs are exercised by the multi-pod dry-run).
+"""
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_360m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    from repro.launch.train import main as train_main
+
+    return train_main([
+        "--arch", args.arch, "--reduced", "--steps", str(args.steps),
+        "--batch", str(args.batch), "--seq", str(args.seq),
+        "--ckpt-every", "100", "--log-every", "20",
+    ])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,68 @@
+"""AccGrad — the paper's core quantity (Eq. 1).
+
+AccGrad_B = sum_{i in B} || d Acc(D(X); D(H)) / dX_i |_{X=L} ||_1
+            * || H_i - L_i ||_1
+
+computed with exactly two forward passes (D(H) for the reference labels,
+D(L) inside the grad) and one backward pass through the final DNN, which is
+what makes decoupled AccModel training 6x cheaper per image (§5, Table 2).
+
+The per-pixel |g|*|H-L| -> 16x16 block-sum reduction has a fused Pallas
+kernel (repro.kernels.accgrad_reduce); this module is the jnp reference
+path and the public API.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.codec.dct import MB
+
+
+def block_reduce(x: jnp.ndarray, block: int = MB) -> jnp.ndarray:
+    """(..., H, W) -> (..., H/block, W/block) sum."""
+    *lead, H, W = x.shape
+    x = x.reshape(*lead, H // block, block, W // block, block)
+    return x.sum(axis=(-3, -1))
+
+
+def accgrad_frames(final_dnn, hq: jnp.ndarray, lq: jnp.ndarray) -> jnp.ndarray:
+    """hq/lq: (B, H, W, 3) high/low-quality frames.
+
+    Returns AccGrad grids (B, H/16, W/16), normalized per frame to [0, 1]
+    (the paper's alpha=0.2 threshold is relative).
+    """
+    ref_out = final_dnn.predict(hq)
+
+    def loss(x):
+        return final_dnn.proxy_loss(x, ref_out)
+
+    g = jax.grad(loss)(lq)  # one backward through D at X=L
+    per_pixel = jnp.abs(g).sum(-1) * jnp.abs(hq - lq).sum(-1)  # (B, H, W)
+    grid = block_reduce(per_pixel)
+    mx = grid.max(axis=(-2, -1), keepdims=True)
+    return grid / jnp.maximum(mx, 1e-12)
+
+
+@functools.partial(jax.jit, static_argnames=("final_dnn",))
+def _accgrad_jit(final_dnn, hq, lq):  # pragma: no cover - thin wrapper
+    return accgrad_frames(final_dnn, hq, lq)
+
+
+def accgrad_embeddings(loss_fn, hq_embeds: jnp.ndarray,
+                       lq_embeds: jnp.ndarray, group: int = 1) -> jnp.ndarray:
+    """AccGrad over frontend token embeddings (VLM / audio final DNNs —
+    DESIGN.md §3): how much each patch/frame token's encoding quality moves
+    the model output. loss_fn(embeds) must be differentiable.
+
+    Returns per-token (or per-``group`` of tokens) scores, normalized.
+    """
+    g = jax.grad(loss_fn)(lq_embeds)
+    per_tok = jnp.abs(g).sum(-1) * jnp.abs(hq_embeds - lq_embeds).sum(-1)
+    if group > 1:
+        B, T = per_tok.shape
+        per_tok = per_tok[:, : T - T % group].reshape(B, -1, group).sum(-1)
+    mx = per_tok.max(axis=-1, keepdims=True)
+    return per_tok / jnp.maximum(mx, 1e-12)

@@ -1,0 +1,75 @@
+"""AccModel — the cheap camera-side quality selector (§4).
+
+MobileNet-style depthwise-separable feature extractor downsampling by 16
+(one feature vector per macroblock) + three conv classification layers,
+one binary logit per 16x16 macroblock. Per the paper's §3.2 arguments it is
+~256x cheaper than per-pixel segmentation: one output per macroblock,
+binary, false-positive tolerant.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.vision.dnn import conv, conv_init, dw_sep, dw_sep_init
+
+
+def accmodel_init(key, width: int = 16):
+    ks = jax.random.split(key, 8)
+    w = width
+    return {
+        "stem": conv_init(ks[0], 3, 3, 3, w),            # /2
+        "b1": dw_sep_init(ks[1], w, 2 * w),              # /4
+        "b2": dw_sep_init(ks[2], 2 * w, 4 * w),          # /8
+        "b3": dw_sep_init(ks[3], 4 * w, 8 * w),          # /16
+        "b4": dw_sep_init(ks[4], 8 * w, 8 * w),          # /16
+        # the paper's three appended conv layers
+        "c1": conv_init(ks[5], 3, 3, 8 * w, 4 * w),
+        "c2": conv_init(ks[6], 3, 3, 4 * w, 2 * w),
+        "c3": conv_init(ks[7], 1, 1, 2 * w, 1),
+    }
+
+
+def accmodel_apply(params, frames):
+    """frames (B, H, W, 3) -> macroblock logits (B, H/16, W/16)."""
+    x = jax.nn.relu(conv(params["stem"], frames, stride=2))
+    x = dw_sep(params["b1"], x, stride=2)
+    x = dw_sep(params["b2"], x, stride=2)
+    x = dw_sep(params["b3"], x, stride=2)
+    x = dw_sep(params["b4"], x, stride=1)
+    x = jax.nn.relu(conv(params["c1"], x))
+    x = jax.nn.relu(conv(params["c2"], x))
+    return conv(params["c3"], x)[..., 0]
+
+
+def accmodel_flops(H: int, W: int, width: int = 16) -> float:
+    """Analytic MACs for one frame (camera-cost accounting, Fig. 9)."""
+    w = width
+    f = 0.0
+    h2, w2 = H // 2, W // 2
+    f += h2 * w2 * 9 * 3 * w                       # stem
+    dims = [(H // 4, W // 4, w, 2 * w), (H // 8, W // 8, 2 * w, 4 * w),
+            (H // 16, W // 16, 4 * w, 8 * w), (H // 16, W // 16, 8 * w, 8 * w)]
+    for hh, ww, ci, co in dims:
+        f += hh * ww * (9 * ci + ci * co)
+    hh, ww = H // 16, W // 16
+    f += hh * ww * (9 * 8 * w * 4 * w + 9 * 4 * w * 2 * w + 2 * w)
+    return 2.0 * f  # MAC -> FLOP
+
+
+@dataclasses.dataclass
+class AccModel:
+    params: dict
+    name: str = "accmodel"
+
+    @functools.cached_property
+    def _jit(self):
+        return jax.jit(lambda f: accmodel_apply(self.params, f))
+
+    def scores(self, frames) -> jnp.ndarray:
+        """-> per-macroblock probabilities (B, mb_h, mb_w) in [0,1]."""
+        return jax.nn.sigmoid(self._jit(frames))

@@ -1,0 +1,59 @@
+"""AccGrad-based quality assignment (§4): threshold alpha, dilation gamma,
+two-level QP map, k-frame reuse.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_ALPHA = 0.2
+DEFAULT_GAMMA = 5  # blocks expanded in each direction (paper default)
+
+
+def select_blocks(scores: jnp.ndarray, alpha: float = DEFAULT_ALPHA):
+    """scores (..., mb_h, mb_w) in [0,1] -> bool mask."""
+    return scores >= alpha
+
+
+def dilate(mask: jnp.ndarray, gamma: int = DEFAULT_GAMMA):
+    """Expand selected blocks by gamma in each direction (max-pool)."""
+    if gamma <= 0:
+        return mask
+    m = mask.astype(jnp.float32)
+    if m.ndim == 2:
+        m = m[None]
+        squeeze = True
+    else:
+        squeeze = False
+    k = 2 * gamma + 1
+    out = jax.lax.reduce_window(m, -jnp.inf, jax.lax.max,
+                                (1, k, k), (1, 1, 1), "SAME")
+    out = out > 0.5
+    return out[0] if squeeze else out
+
+
+@dataclasses.dataclass(frozen=True)
+class QualityConfig:
+    alpha: float = DEFAULT_ALPHA
+    gamma: int = DEFAULT_GAMMA
+    qp_hi: int = 30
+    qp_lo: int = 40  # (30, 51) for keypoint per §6.1
+    frame_sample: int = 10  # run AccModel once every k frames
+
+
+def quality_mask(scores, cfg: QualityConfig):
+    return dilate(select_blocks(scores, cfg.alpha), cfg.gamma)
+
+
+def qp_map_from_scores(scores, cfg: QualityConfig):
+    mask = quality_mask(scores, cfg)
+    return jnp.where(mask, float(cfg.qp_hi), float(cfg.qp_lo)), mask
+
+
+def mask_stability(masks: jnp.ndarray) -> jnp.ndarray:
+    """Fig. 6: fraction of macroblocks whose assignment matches frame 0,
+    per frame distance. masks: (T, mb_h, mb_w) bool -> (T,)."""
+    ref = masks[0]
+    return (masks == ref[None]).mean(axis=(-2, -1))

@@ -1,0 +1,80 @@
+"""Production mesh construction.
+
+The production target is TPU v5e pods: 256 chips per pod arranged as a
+(16 data, 16 model) mesh; the multi-pod configuration adds a leading "pod"
+axis (2 pods = 512 chips) used for cross-pod data parallelism (optionally
+pipeline stages, see ``repro.distributed.pipeline``).
+
+Everything here is a *function* (no module-level device access) so importing
+never locks the JAX backend device count.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+# Hardware constants for the roofline model (TPU v5e).
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    shape: tuple
+    axes: tuple
+
+    @property
+    def n_devices(self) -> int:
+        return int(np.prod(self.shape))
+
+
+SINGLE_POD = MeshSpec((16, 16), ("data", "model"))
+MULTI_POD = MeshSpec((2, 16, 16), ("pod", "data", "model"))
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """The graded production mesh: 16x16 single pod, 2x16x16 multi-pod.
+
+    Requires ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` (set by
+    ``repro.launch.dryrun`` before any JAX import) or real hardware.
+    """
+    spec = MULTI_POD if multi_pod else SINGLE_POD
+    devices = jax.devices()
+    if len(devices) < spec.n_devices:
+        raise RuntimeError(
+            f"need {spec.n_devices} devices for mesh {spec.shape}, have "
+            f"{len(devices)}; run under the dry-run launcher or on hardware"
+        )
+    devs = np.asarray(devices[: spec.n_devices]).reshape(spec.shape)
+    return Mesh(devs, spec.axes)
+
+
+def make_mesh(shape: tuple, axes: tuple) -> Mesh:
+    """Arbitrary mesh over a prefix of the available devices (tests, smoke)."""
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_local_mesh() -> Mesh:
+    """Single-device mesh with the production axis names (smoke tests)."""
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    """Mesh axes that carry data parallelism (pod + data when present)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+
+def tp_size(mesh: Mesh) -> int:
+    return int(mesh.shape.get("model", 1))

@@ -1,0 +1,41 @@
+"""Fused AccGrad reduction Pallas kernel.
+
+Computes sum_{i in B} |g_i|_1 * |H_i - L_i|_1 per 16x16 macroblock in one
+VMEM pass over a row of macroblocks — the gradient tensor is consumed
+tile-by-tile without materializing the (H, W) per-pixel product in HBM.
+Tile: one macroblock row = (16, W, C); VMEM for 1280-wide RGB f32 rows is
+3 x 245 KiB in + 80 x 4 B out.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.codec.dct import MB
+
+
+def _kernel(g_ref, hq_ref, lq_ref, out_ref):
+    g = g_ref[...]      # (16, W, C)
+    hq = hq_ref[...]
+    lq = lq_ref[...]
+    pp = jnp.abs(g).sum(-1) * jnp.abs(hq - lq).sum(-1)  # (16, W)
+    W = pp.shape[1]
+    out_ref[...] = pp.reshape(1, MB, W // MB, MB).sum(axis=(1, 3))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def accgrad_reduce_pallas(g, hq, lq, interpret: bool = False):
+    """g/hq/lq (H, W, C) f32 -> (H/16, W/16)."""
+    H, W, C = g.shape
+    spec = pl.BlockSpec((MB, W, C), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=(H // MB,),
+        in_specs=[spec, spec, spec],
+        out_specs=pl.BlockSpec((1, W // MB), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((H // MB, W // MB), jnp.float32),
+        interpret=interpret,
+    )(g, hq, lq)

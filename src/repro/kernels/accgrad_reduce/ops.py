@@ -1,0 +1,15 @@
+"""Entry point for the fused AccGrad reduction."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.accgrad_reduce.kernel import accgrad_reduce_pallas
+from repro.kernels.accgrad_reduce.ref import accgrad_reduce_ref
+
+
+def accgrad_reduce(g, hq, lq, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return accgrad_reduce_ref(g, hq, lq)
+    return accgrad_reduce_pallas(g, hq, lq, interpret=(impl == "interpret"))

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle: per-pixel |g|*|H-L| -> 16x16 macroblock sums."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.codec.dct import MB
+
+
+def accgrad_reduce_ref(g: jnp.ndarray, hq: jnp.ndarray, lq: jnp.ndarray):
+    """g, hq, lq: (H, W, C) -> (H/16, W/16)."""
+    per_pixel = jnp.abs(g).sum(-1) * jnp.abs(hq - lq).sum(-1)
+    H, W = per_pixel.shape
+    x = per_pixel.reshape(H // MB, MB, W // MB, MB)
+    return x.sum(axis=(1, 3))

@@ -1,0 +1,75 @@
+"""Flash-decoding Pallas kernel: one query token vs a long KV cache.
+
+Grid (B, KV, S/blk) with the sequence axis iterated sequentially; running
+max / denominator / weighted accumulator live in VMEM scratch (online
+softmax), so the cache streams through VMEM once and the (G, S) score
+matrix never exists. This is the serving-side hot loop of the decode_32k /
+long_500k cells.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLK = 512
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr):
+    si = pl.program_id(2)
+    ns = pl.num_programs(2)
+    blk = k_ref.shape[1]
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr[...], -1e30)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    q = q_ref[0, 0]            # (G, hd)
+    kb = k_ref[0, :, 0, :]     # (blk, hd)
+    vb = v_ref[0, :, 0, :]
+    pos = pos_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    s = (q @ kb.T) * scale     # (G, blk)
+    offs = si * blk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(offs <= pos, s, -1e30)
+
+    m_old = m_scr[...]                      # (G, 1)
+    m_new = jnp.maximum(m_old, s.max(-1, keepdims=True))
+    corr = jnp.exp(m_old - m_new)
+    p = jnp.exp(s - m_new)                  # (G, blk)
+    l_scr[...] = l_scr[...] * corr + p.sum(-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + p @ vb
+    m_scr[...] = m_new
+
+    @pl.when(si == ns - 1)
+    def _flush():
+        o_ref[0, 0] = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("blk", "interpret"))
+def decode_attn_pallas(q, k, v, pos, blk: int = BLK, interpret: bool = False):
+    B, KV, G, hd = q.shape
+    S = k.shape[1]
+    pos_arr = jnp.full((1,), pos, jnp.int32) if jnp.ndim(pos) == 0 else pos
+    return pl.pallas_call(
+        _kernel,
+        grid=(B, KV, S // blk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, s: (0,)),
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, blk, 1, hd), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, blk, 1, hd), lambda b, h, s: (b, s, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, hd), jnp.float32)],
+        interpret=interpret,
+    )(pos_arr, q.astype(jnp.float32), k.astype(jnp.float32),
+      v.astype(jnp.float32))

@@ -1,0 +1,21 @@
+"""Entry point for flash-decoding attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attn.kernel import BLK, decode_attn_pallas
+from repro.kernels.decode_attn.ref import decode_attn_ref
+
+
+def decode_attn(q, k, v, pos, impl: str = "auto", blk: int = BLK):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return decode_attn_ref(q, k, v, pos)
+    S = k.shape[1]
+    b = min(blk, S)
+    while S % b != 0:
+        b -= 1
+    return decode_attn_pallas(q, k, v, pos, blk=b,
+                              interpret=(impl == "interpret"))

@@ -1,0 +1,18 @@
+"""Oracle: single-token GQA attention against a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attn_ref(q, k, v, pos):
+    """q: (B, KV, G, hd); k/v: (B, S, KV, hd); pos: scalar (inclusive last
+    valid index). Returns (B, KV, G, hd)."""
+    S = k.shape[1]
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    valid = jnp.arange(S)[None, None, None, :] <= pos
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgs,bskh->bkgh", p, v.astype(jnp.float32))

@@ -1,0 +1,80 @@
+"""Fused macroblock codec Pallas kernel (TPU target).
+
+One VMEM round-trip does blockify-DCT-quant-dequant-IDCT + the entropy-bit
+estimate, with the per-macroblock QP prefetched alongside the tile. TPU
+adaptation (DESIGN.md §5): macroblocks are batched along the leading dim so
+the two 16x16 transform matmuls run as (TILE*16, 16) x (16, 16) GEMMs —
+the 16-contraction is the only small dim the MXU sees.
+
+Validated against ref.mbcodec_ref in interpret mode (tests/test_kernels.py);
+on CPU hosts ops.py always selects interpret or the jnp path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.codec.codec import BITS_PER_MAG, BLOCK_OVERHEAD, RUN_BITS
+from repro.codec.dct import dct_matrix, freq_weight
+
+TILE = 64  # macroblocks per VMEM tile: 64*16*16*4B = 64 KiB per buffer
+
+
+def _kernel(blocks_ref, qp_ref, d_ref, w_ref, rec_ref, bits_ref):
+    x = blocks_ref[...]  # (TILE, 16, 16)
+    qp = qp_ref[...]     # (TILE,)
+    d = d_ref[...]       # (16, 16) DCT matrix (broadcast to every tile)
+    dt = d.T
+    w = w_ref[...]
+    # DCT: D @ X @ D^T as two batched GEMMs
+    c = jax.lax.dot_general(x, d, (((2,), (1,)), ((), ())))          # X @ D^T -> (T,16,16)
+    c = jax.lax.dot_general(c, d, (((1,), (1,)), ((), ())))          # (T,16k,16i)?
+    # dot_general above contracts axis1 with d's axis1: result (T, 16, 16)
+    # with transform rows in the LAST dim; transpose back
+    c = c.transpose(0, 2, 1)
+    step = (0.625 * jnp.exp2((qp - 4.0) / 6.0) / 255.0)[:, None, None] * w
+    q = jnp.round(c / step)
+    aq = jnp.abs(q)
+    bits = (BITS_PER_MAG * jnp.log2(1.0 + aq)
+            + RUN_BITS * (aq > 0.5).astype(jnp.float32)).sum(axis=(1, 2)) \
+        + BLOCK_OVERHEAD
+    deq = q * step
+    # IDCT: D^T @ C @ D
+    r = jax.lax.dot_general(deq, dt, (((2,), (1,)), ((), ())))
+    r = jax.lax.dot_general(r, dt, (((1,), (1,)), ((), ()))).transpose(0, 2, 1)
+    rec_ref[...] = r
+    bits_ref[...] = bits
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mbcodec_pallas(blocks: jnp.ndarray, qp: jnp.ndarray,
+                   interpret: bool = False):
+    """blocks (N, 16, 16) f32, qp (N,) f32 -> (rec, bits). N % TILE == 0
+    (ops.py pads)."""
+    n = blocks.shape[0]
+    d = jnp.asarray(dct_matrix())
+    w = jnp.asarray(freq_weight())
+    grid = (n // TILE,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE, 16, 16), lambda i: (i, 0, 0)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((16, 16), lambda i: (0, 0)),
+            pl.BlockSpec((16, 16), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE, 16, 16), lambda i: (i, 0, 0)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 16, 16), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(blocks, qp, d, w)

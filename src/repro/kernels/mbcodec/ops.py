@@ -1,0 +1,55 @@
+"""Public entry point for the fused macroblock codec.
+
+Selects the Pallas kernel on TPU, interpret-mode Pallas for validation, or
+the jnp reference elsewhere. The frame-level wrapper handles blockify /
+padding / per-channel layout so callers never see kernel tiling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.codec.dct import MB, blockify, unblockify
+from repro.kernels.mbcodec.kernel import TILE, mbcodec_pallas
+from repro.kernels.mbcodec.ref import mbcodec_ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def mbcodec(blocks: jnp.ndarray, qp: jnp.ndarray, impl: str = "auto"):
+    """blocks (N, 16, 16), qp (N,) -> (rec, bits)."""
+    if impl == "auto":
+        impl = "pallas" if on_tpu() else "ref"
+    if impl == "ref":
+        return mbcodec_ref(blocks, qp)
+    n = blocks.shape[0]
+    pad = (-n) % TILE
+    if pad:
+        blocks = jnp.concatenate(
+            [blocks, jnp.zeros((pad, MB, MB), blocks.dtype)])
+        qp = jnp.concatenate([qp, jnp.full((pad,), 30.0, qp.dtype)])
+    rec, bits = mbcodec_pallas(blocks, qp, interpret=(impl == "interpret"))
+    return rec[:n], bits[:n]
+
+
+def encode_frame_fused(frame: jnp.ndarray, qp_map: jnp.ndarray,
+                       impl: str = "auto"):
+    """Kernel-backed equivalent of repro.codec.codec.encode_frame (I-frame).
+
+    frame (H, W, C); qp_map (H/16, W/16) -> (decoded, bits_map).
+    """
+    H, W, C = frame.shape
+    blocks = blockify(frame).reshape(-1, MB, MB)  # (N*C, 16, 16)
+    qp = jnp.repeat(qp_map.reshape(-1), C)
+    rec, bits = mbcodec(blocks, qp, impl)
+    rec = unblockify(rec.reshape(-1, C, MB, MB), H, W)
+    # one per-macroblock header, not one per channel (match codec.block_bits)
+    from repro.codec.codec import BLOCK_OVERHEAD
+
+    bits_map = (bits.reshape(-1, C).sum(-1) - (C - 1) * BLOCK_OVERHEAD)
+    bits_map = bits_map.reshape(H // MB, W // MB)
+    return jnp.clip(rec, 0.0, 1.0), bits_map

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused macroblock codec kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.codec.dct import dct_matrix, freq_weight, qstep
+from repro.codec.codec import BITS_PER_MAG, BLOCK_OVERHEAD, RUN_BITS
+
+
+def mbcodec_ref(blocks: jnp.ndarray, qp: jnp.ndarray):
+    """blocks: (N, 16, 16) f32; qp: (N,) f32.
+
+    Returns (reconstructed (N, 16, 16), bits (N,)).
+    """
+    d = jnp.asarray(dct_matrix())
+    w = jnp.asarray(freq_weight())
+    coefs = jnp.einsum("ij,njk,lk->nil", d, blocks, d)
+    step = qstep(qp)[:, None, None] * w
+    q = jnp.round(coefs / step)
+    bits = (BITS_PER_MAG * jnp.log2(1.0 + jnp.abs(q))
+            + RUN_BITS * (jnp.abs(q) > 0.5)).sum(axis=(-2, -1)) + BLOCK_OVERHEAD
+    deq = q * step
+    rec = jnp.einsum("ji,njk,kl->nil", d, deq, d)
+    return rec, bits

@@ -1,0 +1,83 @@
+"""Chunked WKV6 Pallas kernel (TPU target).
+
+Grid (B, H, S/c) with the chunk axis iterated sequentially; the (hd, hd)
+state lives in VMEM scratch across chunk steps (re-initialized from s0 at
+chunk 0, flushed to the output at the last chunk). Within a chunk all work
+is dense (c, c)/(c, hd) matmul — the MXU-friendly re-blocking of the CUDA
+recurrence (DESIGN.md §5). Pairwise decay exponents are differences of
+cumulative log-decays with s <= t, hence <= 0: numerically safe.
+
+VMEM per grid step at c=64, hd=64: 4 x (64, 64) inputs + (64, 64, 64)
+pairwise block (1 MiB) + state (16 KiB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 64
+
+
+def _kernel(r_ref, k_ref, v_ref, ld_ref, u_ref, s0_ref, o_ref, sout_ref,
+            s_scr):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = s0_ref[0, 0]
+
+    rb = r_ref[0, :, 0, :]   # (c, hd)
+    kb = k_ref[0, :, 0, :]
+    vb = v_ref[0, :, 0, :]
+    lb = ld_ref[0, :, 0, :]
+    u = u_ref[0]             # (hd,)
+    s = s_scr[...]           # (hd, hd)
+
+    c = rb.shape[0]
+    L = jnp.cumsum(lb, axis=0)       # inclusive
+    Lx = L - lb                      # exclusive
+    decay = jnp.exp(Lx[:, None, :] - L[None, :, :])      # (t, s, hd)
+    A = (rb[:, None, :] * kb[None, :, :] * decay).sum(-1)  # (t, s)
+    tri = jnp.tril(jnp.ones((c, c), jnp.float32), k=-1)
+    A = A * tri
+    o = A @ vb
+    diag = (rb * kb * u[None]).sum(-1)                   # (t,)
+    o = o + diag[:, None] * vb
+    o = o + (rb * jnp.exp(Lx)) @ s
+    o_ref[0, :, 0, :] = o
+
+    Lc = L[-1]                                            # (hd,)
+    kd = kb * jnp.exp(Lc[None] - L)                       # (c, hd)
+    s_new = s * jnp.exp(Lc)[:, None] + kd.T @ vb
+    s_scr[...] = s_new
+
+    @pl.when(ci == nc - 1)
+    def _flush():
+        sout_ref[0, 0] = s_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_pallas(r, k, v, log_decay, u, s0, chunk: int = CHUNK,
+                interpret: bool = False):
+    """Shapes as in ref.wkv6_ref. S % chunk == 0 (ops.py pads)."""
+    B, S, H, hd = r.shape
+    nc = S // chunk
+    x_spec = pl.BlockSpec((1, chunk, 1, hd), lambda b, h, c: (b, c, h, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=(B, H, nc),
+        in_specs=[x_spec, x_spec, x_spec, x_spec,
+                  pl.BlockSpec((1, hd), lambda b, h, c: (h, 0)),
+                  pl.BlockSpec((1, 1, hd, hd), lambda b, h, c: (b, h, 0, 0))],
+        out_specs=[x_spec,
+                   pl.BlockSpec((1, 1, hd, hd), lambda b, h, c: (b, h, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((B, S, H, hd), jnp.float32),
+                   jax.ShapeDtypeStruct((B, H, hd, hd), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, log_decay, u, s0)

@@ -1,0 +1,26 @@
+"""Entry point for the chunked WKV6 kernel (RWKV6 time-mix hot loop)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.kernel import CHUNK, wkv6_pallas
+from repro.kernels.wkv6.ref import wkv6_ref
+
+
+def wkv6(r, k, v, log_decay, u, s0, impl: str = "auto", chunk: int = CHUNK):
+    """r/k/v/log_decay (B,S,H,hd) f32; u (H,hd); s0 (B,H,hd,hd)."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return wkv6_ref(r, k, v, log_decay, u, s0)
+    B, S, H, hd = r.shape
+    pad = (-S) % chunk
+    if pad:
+        zeros = lambda x: jnp.concatenate(
+            [x, jnp.zeros((B, pad, H, hd), x.dtype)], axis=1)
+        # pad with zero k/v (no state contribution) and zero log-decay
+        r, k, v, log_decay = map(zeros, (r, k, v, log_decay))
+    o, s = wkv6_pallas(r, k, v, log_decay, u, s0, chunk=chunk,
+                       interpret=(impl == "interpret"))
+    return o[:, : S], s

@@ -1,0 +1,24 @@
+"""Sequential-recurrence oracle for WKV6 (token by token, exact)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, log_decay, u, s0):
+    """r/k/v/log_decay: (B, S, H, hd) f32; u: (H, hd); s0: (B, H, hd, hd).
+
+    o_t = r_t . (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(e^ld_t) S_{t-1} + k_t v_t^T
+    Returns (o (B, S, H, hd), s_final).
+    """
+    def step(s, args):
+        rt, kt, vt, lt = args  # (B, H, hd)
+        bonus = u[None] * kt  # (B, H, hd)
+        o = jnp.einsum("bhd,bhde->bhe", rt, s) + \
+            jnp.einsum("bhd,bhd,bhe->bhe", rt, bonus, vt)
+        s = s * jnp.exp(lt)[..., None] + jnp.einsum("bhd,bhe->bhde", kt, vt)
+        return s, o
+
+    xs = tuple(x.transpose(1, 0, 2, 3) for x in (r, k, v, log_decay))
+    s_fin, o = jax.lax.scan(step, s0, xs)
+    return o.transpose(1, 0, 2, 3), s_fin

@@ -1,0 +1,392 @@
+"""Loop-aware roofline analysis of compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE (verified
+empirically), which silently undercounts every scanned-layer model by its
+trip count. This parser walks the HLO computation graph, multiplies each
+computation's cost by the product of enclosing loop trip counts (taken from
+the ``known_trip_count`` backend_config XLA attaches to jax scans), and
+produces the three roofline terms:
+
+- FLOPs: exact for dot ops (contracting dims parsed), 1 flop/elem for other
+  scheduled elementwise/reduce work (secondary at LM scales)
+- HBM bytes: operand+result bytes of *scheduled* (thunk-level) ops — i.e.
+  fusion boundaries, which is what actually hits HBM
+- collective bytes: per device, with per-kind wire-byte conventions
+  (all-gather ~ result, all-reduce ~ 2x operand, reduce-scatter ~ operand,
+  all-to-all / permute ~ operand)
+
+Shapes in post-SPMD HLO are already per-device, so every total is
+per-device. Validated against cost_analysis on unrolled graphs in
+tests/test_hlo_analysis.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1,
+    "f8e5m2fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->\s*.+\s*\{\s*$")
+_LHS_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+
+
+def _parse_instr_line(line: str):
+    """name, shape, op, operand_str, rest — depth-aware (tuple shapes,
+    nested parens in operand lists)."""
+    m = _LHS_RE.match(line)
+    if not m:
+        return None
+    name, rhs = m.groups()
+    # shape: consume until a depth-0 space
+    depth = 0
+    i = 0
+    for i, ch in enumerate(rhs):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == " " and depth == 0:
+            break
+    else:
+        return None
+    shape, rem = rhs[:i], rhs[i + 1:]
+    p = rem.find("(")
+    if p < 0:
+        return None
+    op = rem[:p].strip()
+    if not re.fullmatch(r"[\w\-]+", op):
+        return None
+    depth = 0
+    for j in range(p, len(rem)):
+        if rem[j] in "([{":
+            depth += 1
+        elif rem[j] in ")]}":
+            depth -= 1
+            if depth == 0:
+                break
+    operands = rem[p + 1 : j]
+    rest = rem[j + 1 :]
+    return name, shape, op, operands, rest
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\[([\d,]+)\]<=\[\d+\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+SKIP_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "rng-bit-generator",
+}
+
+
+def _shape_info(shape_str: str) -> Tuple[int, int]:
+    """(total elements, total bytes) across a (possibly tuple) shape."""
+    elems = bytes_ = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype == "token" or dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        bytes_ += n * DTYPE_BYTES[dtype]
+    return elems, bytes_
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    operands: List[str]
+    rest: str
+    result_elems: int
+    result_bytes: int
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: List[Instr] = dataclasses.field(default_factory=list)
+
+
+def _split_operands(s: str) -> List[str]:
+    """Operand names from the parenthesized list (depth-aware)."""
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    names = []
+    for frag in out:
+        frag = frag.strip()
+        m = re.search(r"%([\w\.\-]+)\s*$", frag)
+        if m:
+            names.append(m.group(1))
+        elif frag.isdigit():  # parameter(N) index
+            names.append(frag)
+        else:
+            names.append("")
+    return names
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _HEADER_RE.match(line)
+            if m:
+                cur = Computation(m.group(2), bool(m.group(1)))
+            continue
+        if line.startswith("}") or line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        parsed = _parse_instr_line(line)
+        if not parsed:
+            continue
+        name, shape, op, operands, rest = parsed
+        elems, nbytes = _shape_info(shape)
+        cur.instrs.append(Instr(name, shape, op, _split_operands(operands),
+                                rest, elems, nbytes))
+    return comps
+
+
+def _root_op(comp: "Computation") -> str:
+    return comp.instrs[-1].op if comp.instrs else ""
+
+
+def _fusion_operand_bytes(ins: "Instr", sym: Dict[str, str],
+                          called: "Computation") -> float:
+    """Per-operand read traffic of a fusion: an operand whose only in-fusion
+    uses are dynamic-slice/gather is charged the sliced bytes, not the full
+    buffer (backward scans read one block's residual per iteration)."""
+    # parameter index -> instr name inside the called computation
+    pname_by_idx: Dict[int, str] = {}
+    for j in called.instrs:
+        if j.op == "parameter":
+            # a parameter's "operand" is its index text, e.g. parameter(0)
+            if j.operands and j.operands[0].isdigit():
+                pname_by_idx[int(j.operands[0])] = j.name
+
+    total = 0.0
+    for k, opname in enumerate(ins.operands):
+        if not opname:
+            continue
+        size = float(_shape_info(sym.get(opname, ""))[1])
+        pname = pname_by_idx.get(k)
+        if pname is not None:
+            uses = [j for j in called.instrs if pname in j.operands]
+            if uses and all(j.op in ("dynamic-slice", "gather", "slice")
+                            for j in uses):
+                sliced = sum(j.result_bytes for j in uses)
+                size = min(size, float(sliced))
+        total += size
+    return total
+
+
+def _instr_bytes(ins: "Instr", sym: Dict[str, str],
+                 comps: Dict[str, "Computation"]) -> float:
+    """HBM traffic of one thunk-level instruction.
+
+    In-place ops (dynamic-update-slice and fusions rooted in one) must not
+    count the aliased full buffer — only the written slice — otherwise a
+    scan that appends into a stacked residual buffer is charged the whole
+    buffer every iteration (observed 35x over-count before this model).
+    """
+    op_sizes = [float(_shape_info(sym.get(o, ""))[1]) for o in ins.operands if o]
+    total_ops = sum(op_sizes)
+    largest = max(op_sizes) if op_sizes else 0.0
+
+    root = ins.op
+    called = None
+    if ins.op == "fusion":
+        m = _CALLS_RE.search(ins.rest)
+        if m and m.group(1) in comps:
+            called = comps[m.group(1)]
+            root = _root_op(called)
+
+    if called is not None:
+        reads = _fusion_operand_bytes(ins, sym, called)
+        if root == "dynamic-update-slice":
+            # aliased buffer excluded from reads; write = the updated slice
+            reads = max(0.0, reads - largest)
+            upd = called.instrs[-1]
+            upd_bytes = 0.0
+            if len(upd.operands) > 1:
+                for j in called.instrs:
+                    if j.name == upd.operands[1]:
+                        upd_bytes = float(j.result_bytes)
+                        break
+            return reads + max(upd_bytes, reads * 0.0)
+        return reads + ins.result_bytes
+
+    if root == "dynamic-update-slice":
+        non_buf = total_ops - largest
+        return 2.0 * non_buf
+    if root in ("dynamic-slice", "slice"):
+        return (total_ops - largest) + 2.0 * ins.result_bytes
+    if root == "scatter":
+        non_buf = total_ops - largest
+        return 2.0 * non_buf + ins.result_bytes
+    if root == "gather":
+        return (total_ops - largest) + 2.0 * ins.result_bytes
+    return total_ops + ins.result_bytes
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_RE.search(rest)
+    if m:
+        dims = [int(x) for x in m.group(1).split(",")]
+        return dims[-1] if dims else 1
+    m = _GROUPS_EXPL_RE.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    return 2  # conservative
+
+
+def analyze(text: str) -> dict:
+    comps = parse_hlo(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    # name -> result shape string (global symbol table; dots need operands)
+    sym: Dict[str, str] = {}
+    for c in comps.values():
+        for ins in c.instrs:
+            sym[ins.name] = ins.shape
+
+    # multipliers: walk from entry; while bodies multiply by trip count
+    mult: Dict[str, float] = {entry.name: 1.0}
+    scheduled = {entry.name}  # thunk-level comps (bytes counted here)
+    stack = [entry.name]
+    while stack:
+        cname = stack.pop()
+        c = comps.get(cname)
+        if c is None:
+            continue
+        m = mult[cname]
+        for ins in c.instrs:
+            if ins.op == "while":
+                trip = 1
+                tm = _TRIP_RE.search(ins.rest)
+                if tm:
+                    trip = int(tm.group(1))
+                for rx, sched in ((_BODY_RE, True), (_COND_RE, True)):
+                    bm = rx.search(ins.rest)
+                    if bm and bm.group(1) in comps:
+                        child = bm.group(1)
+                        mult[child] = mult.get(child, 0.0) + m * trip
+                        if sched:
+                            scheduled.add(child)
+                        stack.append(child)
+            else:
+                for rx in (_CALLS_RE, _TO_APPLY_RE, _BODY_RE, _COND_RE):
+                    bm = rx.search(ins.rest)
+                    if bm and bm.group(1) in comps:
+                        child = bm.group(1)
+                        mult[child] = mult.get(child, 0.0) + m
+                        stack.append(child)
+
+    dot_flops = other_flops = hbm_bytes = 0.0
+    coll = {k: 0.0 for k in COLLECTIVES}
+    coll_wire = 0.0
+    per_op_flops: Dict[str, float] = {}
+
+    for cname, m in mult.items():
+        c = comps.get(cname)
+        if c is None:
+            continue
+        sched = cname in scheduled
+        for ins in c.instrs:
+            if ins.op in SKIP_OPS or ins.op == "while":
+                continue
+            # ---- FLOPs ----
+            if ins.op in ("dot", "convolution"):
+                k = 1
+                lm = _LHS_C_RE.search(ins.rest)
+                lhs_shape = sym.get(ins.operands[0], "") if ins.operands else ""
+                dims_m = _SHAPE_RE.search(lhs_shape)
+                if lm and dims_m and dims_m.group(2):
+                    lhs_dims = [int(x) for x in dims_m.group(2).split(",")]
+                    for ci in (int(x) for x in lm.group(1).split(",") if x):
+                        if ci < len(lhs_dims):
+                            k *= lhs_dims[ci]
+                f = 2.0 * ins.result_elems * k * m
+                dot_flops += f
+                per_op_flops["dot"] = per_op_flops.get("dot", 0.0) + f
+            else:
+                other_flops += float(ins.result_elems) * m
+            # ---- bytes at thunk level ----
+            if sched:
+                hbm_bytes += _instr_bytes(ins, sym, comps) * m
+            # ---- collectives ----
+            for kind in COLLECTIVES:
+                if ins.op == kind or ins.op.startswith(kind + "-"):
+                    op_bytes = sum(
+                        _shape_info(sym.get(o, ""))[1] for o in ins.operands if o
+                    )
+                    n = _group_size(ins.rest)
+                    if kind == "all-gather":
+                        wire = ins.result_bytes * (n - 1) / max(n, 1)
+                    elif kind == "all-reduce":
+                        wire = 2.0 * op_bytes * (n - 1) / max(n, 1)
+                    elif kind == "reduce-scatter":
+                        wire = op_bytes * (n - 1) / max(n, 1)
+                    else:  # all-to-all, permutes, broadcast
+                        wire = op_bytes
+                    coll[kind] += op_bytes * m
+                    coll_wire += wire * m
+                    break
+
+    return {
+        "dot_flops": dot_flops,
+        "other_flops": other_flops,
+        "flops": dot_flops + other_flops,
+        "hbm_bytes": hbm_bytes,
+        "collective_bytes": {k: v for k, v in coll.items() if v},
+        "collective_wire_bytes": coll_wire,
+        "n_computations": len(comps),
+    }
+
+
+def roofline_terms(analysis: dict, *, peak_flops=197e12, hbm_bw=819e9,
+                   ici_bw=50e9) -> dict:
+    """Three per-device roofline terms in seconds + the bottleneck."""
+    t_compute = analysis["dot_flops"] / peak_flops
+    t_memory = analysis["hbm_bytes"] / hbm_bw
+    t_coll = analysis["collective_wire_bytes"] / ici_bw
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k]).replace("_s", "")
+    terms["step_time_lower_bound_s"] = max(t_compute, t_memory, t_coll)
+    return terms

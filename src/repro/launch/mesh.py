@@ -1,0 +1,16 @@
+"""Production mesh entry point (see repro.distributed.mesh for the
+implementation — kept as functions so importing never touches device state).
+"""
+from repro.distributed.mesh import (  # noqa: F401
+    HBM_BW,
+    ICI_BW,
+    MULTI_POD,
+    PEAK_FLOPS_BF16,
+    SINGLE_POD,
+    dp_axes,
+    dp_size,
+    make_local_mesh,
+    make_mesh,
+    make_production_mesh,
+    tp_size,
+)

@@ -1,0 +1,151 @@
+"""Per-cell abstract inputs + shardings for the dry-run.
+
+``build_cell(arch, shape, mesh)`` returns everything needed to
+``jax.jit(fn, in_shardings=...).lower(*args).compile()`` a cell with zero
+device allocation: all args are ShapeDtypeStructs (the shannon/kernels
+pattern), shardings are NamedShardings from the model's spec trees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeSpec, cell_applicable, get_config
+from repro.distributed.sharding import Rules, named_tree
+from repro.models.transformer import build_model
+from repro.optim.adamw import AdamW, warmup_cosine
+from repro.serve.steps import make_decode_step, make_prefill_step
+from repro.train.steps import (batch_specs, init_train_state, make_train_step,
+                               train_state_specs)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    fn: Callable
+    args: tuple  # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    meta: dict
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _abstract(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def make_optimizer(cfg: ArchConfig) -> AdamW:
+    return AdamW(
+        schedule=warmup_cosine(3e-4, 2000, 200_000),
+        moment_dtype=jnp.dtype(cfg.opt_moment_dtype),
+    )
+
+
+def _seq_lens(cfg: ArchConfig, shape: ShapeSpec):
+    """(token_len, frontend_len): enc-dec cells split the budget 50/50 for
+    train/prefill; decode cells keep the full-length cross stream."""
+    if cfg.enc_dec:
+        if shape.kind == "decode":
+            return shape.seq_len, shape.seq_len
+        return shape.seq_len // 2, shape.seq_len // 2
+    return shape.seq_len, cfg.n_frontend_tokens
+
+
+def build_cell(arch: str, shape_name: str, mesh, cfg: Optional[ArchConfig] = None) -> Cell:
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"cell skipped: {why}")
+    rules = Rules(mesh, fsdp=cfg.fsdp)
+    B = shape.global_batch
+    tok_len, front_len = _seq_lens(cfg, shape)
+
+    if shape.kind == "train":
+        model = build_model(cfg, rules, compute_dtype=jnp.bfloat16,
+                            param_dtype=jnp.dtype(cfg.param_dtype))
+        opt = make_optimizer(cfg)
+        state_abs = jax.eval_shape(
+            lambda: init_train_state(model, opt, jax.random.PRNGKey(0)))
+        state_spec = train_state_specs(model, opt, rules)
+        bspecs = batch_specs(cfg, rules, B, tok_len)
+        batch = {"tokens": _sds((B, tok_len), jnp.int32),
+                 "labels": _sds((B, tok_len), jnp.int32)}
+        if cfg.cross_attn_every:
+            batch["context"] = _sds((B, front_len, cfg.d_model), jnp.bfloat16)
+        if cfg.enc_dec:
+            batch["frames"] = _sds((B, front_len, cfg.d_model), jnp.bfloat16)
+        # microbatch must stay >= |dp| or the batch silently replicates
+        accum = max(1, min(cfg.grad_accum, B // max(rules.dp, 1)))
+        fn = make_train_step(model, cfg, opt, rules, grad_accum=accum)
+        return Cell(
+            arch, shape, fn,
+            args=(state_abs, batch),
+            in_shardings=(named_tree(rules, state_spec),
+                          named_tree(rules, bspecs)),
+            out_shardings=(named_tree(rules, state_spec), None),
+            meta={"tok_len": tok_len, "kind": "train", "grad_accum": accum},
+        )
+
+    model = build_model(cfg, rules, compute_dtype=jnp.bfloat16,
+                        param_dtype=jnp.bfloat16)  # serving fleet: bf16 weights
+    params_abs = model.abstract_params()
+    pspec = named_tree(rules, model.spec())
+
+    if shape.kind == "prefill":
+        bspecs = batch_specs(cfg, rules, B, tok_len)
+        batch = {"tokens": _sds((B, tok_len), jnp.int32)}
+        if cfg.cross_attn_every:
+            batch["context"] = _sds((B, front_len, cfg.d_model), jnp.bfloat16)
+        if cfg.enc_dec:
+            batch["frames"] = _sds((B, front_len, cfg.d_model), jnp.bfloat16)
+        bspecs = {k: bspecs.get(k, rules.spec(("dp", B), None, None))
+                  for k in batch}
+        cache_spec = named_tree(rules, model.cache_pspec(B, tok_len))
+        fn = make_prefill_step(model, cfg, rules)
+        return Cell(
+            arch, shape, fn,
+            args=(params_abs, batch),
+            in_shardings=(pspec, named_tree(rules, bspecs)),
+            out_shardings=(cache_spec, None),
+            meta={"tok_len": tok_len, "kind": "prefill"},
+        )
+
+    # decode: one new token against a seq_len cache
+    cache_abs = jax.eval_shape(lambda: model.init_cache(B, shape.seq_len))
+    cache_spec = named_tree(rules, model.cache_pspec(B, shape.seq_len))
+    token = _sds((B, 1), jnp.int32)
+    pos = _sds((), jnp.int32)
+    tok_spec = rules.named(rules.spec(("dp", B), None))
+    fn = make_decode_step(model, cfg, rules)
+    return Cell(
+        arch, shape, fn,
+        args=(params_abs, cache_abs, token, pos),
+        in_shardings=(pspec, cache_spec, tok_spec, rules.named(P())),
+        out_shardings=(cache_spec, None, None),
+        meta={"tok_len": shape.seq_len, "kind": "decode"},
+    )
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) for train;
+    2*N*D for prefill; 2*N_active per token for decode. Enc-dec cells split
+    the token budget 50/50 between the stacks, so the effective token count
+    halves (each token passes through ~half the parameters)."""
+    n_active = cfg.active_param_count()
+    tokens = shape.tokens * (0.5 if cfg.enc_dec else 1.0)
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # one token per sequence

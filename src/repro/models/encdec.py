@@ -1,0 +1,114 @@
+"""Encoder-decoder LM (seamless-m4t family).
+
+The speech frontend is a STUB per the brief: the encoder consumes
+precomputed audio-frame embeddings (``extras["frames"]``, (B, enc_len, d)).
+The decoder is a standard causal stack with a cross-attention sublayer over
+the encoder output. AccMPEG applicability: the frame-embedding stream is the
+lossily-encoded sensor input (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import Rules
+from repro.models import layers as L
+from repro.models.transformer import Stack
+
+
+class EncDecLM:
+    def __init__(self, cfg: ArchConfig, rules: Rules,
+                 compute_dtype=jnp.bfloat16, param_dtype=jnp.float32):
+        self.cfg = cfg
+        self.rules = rules
+        self.compute_dtype = compute_dtype
+        self.param_dtype = param_dtype
+        self.encoder = Stack(cfg, rules, compute_dtype, param_dtype,
+                             causal=False, name="encoder")
+        self.decoder = Stack(cfg, rules, compute_dtype, param_dtype,
+                             causal=True, with_cross=True, name="decoder")
+        self.embed = L.Embedding(cfg.padded_vocab, cfg.d_model, dtype=param_dtype)
+        self.enc_norm = L.Norm(cfg.d_model, cfg.norm)
+        self.final_norm = L.Norm(cfg.d_model, cfg.norm)
+
+    def init(self, key):
+        ke, kenc, kdec, kn1, kn2, kh = jax.random.split(key, 6)
+        return {
+            "embed": self.embed.init(ke),
+            "encoder": self.encoder.init(kenc),
+            "decoder": self.decoder.init(kdec),
+            "enc_norm": self.enc_norm.init(kn1),
+            "final_norm": self.final_norm.init(kn2),
+            "lm_head": L.Linear(self.cfg.d_model, self.cfg.padded_vocab,
+                                shard_in="fsdp", dtype=self.param_dtype).init(kh),
+        }
+
+    def spec(self):
+        return {
+            "embed": self.embed.spec(self.rules),
+            "encoder": self.encoder.spec(),
+            "decoder": self.decoder.spec(),
+            "enc_norm": self.enc_norm.spec(self.rules),
+            "final_norm": self.final_norm.spec(self.rules),
+            "lm_head": L.Linear(self.cfg.d_model, self.cfg.padded_vocab,
+                                shard_in="fsdp",
+                                dtype=self.param_dtype).spec(self.rules),
+        }
+
+    def abstract_params(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # ------------------------------------------------------------------
+    def encode(self, params, frames):
+        """frames: (B, enc_len, d) precomputed embeddings (frontend stub)."""
+        x = frames.astype(self.compute_dtype)
+        pos = sinus = L.sinusoidal_positions(jnp.arange(x.shape[1]),
+                                             self.cfg.d_model, x.dtype)
+        x = x + sinus[None]
+        x = self.rules.constrain(x, "dp", None, None)
+        x, aux, _ = self.encoder(params["encoder"], x, {})
+        return self.enc_norm(params["enc_norm"], x), aux
+
+    def hidden(self, params, tokens, extras=None, collect_kv=False):
+        """tokens: (B, S_dec); extras["frames"]: (B, enc_len, d)."""
+        extras = dict(extras or {})
+        enc_out, aux_e = self.encode(params, extras["frames"])
+        x = self.embed(params["embed"], tokens, self.compute_dtype)
+        x = x + L.sinusoidal_positions(jnp.arange(x.shape[1]),
+                                       self.cfg.d_model, x.dtype)[None]
+        x = self.rules.constrain(x, "dp", None, None)
+        x, aux_d, kvs = self.decoder(params["decoder"], x,
+                                     {"context": enc_out}, collect_kv=collect_kv)
+        x = self.final_norm(params["final_norm"], x)
+        return x, aux_e + aux_d, kvs
+
+    def unembed_weight(self, params):
+        return params["lm_head"]["w"]
+
+    def logits(self, params, h):
+        return h @ self.unembed_weight(params).astype(h.dtype)
+
+    # ---- serving -------------------------------------------------------
+    def prefill(self, params, tokens, extras=None, max_seq=None):
+        h, _aux, kvs = self.hidden(params, tokens, extras, collect_kv=True)
+        if max_seq is not None:
+            kvs = self.decoder.pad_cache(kvs, tokens.shape[1], max_seq)
+        return kvs, self.logits(params, h[:, -1:, :])
+
+    def init_cache(self, batch, seq):
+        # cross-attention context length == encoder length == seq (decode
+        # cells size the encoder stream to the cell's seq_len; DESIGN.md §3)
+        return self.decoder.init_cache(batch, seq, ctx_len=seq)
+
+    def cache_pspec(self, batch, seq):
+        return self.decoder.cache_pspec(batch, seq, ctx_len=seq)
+
+    def decode(self, params, cache, token, pos, extras=None):
+        x = self.embed(params["embed"], token, self.compute_dtype)
+        posv = jnp.asarray(pos)[None]
+        x = x + L.sinusoidal_positions(posv, self.cfg.d_model, x.dtype)[None]
+        x, new_cache = self.decoder.decode_step(params["decoder"], x, cache,
+                                                pos, {})
+        x = self.final_norm(params["final_norm"], x)
+        return new_cache, self.logits(params, x)

@@ -1,0 +1,489 @@
+"""Core neural layers with logical-axis sharding annotations.
+
+Every module exposes ``init(key) -> params`` and ``spec(rules) -> P-tree``
+with identical structure (params can therefore be built abstractly with
+``jax.eval_shape`` for the dry-run — no device allocation).
+
+Attention partitioning policy (DESIGN.md §4)
+-------------------------------------------
+GSPMD rejects uneven sharding of explicit dims, so the policy adapts:
+
+- ``head``  : n_q and n_kv both divide tp  -> Megatron head-TP for Q and KV
+- ``qhead`` : only n_q divides tp          -> head-TP for Q, replicated KV
+              expanded to q-heads locally (GQA expansion is a local slice of
+              a replicated tensor, verified to stay collective-free)
+- ``seq``   : neither divides (yi-34b 56H, smollm 15H) -> sequence/context
+              parallel activations; params stay sharded on flat fused dims
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import Rules
+from repro.utils import fold_in_str
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def normal_init(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear / Embedding / Norms
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Linear:
+    d_in: int
+    d_out: int
+    bias: bool = False
+    shard_in: Optional[str] = None
+    shard_out: Optional[str] = "tp"
+    dtype: jnp.dtype = jnp.float32
+    scale: float = -1.0  # -1 -> 1/sqrt(d_in)
+
+    def init(self, key):
+        scale = self.scale if self.scale >= 0 else 1.0 / math.sqrt(self.d_in)
+        p = {"w": normal_init(key, (self.d_in, self.d_out), scale, self.dtype)}
+        if self.bias:
+            p["b"] = jnp.zeros((self.d_out,), self.dtype)
+        return p
+
+    def spec(self, rules: Rules):
+        s = {"w": rules.spec((self.shard_in, self.d_in), (self.shard_out, self.d_out))}
+        if self.bias:
+            s["b"] = rules.spec((self.shard_out, self.d_out))
+        return s
+
+    def __call__(self, p, x):
+        y = x @ p["w"].astype(x.dtype)
+        if self.bias:
+            y = y + p["b"].astype(x.dtype)
+        return y
+
+
+@dataclasses.dataclass(frozen=True)
+class Embedding:
+    vocab: int  # padded vocab
+    d_model: int
+    dtype: jnp.dtype = jnp.float32
+
+    def init(self, key):
+        # GPT-2-style scale: keeps tied-unembedding logits O(1) at init
+        return {"emb": normal_init(key, (self.vocab, self.d_model), 0.02,
+                                   self.dtype)}
+
+    def spec(self, rules: Rules):
+        return {"emb": rules.spec(("tp", self.vocab), ("fsdp", self.d_model))}
+
+    def __call__(self, p, tokens, compute_dtype):
+        # gather from the vocab-sharded table; GSPMD turns this into a
+        # sharded one-hot matmul / collective gather
+        return jnp.take(p["emb"].astype(compute_dtype), tokens, axis=0)
+
+    def attend(self, p, x):
+        """Tied unembedding: (B,S,d) @ (d,V) -> logits."""
+        return x @ p["emb"].astype(x.dtype).T
+
+
+@dataclasses.dataclass(frozen=True)
+class Norm:
+    d: int
+    kind: str = "rmsnorm"  # rmsnorm | layernorm
+    eps: float = 1e-5
+
+    def init(self, key):
+        p = {"scale": jnp.ones((self.d,), jnp.float32)}
+        if self.kind == "layernorm":
+            p["bias"] = jnp.zeros((self.d,), jnp.float32)
+        return p
+
+    def spec(self, rules: Rules):
+        s = {"scale": P(None)}
+        if self.kind == "layernorm":
+            s["bias"] = P(None)
+        return s
+
+    def __call__(self, p, x):
+        dt = x.dtype
+        x = x.astype(jnp.float32)
+        if self.kind == "layernorm":
+            x = x - jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        x = x * jax.lax.rsqrt(var + self.eps) * p["scale"]
+        if self.kind == "layernorm":
+            x = x + p["bias"]
+        return x.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Positional encodings
+# ---------------------------------------------------------------------------
+
+
+def rotary_embedding(positions, head_dim: int, theta: float, dtype):
+    """positions: (...,) int -> cos/sin of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(angles).astype(dtype), jnp.sin(angles).astype(dtype)
+
+
+def apply_rotary(x, cos, sin):
+    """x: (B, S, H, hd); cos/sin: (B, S, hd//2) or (S, hd//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, half)
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:  # (B, S, half)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def sinusoidal_positions(positions, d_model: int, dtype):
+    half = d_model // 2
+    freqs = 1.0 / (10_000.0 ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache quantization (int8 per-vector absmax — vLLM-style fp8/int8 cache)
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv(x):
+    """(..., hd) bf16/f32 -> {"q": int8, "s": f32 (..., 1)} — halves the
+    decode cells' dominant HBM term (§Perf, kvint8 variant)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(scale, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return {"q": q.astype(jnp.int8), "s": scale.astype(jnp.float32)}
+
+
+def cache_read(c, dtype=jnp.bfloat16):
+    if isinstance(c, dict):
+        return (c["q"].astype(jnp.float32) * c["s"]).astype(dtype)
+    return c
+
+
+def cache_write(c, new, pos):
+    """dynamic_update_slice of one token at ``pos`` along axis 1."""
+    def dus(buf, upd):
+        idx = (0, pos) + (0,) * (buf.ndim - 2)
+        return jax.lax.dynamic_update_slice(buf, upd.astype(buf.dtype), idx)
+
+    if isinstance(c, dict):
+        qn = quantize_kv(new)
+        return {"q": dus(c["q"], qn["q"]), "s": dus(c["s"], qn["s"])}
+    return dus(c, new)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Attention:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0  # 0 -> no rotary
+    causal: bool = True
+    cross: bool = False  # cross-attention (kv from a context stream)
+    dtype: jnp.dtype = jnp.float32
+    q_chunk: int = 512
+
+    @property
+    def group(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    def _proj(self, d_out, shard_out="tp"):
+        return Linear(
+            self.d_model, d_out, bias=self.qkv_bias,
+            shard_in="fsdp" if shard_out == "tp" else "tp",
+            shard_out=shard_out, dtype=self.dtype,
+        )
+
+    def init(self, key):
+        kq, kk, kv, ko = jax.random.split(key, 4)
+        h, kvh, hd = self.n_heads, self.n_kv_heads, self.head_dim
+        return {
+            "wq": self._proj(h * hd).init(kq),
+            "wk": self._proj(kvh * hd).init(kk),
+            "wv": self._proj(kvh * hd).init(kv),
+            "wo": Linear(h * hd, self.d_model, shard_in="tp", shard_out="fsdp",
+                         dtype=self.dtype).init(ko),
+        }
+
+    def spec(self, rules: Rules):
+        h, kvh, hd = self.n_heads, self.n_kv_heads, self.head_dim
+        return {
+            "wq": self._proj(h * hd).spec(rules),
+            "wk": self._proj(kvh * hd).spec(rules),
+            "wv": self._proj(kvh * hd).spec(rules),
+            "wo": Linear(h * hd, self.d_model, shard_in="tp", shard_out="fsdp",
+                         dtype=self.dtype).spec(rules),
+        }
+
+    # ---- partitioning policy ----------------------------------------------
+    def policy(self, rules: Rules) -> str:
+        if rules.tp == 1:
+            return "head"
+        if rules.divides_tp(self.n_heads) and rules.divides_tp(self.n_kv_heads):
+            return "head"
+        if rules.divides_tp(self.n_heads):
+            return "qhead"
+        return "seq"
+
+    # ---- full-sequence forward (train / prefill) ---------------------------
+    def __call__(self, p, x, rules: Rules, *, positions=None, context=None,
+                 return_kv: bool = False):
+        """x: (B, S, d). context: (B, Sk, d) for cross-attention.
+
+        Returns (out, (k, v)) — k/v in unexpanded (B, Sk, n_kv, hd) layout for
+        the decode cache when ``return_kv``.
+        """
+        B, S, _ = x.shape
+        h, kvh, hd = self.n_heads, self.n_kv_heads, self.head_dim
+        pol = self.policy(rules)
+        src = context if self.cross else x
+        Sk = src.shape[1]
+
+        q = Linear(self.d_model, h * hd, bias=self.qkv_bias, dtype=self.dtype)(p["wq"], x)
+        k = Linear(self.d_model, kvh * hd, bias=self.qkv_bias, dtype=self.dtype)(p["wk"], src)
+        v = Linear(self.d_model, kvh * hd, bias=self.qkv_bias, dtype=self.dtype)(p["wv"], src)
+        q = q.reshape(B, S, h, hd)
+        k = k.reshape(B, Sk, kvh, hd)
+        v = v.reshape(B, Sk, kvh, hd)
+
+        if self.rope_theta > 0 and not self.cross:
+            if positions is None:
+                positions = jnp.arange(S)
+            cos, sin = rotary_embedding(positions, hd, self.rope_theta, x.dtype)
+            q = apply_rotary(q, cos, sin)
+            k = apply_rotary(k, cos, sin)
+
+        kv_out = (k, v) if return_kv else None
+
+        causal = self.causal and not self.cross
+        if pol == "seq" and causal:
+            # context parallelism via shard_map (queries sequence-sharded,
+            # K/V all-gathered once) — see context_parallel_attention
+            q = rules.constrain(q, "dp", "tp", None, None)
+            if self.group > 1:
+                k = jnp.repeat(k, self.group, axis=2)
+                v = jnp.repeat(v, self.group, axis=2)
+            out = context_parallel_attention(q, k, v, rules, causal=True,
+                                             q_chunk=self.q_chunk)
+            out = rules.constrain(out, "dp", "tp", None, None)
+        else:
+            if pol == "head":
+                q = rules.constrain(q, "dp", None, "tp", None)
+                k = rules.constrain(k, "dp", None, "tp", None)
+                v = rules.constrain(v, "dp", None, "tp", None)
+            elif pol == "qhead":
+                # gather K/V over sequence *before* the GQA head expansion so
+                # the expanded copy is a local slice of a replicated tensor
+                # (avoids GSPMD's involuntary full rematerialization)
+                k = rules.constrain(k, "dp", None, None, None)
+                v = rules.constrain(v, "dp", None, None, None)
+
+            # GQA expansion to q heads (local when aligned with the sharding)
+            if self.group > 1:
+                k = jnp.repeat(k, self.group, axis=2)
+                v = jnp.repeat(v, self.group, axis=2)
+            if pol in ("head", "qhead"):
+                k = rules.constrain(k, "dp", None, "tp", None)
+                v = rules.constrain(v, "dp", None, "tp", None)
+                q = rules.constrain(q, "dp", None, "tp", None)
+
+            out = chunked_attention(q, k, v, causal=causal,
+                                    q_chunk=self.q_chunk)
+            out = rules.constrain(out, "dp", None, "tp", None)
+        out = out.reshape(B, S, h * hd)
+        out = Linear(h * hd, self.d_model, dtype=self.dtype)(p["wo"], out)
+        return out, kv_out
+
+    # ---- single-token decode ------------------------------------------------
+    def decode(self, p, x, cache_k, cache_v, pos, rules: Rules):
+        """x: (B, 1, d); cache_k/v: (B, S_max, n_kv, hd) arrays, or the
+        quantized {"q": int8, "s": f32} layout (kv_cache_dtype="int8").
+        pos tokens are valid for self-attention; the full length for
+        cross-attention. Returns (out, new_cache_k, new_cache_v)."""
+        B = x.shape[0]
+        h, kvh, hd = self.n_heads, self.n_kv_heads, self.head_dim
+        quantized = isinstance(cache_k, dict)
+        S = (cache_k["q"] if quantized else cache_k).shape[1]
+
+        q = Linear(self.d_model, h * hd, bias=self.qkv_bias, dtype=self.dtype)(p["wq"], x)
+        q = q.reshape(B, 1, kvh, self.group, hd)
+
+        if self.cross:
+            new_ck, new_cv = cache_k, cache_v
+        else:
+            kn = Linear(self.d_model, kvh * hd, bias=self.qkv_bias, dtype=self.dtype)(p["wk"], x)
+            vn = Linear(self.d_model, kvh * hd, bias=self.qkv_bias, dtype=self.dtype)(p["wv"], x)
+            kn = kn.reshape(B, 1, kvh, hd)
+            vn = vn.reshape(B, 1, kvh, hd)
+            if self.rope_theta > 0:
+                posv = jnp.full((B, 1), pos, dtype=jnp.int32)
+                cos, sin = rotary_embedding(posv, hd, self.rope_theta, x.dtype)
+                qf = q.reshape(B, 1, h, hd)
+                qf = apply_rotary(qf, cos, sin)
+                q = qf.reshape(B, 1, kvh, self.group, hd)
+                kn = apply_rotary(kn, cos, sin)
+            new_ck = cache_write(cache_k, kn, pos)
+            new_cv = cache_write(cache_v, vn, pos)
+
+        k = cache_read(new_ck, x.dtype)
+        v = cache_read(new_cv, x.dtype)
+        # grouped decode attention over the (possibly sequence-sharded) cache
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", q.astype(jnp.float32),
+                            k.astype(jnp.float32)) / math.sqrt(hd)
+        if not self.cross:
+            valid = jnp.arange(S)[None, None, None, None, :] <= pos
+            scores = jnp.where(valid, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v)
+        out = out.reshape(B, 1, h * hd)
+        out = Linear(h * hd, self.d_model, dtype=self.dtype)(p["wo"], out)
+        return out, new_ck, new_cv
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_chunk: int = 512,
+                      q_offset=0):
+    """Exact attention, scanned over query chunks (memory O(chunk x Sk)).
+
+    q: (B, S, H, hd); k/v: (B, Sk, H, hd) already head-expanded.
+    ``q_offset``: global position of q[0] (context-parallel shards pass
+    their sequence offset). Flash-style blocking adapted for TPU: each
+    chunk's score block is a dense (c, Sk) matmul (MXU) instead of online
+    row-softmax (VPU-hostile).
+    """
+    B, S, H, hd = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    c = min(q_chunk, S)
+    if S % c != 0:  # fall back to a single exact block
+        c = S
+    n_chunks = S // c
+
+    qc = q.reshape(B, n_chunks, c, H, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, args):
+        idx, qb = args  # qb: (B, c, H, hd)
+        s = jnp.einsum("bqhd,bshd->bhqs", qb.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        if causal:
+            qpos = q_offset + idx * c + jnp.arange(c)
+            mask = qpos[:, None] >= jnp.arange(Sk)[None, :]
+            s = jnp.where(mask[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        ob = jnp.einsum("bhqs,bshd->bqhd", p.astype(v.dtype), v)
+        return carry, ob
+
+    # flash-style backward: recompute each chunk's scores instead of saving
+    # (B, H, c, Sk) residuals for every chunk simultaneously
+    body = jax.checkpoint(body, prevent_cse=False)
+    _, out = jax.lax.scan(body, None, (jnp.arange(n_chunks), qc))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+
+def context_parallel_attention(q, k, v, rules, *, causal: bool,
+                               q_chunk: int = 512):
+    """Sequence/context-parallel attention via shard_map (§Perf hillclimb 1).
+
+    Used when head counts don't divide the model axis (yi-34b 56H, smollm
+    15H): queries stay sequence-sharded over "model", K/V are all-gathered
+    once per layer, and each shard computes its (S/tp, S) score slab with
+    the right causal offset. Replaces the GSPMD fallback that replicated
+    the whole attention computation on every device (observed 14x
+    MODEL/HLO_FLOPS inflation in the baseline roofline table).
+    """
+    from repro.models.moe import shard_map  # version-compat wrapper
+
+    B, S, H, hd = q.shape
+    mesh = rules.mesh
+    tp = rules.tp
+    dp_ok = rules.dp > 1 and B % rules.dp == 0
+    if tp == 1 or S % tp != 0 or not causal:
+        return chunked_attention(q, k, v, causal=causal, q_chunk=q_chunk)
+    bspec = rules.dp_axes if dp_ok else None
+    qkv_spec = jax.sharding.PartitionSpec(bspec, "model", None, None)
+    s_loc = S // tp
+
+    def local(qb, kb, vb):
+        kb = jax.lax.all_gather(kb, "model", axis=1, tiled=True)
+        vb = jax.lax.all_gather(vb, "model", axis=1, tiled=True)
+        off = jax.lax.axis_index("model") * s_loc
+        return chunked_attention(qb, kb, vb, causal=True,
+                                 q_chunk=min(q_chunk, s_loc), q_offset=off)
+
+    fn = shard_map(local, mesh, in_specs=(qkv_spec, qkv_spec, qkv_spec),
+                   out_specs=qkv_spec)
+    return fn(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MLP:
+    d_model: int
+    d_ff: int
+    act: str = "swiglu"  # swiglu | gelu
+    dtype: jnp.dtype = jnp.float32
+
+    def init(self, key):
+        kg, ku, kd = jax.random.split(key, 3)
+        p = {}
+        if self.act == "swiglu":
+            p["w_gate"] = Linear(self.d_model, self.d_ff, shard_in="fsdp",
+                                 dtype=self.dtype).init(kg)
+        p["w_up"] = Linear(self.d_model, self.d_ff, shard_in="fsdp",
+                           dtype=self.dtype).init(ku)
+        p["w_down"] = Linear(self.d_ff, self.d_model, shard_in="tp",
+                             shard_out="fsdp", dtype=self.dtype).init(kd)
+        return p
+
+    def spec(self, rules: Rules):
+        s = {}
+        if self.act == "swiglu":
+            s["w_gate"] = Linear(self.d_model, self.d_ff, shard_in="fsdp",
+                                 dtype=self.dtype).spec(rules)
+        s["w_up"] = Linear(self.d_model, self.d_ff, shard_in="fsdp",
+                           dtype=self.dtype).spec(rules)
+        s["w_down"] = Linear(self.d_ff, self.d_model, shard_in="tp",
+                             shard_out="fsdp", dtype=self.dtype).spec(rules)
+        return s
+
+    def __call__(self, p, x, rules: Rules):
+        up = Linear(self.d_model, self.d_ff, dtype=self.dtype)(p["w_up"], x)
+        up = rules.constrain(up, "dp", None, ("tp", self.d_ff))
+        if self.act == "swiglu":
+            gate = Linear(self.d_model, self.d_ff, dtype=self.dtype)(p["w_gate"], x)
+            gate = rules.constrain(gate, "dp", None, ("tp", self.d_ff))
+            hidden = jax.nn.silu(gate) * up
+        else:
+            hidden = jax.nn.gelu(up)
+        out = Linear(self.d_ff, self.d_model, dtype=self.dtype)(p["w_down"], hidden)
+        return out

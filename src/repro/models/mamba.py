@@ -1,0 +1,173 @@
+"""Mamba-1 selective SSM (Jamba's sequence mixer).
+
+TPU adaptation (DESIGN.md §5): the CUDA selective-scan kernel becomes a
+two-level scan — an outer ``lax.scan`` over sequence chunks carrying the
+(B, d_inner, N) state, an inner ``associative_scan`` within each chunk
+(log-depth, parallel). The chunk size bounds the (B, c, d_inner, N)
+transient so it fits on-chip memory budgets; d_inner is tensor-parallel
+(the scan is embarrassingly parallel across channels).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import Rules
+from repro.models.layers import normal_init
+
+SSM_CHUNK = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba:
+    d_model: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0
+    dtype: jnp.dtype = jnp.float32
+
+    @property
+    def d_inner(self):
+        return self.expand * self.d_model
+
+    @property
+    def dtr(self):
+        return self.dt_rank or -(-self.d_model // 16)
+
+    def init(self, key):
+        d, din, n, dtr = self.d_model, self.d_inner, self.d_state, self.dtr
+        ks = jax.random.split(key, 6)
+        dt_init = jnp.exp(
+            jax.random.uniform(ks[4], (din,)) * (np.log(0.1) - np.log(1e-3))
+            + np.log(1e-3)
+        )
+        dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inverse softplus
+        return {
+            "in_proj": normal_init(ks[0], (d, 2 * din), 1 / np.sqrt(d), self.dtype),
+            "conv_w": normal_init(ks[1], (self.d_conv, din), 1 / np.sqrt(self.d_conv), jnp.float32),
+            "conv_b": jnp.zeros((din,), jnp.float32),
+            "x_proj": normal_init(ks[2], (din, dtr + 2 * n), 1 / np.sqrt(din), self.dtype),
+            "dt_proj": normal_init(ks[3], (dtr, din), 1 / np.sqrt(dtr), jnp.float32),
+            "dt_bias": dt_bias.astype(jnp.float32),
+            "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (din, n))),
+            "D": jnp.ones((din,), jnp.float32),
+            "out_proj": normal_init(ks[5], (din, d), 1 / np.sqrt(din), self.dtype),
+        }
+
+    def spec(self, rules: Rules):
+        d, din, n, dtr = self.d_model, self.d_inner, self.d_state, self.dtr
+        return {
+            "in_proj": rules.spec(("fsdp", d), ("tp", 2 * din)),
+            "conv_w": rules.spec(None, ("tp", din)),
+            "conv_b": rules.spec(("tp", din)),
+            "x_proj": rules.spec(("tp", din), None),
+            "dt_proj": rules.spec(None, ("tp", din)),
+            "dt_bias": rules.spec(("tp", din)),
+            "A_log": rules.spec(("tp", din), None),
+            "D": rules.spec(("tp", din)),
+            "out_proj": rules.spec(("tp", din), ("fsdp", d)),
+        }
+
+    # ------------------------------------------------------------------
+    def __call__(self, p, x, rules: Rules, state=None):
+        """x: (B, S, d). state: None | dict(conv (B, d_conv-1, din),
+        ssm (B, din, N)). Returns (out, new_state)."""
+        B, S, d = x.shape
+        din, n = self.d_inner, self.d_state
+
+        xz = x @ p["in_proj"].astype(x.dtype)
+        xin, z = jnp.split(xz, 2, axis=-1)
+        xin = rules.constrain(xin, "dp", None, ("tp", din))
+
+        # causal depthwise conv (k taps as shifted adds; k is tiny)
+        conv_in = xin
+        if state is not None:
+            conv_in = jnp.concatenate([state["conv"].astype(xin.dtype), xin], axis=1)
+        pads = self.d_conv - 1 if state is None else 0
+        padded = jnp.pad(conv_in, ((0, 0), (pads, 0), (0, 0)))
+        conv = sum(
+            padded[:, i : i + S, :] * p["conv_w"][i].astype(xin.dtype)
+            for i in range(self.d_conv)
+        ) + p["conv_b"].astype(xin.dtype)
+        xc = jax.nn.silu(conv)
+
+        proj = xc @ p["x_proj"].astype(xc.dtype)
+        dt, b_ssm, c_ssm = jnp.split(proj, [self.dtr, self.dtr + n], axis=-1)
+        delta = jax.nn.softplus(
+            dt.astype(jnp.float32) @ p["dt_proj"] + p["dt_bias"]
+        )  # (B, S, din)
+        A = -jnp.exp(p["A_log"])  # (din, N)
+
+        h0 = jnp.zeros((B, din, n), jnp.float32) if state is None else state["ssm"]
+        y, h_fin = selective_scan_chunked(
+            xc.astype(jnp.float32), delta, A,
+            b_ssm.astype(jnp.float32), c_ssm.astype(jnp.float32), h0,
+        )
+        y = y + xc.astype(jnp.float32) * p["D"]
+        y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+        out = y @ p["out_proj"].astype(x.dtype)
+
+        new_conv = conv_in[:, -(self.d_conv - 1):, :] if self.d_conv > 1 else None
+        if state is None and self.d_conv > 1:
+            tail = jnp.pad(xin, ((0, 0), (self.d_conv - 1, 0), (0, 0)))[:, -( self.d_conv - 1):, :]
+            new_conv = tail
+        return out, {"conv": new_conv.astype(jnp.float32), "ssm": h_fin}
+
+
+def selective_scan_chunked(x, delta, A, b, c, h0, chunk: int = SSM_CHUNK):
+    """Diagonal selective scan.
+
+    x, delta: (B, S, din); A: (din, N); b, c: (B, S, N); h0: (B, din, N).
+    Returns (y (B, S, din), h_final).
+
+    The (B, cs, din, N) decay/input products are formed *inside* the chunk
+    body from the streamed (B, cs, din)/(B, cs, N) slices, so the full
+    (B, S, din, N) tensors never hit HBM — a 2x(N=16)x f32 traffic saving
+    measured in EXPERIMENTS.md §Perf (jamba train memory term).
+    """
+    B, S, din = x.shape
+    n = A.shape[1]
+    cs = min(chunk, S)
+    while S % cs != 0:
+        cs -= 1
+    nc = S // cs
+
+    def chunked(t):
+        return t.reshape(B, nc, cs, *t.shape[2:]).transpose(1, 0, 2,
+                                                            *range(3, t.ndim + 1))
+
+    xc, dc, bc, cc = map(chunked, (x, delta, b, c))
+
+    def body(h, args):
+        x_b, d_b, b_b, c_b = args  # (B, cs, din), (B, cs, din), (B, cs, N) x2
+        a_b = jnp.exp(d_b[..., None] * A)                  # (B, cs, din, N)
+        dbx_b = (d_b * x_b)[..., None] * b_b[:, :, None, :]
+
+        # fold carried state into the first element (a concat-free variant
+        # using the scan's prefix products was tried and REFUTED: the extra
+        # (B,cs,din,N) cum_a materialization cost more than the pads saved —
+        # §Perf jamba iter 4, 233 s -> 279 s, reverted)
+        first = a_b[:, 0] * h + dbx_b[:, 0]
+        els_a = jnp.concatenate([jnp.ones_like(a_b[:, :1]), a_b[:, 1:]],
+                                axis=1)
+        els_b = jnp.concatenate([first[:, None], dbx_b[:, 1:]], axis=1)
+
+        def comb(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        _, hs = jax.lax.associative_scan(comb, (els_a, els_b), axis=1)
+        y_b = jnp.einsum("bsdn,bsn->bsd", hs, c_b)
+        return hs[:, -1], y_b
+
+    # recompute chunk intermediates in the backward pass
+    body = jax.checkpoint(body, prevent_cse=False)
+    h_fin, ys = jax.lax.scan(body, h0, (xc, dc, bc, cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, din)
+    return y, h_fin

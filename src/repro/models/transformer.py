@@ -1,0 +1,470 @@
+"""Unified LM stack builder for all assigned architectures.
+
+A model is ``n_blocks`` scanned repetitions of a *super-block* (tuple of
+(mixer, ffn) sublayers from the config's ``block_pattern``):
+
+- plain transformers: 1-sublayer block, scanned n_layers times
+- jamba: the published 8-sublayer Mamba/attention/MoE block, scanned 9x
+- vlm: 5-sublayer block (4 self-attn + 1 cross-attn), scanned 20x
+
+API (same for every arch, incl. the enc-dec wrapper in ``encdec.py``):
+    init(key) -> params            spec() -> PartitionSpec tree
+    hidden(params, tokens, extras) -> (h, aux)      # train/prefill trunk
+    logits(params, h) -> (B, S, V)                  # unembed (prefer loss.py)
+    prefill(params, tokens, extras) -> (cache, last_logits)
+    decode(params, cache, token, pos, extras) -> (new_cache, logits)
+    init_cache(batch, seq) / cache_pspec(batch, seq)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ATTN, MAMBA, MLP as MLP_KIND, MOE as MOE_KIND, NOFF, RWKV, XATTN, ArchConfig
+from repro.distributed.sharding import Rules, tree_prepend
+from repro.models import layers as L
+from repro.models.mamba import Mamba
+from repro.models.moe import MoE
+from repro.models.rwkv6 import RWKV6ChannelMix, RWKV6TimeMix
+from repro.utils import fold_in_str, split_like
+
+
+def _mixer_module(cfg: ArchConfig, kind: str, dtype):
+    if kind == ATTN:
+        return L.Attention(
+            d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.hd, qkv_bias=cfg.qkv_bias, rope_theta=cfg.rope_theta,
+            causal=True, dtype=dtype,
+        )
+    if kind == XATTN:
+        return L.Attention(
+            d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.hd, qkv_bias=cfg.qkv_bias, rope_theta=0.0,
+            causal=False, cross=True, dtype=dtype,
+        )
+    if kind == MAMBA:
+        return Mamba(
+            d_model=cfg.d_model, d_state=cfg.mamba_d_state, d_conv=cfg.mamba_d_conv,
+            expand=cfg.mamba_expand, dt_rank=cfg.mamba_dt_rank, dtype=dtype,
+        )
+    if kind == RWKV:
+        return RWKV6TimeMix(
+            d_model=cfg.d_model, head_size=cfg.rwkv_head_size,
+            decay_lora=cfg.rwkv_decay_lora, gate_lora=cfg.rwkv_gate_lora, dtype=dtype,
+        )
+    raise ValueError(kind)
+
+
+def _ffn_module(cfg: ArchConfig, mixer_kind: str, kind: str, dtype):
+    if kind == NOFF:
+        if mixer_kind == RWKV:
+            return RWKV6ChannelMix(cfg.d_model, cfg.d_ff, dtype=dtype)
+        return None
+    if kind == MOE_KIND:
+        return MoE(cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.top_k,
+                   cfg.capacity_factor, dtype=dtype)
+    return L.MLP(cfg.d_model, cfg.d_ff, act=cfg.act, dtype=dtype)
+
+
+@dataclasses.dataclass
+class Stack:
+    """A scanned stack of super-blocks (used for the LM trunk and for the
+    encoder / decoder of enc-dec models)."""
+
+    cfg: ArchConfig
+    rules: Rules
+    compute_dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    causal: bool = True
+    with_cross: bool = False  # append a cross-attn sublayer (enc-dec decoder)
+    name: str = "stack"
+
+    def __post_init__(self):
+        cfg = self.cfg
+        pattern = list(cfg.block_pattern)
+        if not self.causal:
+            pattern = [(m, f) for (m, f) in pattern]
+        self.pattern = pattern
+        self.subs = []
+        for mixer_kind, ffn_kind in pattern:
+            mixer = _mixer_module(cfg, mixer_kind, self.param_dtype)
+            if mixer_kind in (ATTN,) and not self.causal:
+                mixer = dataclasses.replace(mixer, causal=False)
+            ffn = _ffn_module(cfg, mixer_kind, ffn_kind, self.param_dtype)
+            cross = None
+            if self.with_cross:
+                cross = _mixer_module(cfg, XATTN, self.param_dtype)
+            self.subs.append((mixer_kind, mixer, ffn_kind, ffn, cross))
+        self.norm = lambda: L.Norm(cfg.d_model, cfg.norm)
+
+    # ---- params -----------------------------------------------------------
+    def _sub_init(self, key, i):
+        mixer_kind, mixer, ffn_kind, ffn, cross = self.subs[i]
+        ks = jax.random.split(key, 6)
+        p = {"norm1": self.norm().init(ks[0]), "mixer": mixer.init(ks[1])}
+        if cross is not None:
+            p["norm_x"] = self.norm().init(ks[2])
+            p["cross"] = cross.init(ks[3])
+        if ffn is not None:
+            p["norm2"] = self.norm().init(ks[4])
+            p["ffn"] = ffn.init(ks[5])
+        return p
+
+    def _block_init(self, key):
+        ks = jax.random.split(key, len(self.subs))
+        return {f"sub{i}": self._sub_init(ks[i], i) for i in range(len(self.subs))}
+
+    def init(self, key):
+        keys = jax.random.split(key, self.cfg.n_blocks)
+        return jax.vmap(self._block_init)(keys)
+
+    def spec(self):
+        rules = self.rules
+        out = {}
+        for i, (mixer_kind, mixer, ffn_kind, ffn, cross) in enumerate(self.subs):
+            s = {"norm1": self.norm().spec(rules), "mixer": mixer.spec(rules)}
+            if cross is not None:
+                s["norm_x"] = self.norm().spec(rules)
+                s["cross"] = cross.spec(rules)
+            if ffn is not None:
+                s["norm2"] = self.norm().spec(rules)
+                s["ffn"] = ffn.spec(rules)
+            out[f"sub{i}"] = s
+        return tree_prepend(out, None)  # leading n_blocks axis
+
+    # ---- full-sequence application -----------------------------------------
+    def _apply_sub(self, i, p, x, extras, collect_kv):
+        mixer_kind, mixer, ffn_kind, ffn, cross = self.subs[i]
+        rules = self.rules
+        kv = {}
+        h = L.Norm(self.cfg.d_model, self.cfg.norm)(p["norm1"], x)
+        if mixer_kind in (ATTN, XATTN):
+            ctx = extras.get("context") if mixer_kind == XATTN else None
+            o, kv_pair = mixer(p["mixer"], h, rules, context=ctx,
+                               return_kv=collect_kv)
+            if collect_kv:
+                # stored cache is sequence-sharded over the model axis
+                # (flash-decoding layout) — reshard at collection time
+                k_c = rules.constrain(kv_pair[0], "dp", "tp", None, None)
+                v_c = rules.constrain(kv_pair[1], "dp", "tp", None, None)
+                if self.cfg.kv_cache_dtype == "int8":
+                    k_c, v_c = L.quantize_kv(k_c), L.quantize_kv(v_c)
+                kv["mixer"] = {"k": k_c, "v": v_c}
+        else:
+            o, st = mixer(p["mixer"], h, rules)
+            if collect_kv:
+                kv["mixer"] = st
+        x = x + o
+        aux = jnp.zeros((), jnp.float32)
+        if cross is not None:
+            h = L.Norm(self.cfg.d_model, self.cfg.norm)(p["norm_x"], x)
+            o, kv_pair = cross(p["cross"], h, rules, context=extras["context"],
+                               return_kv=collect_kv)
+            if collect_kv:
+                kv["cross"] = {"k": kv_pair[0], "v": kv_pair[1]}
+            x = x + o
+        if ffn is not None:
+            h = L.Norm(self.cfg.d_model, self.cfg.norm)(p["norm2"], x)
+            if ffn_kind == MOE_KIND:
+                o, (aux_l, _drop) = ffn(p["ffn"], h, rules)
+                aux = aux + aux_l
+            elif isinstance(ffn, RWKV6ChannelMix):
+                o, st = ffn(p["ffn"], h, rules)
+                if collect_kv:
+                    kv["ffn"] = st
+            else:
+                o = ffn(p["ffn"], h, rules)
+            x = x + o
+        return x, aux, kv
+
+    def __call__(self, params, x, extras=None, collect_kv: bool = False):
+        """x: (B, S, d) -> (x, aux_loss, kv_caches or None)."""
+        extras = extras or {}
+        rules = self.rules
+
+        def block_body(carry, block_params):
+            x, aux = carry
+            # pin the remat-saved carry to its compute dtype — without the
+            # barrier XLA fuses the norm's f32 upcast into the residual save
+            # buffer, doubling saved-activation memory (observed on CPU XLA)
+            x = jax.lax.optimization_barrier(x)
+            if self.cfg.seq_shard_activations:
+                # Megatron-SP: the residual stream (and thus the remat-saved
+                # block input) is sequence-sharded over the model axis
+                x = rules.constrain(x, "dp", "tp", None)
+            else:
+                x = rules.constrain(x, "dp", None, None)
+            kvs = {}
+            for i in range(len(self.subs)):
+                x, a, kv = self._apply_sub(i, block_params[f"sub{i}"], x,
+                                           extras, collect_kv)
+                aux = aux + a
+                if collect_kv:
+                    kvs[f"sub{i}"] = kv
+            return (x, aux), kvs if collect_kv else None
+
+        body = block_body
+        if self.cfg.remat == "full":
+            body = jax.checkpoint(block_body, prevent_cse=False)
+        elif self.cfg.remat == "dots":
+            body = jax.checkpoint(
+                block_body, prevent_cse=False,
+                policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+            )
+        (x, aux), kvs = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params)
+        return x, aux, kvs
+
+    # ---- cache ---------------------------------------------------------------
+    def _kv_buf(self, batch, slen):
+        cfg = self.cfg
+        shp = (batch, slen, cfg.n_kv_heads, cfg.hd)
+        if cfg.kv_cache_dtype == "int8":
+            return {"q": jnp.zeros(shp, jnp.int8),
+                    "s": jnp.zeros(shp[:-1] + (1,), jnp.float32)}
+        return jnp.zeros(shp, self.compute_dtype)
+
+    def _sub_cache(self, i, batch, seq, ctx_len):
+        mixer_kind, mixer, ffn_kind, ffn, cross = self.subs[i]
+        cfg = self.cfg
+        c = {}
+        if mixer_kind == ATTN:
+            c["mixer"] = {"k": self._kv_buf(batch, seq),
+                          "v": self._kv_buf(batch, seq)}
+        elif mixer_kind == XATTN:
+            c["mixer"] = {"k": self._kv_buf(batch, ctx_len),
+                          "v": self._kv_buf(batch, ctx_len)}
+        elif mixer_kind == MAMBA:
+            m = mixer
+            c["mixer"] = {
+                "conv": jnp.zeros((batch, m.d_conv - 1, m.d_inner), jnp.float32),
+                "ssm": jnp.zeros((batch, m.d_inner, m.d_state), jnp.float32),
+            }
+        elif mixer_kind == RWKV:
+            H, hd = mixer.n_heads, mixer.head_size
+            c["mixer"] = {"shift": jnp.zeros((batch, cfg.d_model), jnp.float32),
+                          "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32)}
+        if cross is not None:
+            c["cross"] = {"k": self._kv_buf(batch, ctx_len),
+                          "v": self._kv_buf(batch, ctx_len)}
+        if isinstance(ffn, RWKV6ChannelMix):
+            c["ffn"] = {"shift": jnp.zeros((batch, cfg.d_model), jnp.float32)}
+        return c
+
+    def init_cache(self, batch, seq, ctx_len: int = 0):
+        def one_block():
+            return {f"sub{i}": self._sub_cache(i, batch, seq, ctx_len)
+                    for i in range(len(self.subs))}
+        blocks = one_block()
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (self.cfg.n_blocks,) + x.shape).copy(),
+            blocks)
+
+    def cache_pspec(self, batch, seq, ctx_len: int = 0):
+        """PartitionSpec tree matching init_cache. KV sequence is sharded over
+        the model axis (flash-decoding style partial-softmax combine); when
+        batch cannot shard dp (long-context batch=1), sequence spreads over
+        every mesh axis."""
+        r = self.rules
+        bdp = ("dp", batch) if batch % max(r.dp, 1) == 0 and r.dp > 1 else (None, batch)
+        seq_ax = ("tp", seq) if bdp[0] == "dp" else ("seq_all", seq)
+
+        def kv_spec(slen):
+            sax = seq_ax if slen == seq else ((seq_ax[0], slen))
+            one = r.spec(None, bdp, (sax[0], slen), None, None)
+            if self.cfg.kv_cache_dtype == "int8":
+                return {"k": {"q": one, "s": one}, "v": {"q": one, "s": one}}
+            return {"k": one, "v": one}
+
+        out = {}
+        for i, (mixer_kind, mixer, ffn_kind, ffn, cross) in enumerate(self.subs):
+            c = {}
+            if mixer_kind == ATTN:
+                c["mixer"] = kv_spec(seq)
+            elif mixer_kind == XATTN:
+                c["mixer"] = kv_spec(ctx_len)
+            elif mixer_kind == MAMBA:
+                c["mixer"] = {
+                    "conv": r.spec(None, bdp, None, ("tp", mixer.d_inner)),
+                    "ssm": r.spec(None, bdp, ("tp", mixer.d_inner), None),
+                }
+            elif mixer_kind == RWKV:
+                c["mixer"] = {
+                    "shift": r.spec(None, bdp, ("tp", self.cfg.d_model)),
+                    "wkv": r.spec(None, bdp, ("tp", mixer.n_heads), None, None),
+                }
+            if cross is not None:
+                c["cross"] = kv_spec(ctx_len)
+            if isinstance(ffn, RWKV6ChannelMix):
+                c["ffn"] = {"shift": r.spec(None, bdp, ("tp", self.cfg.d_model))}
+            out[f"sub{i}"] = c
+        return out
+
+    def pad_cache(self, kvs, prefill_len: int, max_seq: int):
+        """Pad self-attention K/V collected at prefill (length prefill_len)
+        out to max_seq so decode can keep writing. States / cross-attention
+        caches are length-free and pass through."""
+        if max_seq == prefill_len:
+            return kvs
+        pad = max_seq - prefill_len
+
+        out = {}
+        for i, (mixer_kind, mixer, ffn_kind, ffn, cross) in enumerate(self.subs):
+            sub = dict(kvs[f"sub{i}"])
+            if mixer_kind == ATTN:
+                sub["mixer"] = jax.tree_util.tree_map(
+                    lambda v: jnp.pad(
+                        v, ((0, 0), (0, 0), (0, pad)) + ((0, 0),) * (v.ndim - 3)),
+                    sub["mixer"])
+            out[f"sub{i}"] = sub
+        return out
+
+    # ---- single-token decode ---------------------------------------------------
+    def decode_step(self, params, x, cache, pos, extras=None):
+        """x: (B, 1, d) -> (x, new_cache)."""
+        extras = extras or {}
+        rules = self.rules
+
+        def block_body(x, scanned):
+            block_params, block_cache = scanned
+            new_cache = {}
+            for i, (mixer_kind, mixer, ffn_kind, ffn, cross) in enumerate(self.subs):
+                p = block_params[f"sub{i}"]
+                c = block_cache[f"sub{i}"]
+                nc = {}
+                h = L.Norm(self.cfg.d_model, self.cfg.norm)(p["norm1"], x)
+                if mixer_kind in (ATTN, XATTN):
+                    o, k, v = mixer.decode(p["mixer"], h, c["mixer"]["k"],
+                                           c["mixer"]["v"], pos, rules)
+                    nc["mixer"] = {"k": k, "v": v}
+                else:
+                    o, st = mixer(p["mixer"], h, rules, state=c["mixer"])
+                    nc["mixer"] = st
+                x = x + o
+                if cross is not None:
+                    h = L.Norm(self.cfg.d_model, self.cfg.norm)(p["norm_x"], x)
+                    o, k, v = cross.decode(p["cross"], h, c["cross"]["k"],
+                                           c["cross"]["v"], pos, rules)
+                    nc["cross"] = {"k": k, "v": v}
+                    x = x + o
+                if ffn is not None:
+                    h = L.Norm(self.cfg.d_model, self.cfg.norm)(p["norm2"], x)
+                    if ffn_kind == MOE_KIND:
+                        o, _ = ffn(p["ffn"], h, rules)
+                    elif isinstance(ffn, RWKV6ChannelMix):
+                        o, st = ffn(p["ffn"], h, rules, state=c["ffn"])
+                        nc["ffn"] = st
+                    else:
+                        o = ffn(p["ffn"], h, rules)
+                    x = x + o
+                new_cache[f"sub{i}"] = nc
+            return x, new_cache
+
+        x, new_cache = jax.lax.scan(block_body, x, (params, cache))
+        return x, new_cache
+
+
+class DecoderLM:
+    """Decoder-only LM (covers dense / moe / ssm / hybrid / vlm)."""
+
+    def __init__(self, cfg: ArchConfig, rules: Rules,
+                 compute_dtype=jnp.bfloat16, param_dtype=jnp.float32):
+        self.cfg = cfg
+        self.rules = rules
+        self.compute_dtype = compute_dtype
+        self.param_dtype = param_dtype
+        self.stack = Stack(cfg, rules, compute_dtype, param_dtype, causal=True)
+        self.embed = L.Embedding(cfg.padded_vocab, cfg.d_model, dtype=param_dtype)
+        self.final_norm = L.Norm(cfg.d_model, cfg.norm)
+
+    # ---- params ---------------------------------------------------------
+    def init(self, key):
+        ke, kb, kn, kh = jax.random.split(key, 4)
+        p = {
+            "embed": self.embed.init(ke),
+            "blocks": self.stack.init(kb),
+            "final_norm": self.final_norm.init(kn),
+        }
+        if not self.cfg.tie_embeddings:
+            p["lm_head"] = L.Linear(
+                self.cfg.d_model, self.cfg.padded_vocab, shard_in="fsdp",
+                dtype=self.param_dtype).init(kh)
+        return p
+
+    def spec(self):
+        s = {
+            "embed": self.embed.spec(self.rules),
+            "blocks": self.stack.spec(),
+            "final_norm": self.final_norm.spec(self.rules),
+        }
+        if not self.cfg.tie_embeddings:
+            s["lm_head"] = L.Linear(
+                self.cfg.d_model, self.cfg.padded_vocab, shard_in="fsdp",
+                dtype=self.param_dtype).spec(self.rules)
+        return s
+
+    def abstract_params(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # ---- forward ----------------------------------------------------------
+    def _extras(self, extras):
+        extras = dict(extras or {})
+        if self.cfg.cross_attn_every and "context" not in extras:
+            raise ValueError(f"{self.cfg.name} needs extras['context'] (frontend stub)")
+        return extras
+
+    def hidden(self, params, tokens, extras=None, collect_kv=False):
+        """tokens: (B, S) int32 -> (h (B,S,d), aux, kvs)."""
+        extras = self._extras(extras)
+        x = self.embed(params["embed"], tokens, self.compute_dtype)
+        x = self.rules.constrain(x, "dp", None, None)
+        x, aux, kvs = self.stack(params["blocks"], x, extras, collect_kv=collect_kv)
+        x = self.final_norm(params["final_norm"], x)
+        return x, aux, kvs
+
+    def unembed_weight(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"]["emb"].T
+        return params["lm_head"]["w"]
+
+    def logits(self, params, h):
+        return h @ self.unembed_weight(params).astype(h.dtype)
+
+    # ---- serving ----------------------------------------------------------
+    def prefill(self, params, tokens, extras=None, max_seq=None):
+        h, _aux, kvs = self.hidden(params, tokens, extras, collect_kv=True)
+        if max_seq is not None:
+            kvs = self.stack.pad_cache(kvs, tokens.shape[1], max_seq)
+        last = self.logits(params, h[:, -1:, :])
+        return kvs, last
+
+    def init_cache(self, batch, seq):
+        ctx = self.cfg.n_frontend_tokens
+        return self.stack.init_cache(batch, seq, ctx_len=ctx)
+
+    def cache_pspec(self, batch, seq):
+        ctx = self.cfg.n_frontend_tokens
+        return self.stack.cache_pspec(batch, seq, ctx_len=ctx)
+
+    def decode(self, params, cache, token, pos, extras=None):
+        """token: (B, 1) int32; pos: scalar int32. -> (new_cache, logits)."""
+        extras = dict(extras or {})
+        x = self.embed(params["embed"], token, self.compute_dtype)
+        x, new_cache = self.stack.decode_step(params["blocks"], x, cache, pos,
+                                              extras)
+        x = self.final_norm(params["final_norm"], x)
+        return new_cache, self.logits(params, x)
+
+
+def build_model(cfg: ArchConfig, rules: Rules, compute_dtype=jnp.bfloat16,
+                param_dtype=jnp.float32):
+    if cfg.enc_dec:
+        from repro.models.encdec import EncDecLM
+
+        return EncDecLM(cfg, rules, compute_dtype, param_dtype)
+    return DecoderLM(cfg, rules, compute_dtype, param_dtype)

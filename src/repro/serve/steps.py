@@ -1,0 +1,52 @@
+"""Serving steps: prefill and single-token decode (the dry-run's serve_step).
+
+``decode_step`` is what the decode_32k / long_500k cells lower: one new token
+against a seq_len KV cache. The KV cache is sequence-sharded over the model
+axis (batch over data), with GSPMD combining the partial softmax — the
+flash-decoding schedule expressed in pjit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import Rules
+
+
+def make_prefill_step(model, cfg: ArchConfig, rules: Rules):
+    def prefill(params, batch):
+        extras = {k: batch[k] for k in ("context", "frames") if k in batch}
+        cache, last_logits = model.prefill(params, batch["tokens"], extras)
+        return cache, last_logits
+
+    return prefill
+
+
+def make_decode_step(model, cfg: ArchConfig, rules: Rules):
+    def decode(params, cache, token, pos, extra_ctx=None):
+        extras = {"context": extra_ctx} if extra_ctx is not None else {}
+        new_cache, logits = model.decode(params, cache, token, pos, extras)
+        next_token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return new_cache, next_token, logits
+
+    return decode
+
+
+def greedy_generate(model, params, prompt, steps: int, cache=None):
+    """Reference autoregressive loop (examples / equivalence tests)."""
+    B, S = prompt.shape
+    if cache is None:
+        cache = model.init_cache(B, S + steps)
+    # prefill by stepping token-by-token (exactness oracle for tests)
+    tok = prompt[:, :1]
+    outs = []
+    for t in range(S + steps - 1):
+        cache, logits = model.decode(params, cache, tok, t)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(prompt.dtype)
+        if t + 1 < S:
+            tok = prompt[:, t + 1 : t + 2]
+        else:
+            tok = nxt
+            outs.append(nxt)
+    return jnp.concatenate(outs, axis=1) if outs else prompt[:, :0]

@@ -1,0 +1,52 @@
+"""Vocab-parallel chunked cross-entropy.
+
+The full (B, S, V) logits tensor is never materialized: a checkpointed scan
+over sequence chunks computes per-chunk logits against the vocab-sharded
+unembedding, reducing peak memory from O(S*V) to O(chunk*V / tp). This is a
+beyond-paper memory optimization recorded in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import Rules
+
+
+def chunked_softmax_xent(h, w_unembed, labels, rules: Rules, *,
+                         real_vocab: int, chunk: int = 256, mask=None):
+    """h: (B, S, d); w_unembed: (d, V_padded); labels: (B, S) int32.
+
+    Returns (mean_nll, n_tokens). Padded vocab rows are masked to -inf.
+    """
+    B, S, d = h.shape
+    V = w_unembed.shape[1]
+    c = min(chunk, S)
+    while S % c != 0:
+        c -= 1
+    n = S // c
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+
+    hc = h.reshape(B, n, c, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, c).transpose(1, 0, 2)
+    mc = mask.reshape(B, n, c).transpose(1, 0, 2)
+    vocab_mask = (jnp.arange(V) < real_vocab).astype(jnp.float32)
+    neg = jnp.asarray(-1e30, jnp.float32)
+
+    def body(carry, args):
+        hb, lb, mb = args
+        logits = hb @ w_unembed.astype(hb.dtype)  # (B, c, V)
+        logits = rules.constrain(logits, "dp", None, ("tp", V))
+        logits = logits.astype(jnp.float32) + (1.0 - vocab_mask) * neg
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(lb, V, dtype=jnp.float32)
+        gold = jnp.einsum("bcv,bcv->bc", logits, onehot)
+        nll = (lse - gold) * mb
+        return (carry[0] + nll.sum(), carry[1] + mb.sum()), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    (total, count), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc, mc))
+    return total / jnp.maximum(count, 1.0), count

@@ -1,0 +1,151 @@
+"""Train-step factory: grad accumulation, mixed precision, NaN guard,
+optional cross-pod gradient compression.
+
+Layout: master params fp32 (sharded per model.spec()); compute in bf16 via
+per-use casts inside the modules; grads fp32, reduced over the data axes by
+GSPMD's backward. When the mesh has a "pod" axis and compression is enabled,
+the whole step runs under ``shard_map`` manual over "pod" (GSPMD-auto inside
+over data/model) so the cross-pod gradient reduction is an explicit int8
+error-feedback collective (repro.distributed.compression).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import Rules, named_tree
+from repro.optim.adamw import AdamW, zero1_specs
+from repro.train.loss import chunked_softmax_xent
+from repro.utils import tree_map
+
+
+def make_loss_fn(model, cfg: ArchConfig, rules: Rules, xent_chunk: int = 256):
+    def loss_fn(params, batch):
+        extras = {}
+        if "context" in batch:
+            extras["context"] = batch["context"]
+        if "frames" in batch:
+            extras["frames"] = batch["frames"]
+        h, aux, _ = model.hidden(params, batch["tokens"], extras)
+        w = model.unembed_weight(params)
+        nll, count = chunked_softmax_xent(
+            h, w, batch["labels"], rules, real_vocab=cfg.vocab_size,
+            chunk=xent_chunk)
+        loss = nll + 0.01 * aux
+        return loss, {"nll": nll, "aux": aux, "tokens": count}
+
+    return loss_fn
+
+
+def init_train_state(model, optimizer: AdamW, key):
+    params = model.init(key)
+    opt = optimizer.init(params)
+    return {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}
+
+
+def train_state_specs(model, optimizer: AdamW, rules: Rules, zero1: bool = True):
+    pspec = model.spec()
+    ospec = optimizer.spec(pspec)
+    if zero1 and not optimizer.quantized_v:
+        shapes = model.abstract_params()
+        ospec = {"m": zero1_specs(pspec, shapes, rules),
+                 "v": zero1_specs(pspec, shapes, rules),
+                 "count": P()}
+    return {"params": pspec, "opt": ospec, "step": P()}
+
+
+def batch_specs(cfg: ArchConfig, rules: Rules, batch: int, seq: int):
+    """PartitionSpecs for a global batch dict."""
+    bdp = ("dp", batch)
+    specs = {"tokens": rules.spec(bdp, None), "labels": rules.spec(bdp, None)}
+    if cfg.cross_attn_every:
+        specs["context"] = rules.spec(bdp, None, None)
+    if cfg.enc_dec:
+        specs["frames"] = rules.spec(bdp, None, None)
+    return specs
+
+
+def make_train_step(model, cfg: ArchConfig, optimizer: AdamW, rules: Rules,
+                    grad_accum: int = 1, nan_guard: bool = True,
+                    compression=None):
+    """Returns step(state, batch) -> (state, metrics).
+
+    batch["tokens"]: (accum * micro_B, S) — reshaped internally when
+    grad_accum > 1 so the input spec stays a plain global batch.
+    """
+    loss_fn = make_loss_fn(model, cfg, rules)
+    vg = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if grad_accum <= 1:
+            (loss, metrics), grads = vg(params, batch)
+            return loss, metrics, grads
+
+        def reshape(x):
+            return x.reshape((grad_accum, x.shape[0] // grad_accum) + x.shape[1:])
+
+        micro = tree_map(reshape, batch)
+        gdt = jnp.dtype(cfg.grad_dtype)
+        zero_g = tree_map(lambda p: jnp.zeros(p.shape, gdt), params)
+
+        def body(carry, mb):
+            gsum, lsum = carry
+            (loss, metrics), grads = vg(params, mb)
+            gsum = tree_map(lambda a, b: a + b.astype(gdt), gsum, grads)
+            return (gsum, lsum + loss), metrics
+
+        (gsum, lsum), metrics = jax.lax.scan(body, (zero_g, jnp.zeros((), jnp.float32)), micro)
+        grads = tree_map(lambda g: g / grad_accum, gsum)
+        metrics = tree_map(lambda m: m.mean(axis=0), metrics)
+        return lsum / grad_accum, metrics, grads
+
+    def apply_update(state, loss, metrics, grads):
+        params, opt = state["params"], state["opt"]
+        new_params, new_opt, opt_metrics = optimizer.update(grads, opt, params)
+        if nan_guard:
+            ok = jnp.isfinite(loss) & jnp.isfinite(opt_metrics["grad_norm"])
+            new_params = tree_map(
+                lambda n, o: jnp.where(ok, n, o), new_params, params)
+            new_opt = tree_map(lambda n, o: jnp.where(ok, n, o), new_opt, opt)
+            metrics = dict(metrics, skipped=(~ok).astype(jnp.float32))
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_state, metrics
+
+    if compression is None:
+        def step(state, batch):
+            loss, metrics, grads = compute_grads(state["params"], batch)
+            return apply_update(state, loss, metrics, grads)
+
+        return step
+
+    # ---- multi-pod: manual 'pod' axis with compressed gradient reduction ---
+    from repro.distributed.compression import compressed_psum
+
+    def step(state, batch):
+        def pod_local(state, batch):
+            loss, metrics, grads = compute_grads(state["params"], batch)
+            grads = compressed_psum(grads, "pod", method=compression)
+            loss = jax.lax.pmean(loss, "pod")
+            metrics = tree_map(lambda m: jax.lax.pmean(m, "pod"), metrics)
+            return apply_update(state, loss, metrics, grads)
+
+        mesh = rules.mesh
+        manual = frozenset({"pod"})
+        auto = frozenset(mesh.axis_names) - manual
+        fn = jax.shard_map(
+            pod_local, mesh=mesh,
+            in_specs=(P(), P("pod")),  # state replicated, batch pod-split
+            out_specs=(P(), P()),
+            axis_names=manual, check_vma=False,
+        )
+        return fn(state, batch)
+
+    return step

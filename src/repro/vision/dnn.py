@@ -1,0 +1,322 @@
+"""Server-side final DNNs (the paper's black-box D): detector, segmenter,
+keypoint net — small convnets trainable on CPU, treated strictly as
+*differentiable black boxes* by the AccMPEG core.
+
+Accuracy is measured against the DNN's own output on the high-quality frame
+D(H) (paper §2 fn.3), so modest model quality does not bias the comparison.
+The differentiable accuracy proxy (Appendix B fn.15) is an output-
+consistency loss between D(X) and stop_grad(D(H)).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import fold_in_str
+
+STRIDE = 8  # output stride of every head
+
+
+# ---------------------------------------------------------------------------
+# minimal conv substrate (pure jax)
+# ---------------------------------------------------------------------------
+def conv_init(key, kh, kw, ci, co, scale=None):
+    scale = scale or 1.0 / np.sqrt(kh * kw * ci)
+    return {
+        "w": scale * jax.random.normal(key, (kh, kw, ci, co), jnp.float32),
+        "b": jnp.zeros((co,), jnp.float32),
+    }
+
+
+def conv(p, x, stride=1, groups=1):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+    return y + p["b"]
+
+
+def dw_sep_init(key, ci, co):
+    k1, k2 = jax.random.split(key)
+    return {"dw": conv_init(k1, 3, 3, 1, ci), "pw": conv_init(k2, 1, 1, ci, co)}
+
+
+def dw_sep(p, x, stride=1):
+    ci = x.shape[-1]
+    dw = {"w": jnp.tile(p["dw"]["w"], (1, 1, 1, 1)), "b": p["dw"]["b"]}
+    # depthwise: HWIO with I=1, groups=ci
+    y = jax.lax.conv_general_dilated(
+        x, jnp.transpose(p["dw"]["w"], (0, 1, 2, 3)).reshape(3, 3, 1, ci),
+        window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"), feature_group_count=ci)
+    y = jax.nn.relu(y + p["dw"]["b"])
+    return jax.nn.relu(conv(p["pw"], y))
+
+
+def backbone_init(key, width=32):
+    ks = jax.random.split(key, 5)
+    return {
+        "stem": conv_init(ks[0], 3, 3, 3, width // 2),
+        "b1": dw_sep_init(ks[1], width // 2, width),
+        "b2": dw_sep_init(ks[2], width, width * 2),
+        "b3": dw_sep_init(ks[3], width * 2, width * 3),
+        "b4": dw_sep_init(ks[4], width * 3, width * 3),
+    }
+
+
+def backbone(p, x):
+    """(B, H, W, 3) -> (B, H/8, W/8, 3*width)."""
+    x = jax.nn.relu(conv(p["stem"], x, stride=2))
+    x = dw_sep(p["b1"], x, stride=2)
+    x = dw_sep(p["b2"], x, stride=2)
+    x = dw_sep(p["b3"], x, stride=1)
+    x = dw_sep(p["b4"], x, stride=1)
+    return x
+
+
+def head_init(key, ci, cout):
+    k1, k2 = jax.random.split(key)
+    return {"c1": conv_init(k1, 3, 3, ci, 64), "c2": conv_init(k2, 1, 1, 64, cout)}
+
+
+def head(p, x):
+    return conv(p["c2"], jax.nn.relu(conv(p["c1"], x)))
+
+
+# ---------------------------------------------------------------------------
+# task nets
+# ---------------------------------------------------------------------------
+def init_net(task: str, key, width=32):
+    kb, kh = jax.random.split(key)
+    p = {"backbone": backbone_init(kb, width)}
+    ci = width * 3
+    if task == "detection":
+        k1, k2, k3 = jax.random.split(kh, 3)
+        p["heat"] = head_init(k1, ci, 1)
+        p["wh"] = head_init(k2, ci, 2)
+        p["off"] = head_init(k3, ci, 2)
+    elif task == "segmentation":
+        p["seg"] = head_init(kh, ci, 2)
+    elif task == "keypoint":
+        p["kp"] = head_init(kh, ci, 5)
+    else:
+        raise ValueError(task)
+    return p
+
+
+def apply_net(task: str, params, frames):
+    """frames (B, H, W, 3) -> dict of dense outputs at stride 8."""
+    f = backbone(params["backbone"], frames)
+    if task == "detection":
+        return {"heat": head(params["heat"], f), "wh": head(params["wh"], f),
+                "off": head(params["off"], f)}
+    if task == "segmentation":
+        return {"seg": head(params["seg"], f)}
+    return {"kp": head(params["kp"], f)}
+
+
+# ---------------------------------------------------------------------------
+# ground-truth target rendering (for training D itself on synthetic scenes)
+# ---------------------------------------------------------------------------
+def render_detection_targets(boxes_per_frame, H, W):
+    hs, ws = H // STRIDE, W // STRIDE
+    B = len(boxes_per_frame)
+    heat = np.zeros((B, hs, ws, 1), np.float32)
+    wh = np.zeros((B, hs, ws, 2), np.float32)
+    mask = np.zeros((B, hs, ws, 1), np.float32)
+    yy, xx = np.mgrid[0:hs, 0:ws]
+    for b, boxes in enumerate(boxes_per_frame):
+        for (x0, y0, x1, y1) in boxes:
+            cx, cy = (x0 + x1) / 2 / STRIDE, (y0 + y1) / 2 / STRIDE
+            w, h = (x1 - x0) / STRIDE, (y1 - y0) / STRIDE
+            if w < 0.5 or h < 0.5:
+                continue
+            sig = max(0.8, 0.15 * np.sqrt(w * h))
+            g = np.exp(-((xx - cx) ** 2 + (yy - cy) ** 2) / (2 * sig ** 2))
+            heat[b, :, :, 0] = np.maximum(heat[b, :, :, 0], g)
+            ci, cj = int(np.clip(cy, 0, hs - 1)), int(np.clip(cx, 0, ws - 1))
+            wh[b, ci, cj] = (w, h)
+            mask[b, ci, cj] = 1.0
+    return jnp.asarray(heat), jnp.asarray(wh), jnp.asarray(mask)
+
+
+def detection_train_loss(params, frames, targets):
+    out = apply_net("detection", params, frames)
+    heat_t, wh_t, mask = targets
+    p = jax.nn.sigmoid(out["heat"])
+    pos = (heat_t > 0.95).astype(jnp.float32)
+    # penalty-reduced focal loss (CenterNet)
+    lp = -pos * ((1 - p) ** 2) * jnp.log(p + 1e-6)
+    ln = -(1 - pos) * ((1 - heat_t) ** 4) * (p ** 2) * jnp.log(1 - p + 1e-6)
+    n_pos = jnp.maximum(pos.sum(), 1.0)
+    l_heat = (lp + ln).sum() / n_pos
+    l_wh = (jnp.abs(out["wh"] - wh_t) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return l_heat + 0.1 * l_wh
+
+
+def segmentation_train_loss(params, frames, seg_t):
+    out = apply_net("segmentation", params, frames)["seg"]
+    logp = jax.nn.log_softmax(out, axis=-1)
+    onehot = jax.nn.one_hot(seg_t, 2)
+    return -(onehot * logp).mean() * 2.0
+
+
+def keypoint_train_loss(params, frames, kp_heat_t):
+    out = apply_net("keypoint", params, frames)["kp"]
+    return jnp.mean((jax.nn.sigmoid(out) - kp_heat_t) ** 2) * 100.0
+
+
+def render_kp_targets(kps_per_frame, H, W, K=5):
+    hs, ws = H // STRIDE, W // STRIDE
+    B = len(kps_per_frame)
+    heat = np.zeros((B, hs, ws, K), np.float32)
+    yy, xx = np.mgrid[0:hs, 0:ws]
+    for b, persons in enumerate(kps_per_frame):
+        for kps in persons:
+            for k in range(min(K, len(kps))):
+                cx, cy = kps[k][0] / STRIDE, kps[k][1] / STRIDE
+                g = np.exp(-((xx - cx) ** 2 + (yy - cy) ** 2) / (2 * 1.5 ** 2))
+                heat[b, :, :, k] = np.maximum(heat[b, :, :, k], g)
+    return jnp.asarray(heat)
+
+
+# ---------------------------------------------------------------------------
+# decoding + accuracy metrics (host-side, vs D(H))
+# ---------------------------------------------------------------------------
+def decode_detections(out, thresh=0.3, topk=50):
+    """-> per-frame list of (x0, y0, x1, y1, score)."""
+    heat = jax.nn.sigmoid(out["heat"])
+    # 3x3 max-pool NMS
+    pooled = jax.lax.reduce_window(heat, -jnp.inf, jax.lax.max,
+                                   (1, 3, 3, 1), (1, 1, 1, 1), "SAME")
+    keep = jnp.where(heat >= pooled - 1e-6, heat, 0.0)
+    keep_np = np.asarray(keep[..., 0])
+    wh = np.asarray(out["wh"])
+    results = []
+    for b in range(keep_np.shape[0]):
+        ys, xs = np.where(keep_np[b] >= thresh)
+        scores = keep_np[b][ys, xs]
+        order = np.argsort(-scores)[:topk]
+        dets = []
+        for i in order:
+            y, x = ys[i], xs[i]
+            w, h = np.maximum(wh[b, y, x], 0.5)
+            cx, cy = (x + 0.5) * STRIDE, (y + 0.5) * STRIDE
+            dets.append((cx - w * STRIDE / 2, cy - h * STRIDE / 2,
+                         cx + w * STRIDE / 2, cy + h * STRIDE / 2,
+                         float(scores[i])))
+        results.append(dets)
+    return results
+
+
+def _iou(a, b):
+    ix0, iy0 = max(a[0], b[0]), max(a[1], b[1])
+    ix1, iy1 = min(a[2], b[2]), min(a[3], b[3])
+    iw, ih = max(0.0, ix1 - ix0), max(0.0, iy1 - iy0)
+    inter = iw * ih
+    ua = (a[2] - a[0]) * (a[3] - a[1]) + (b[2] - b[0]) * (b[3] - b[1]) - inter
+    return inter / ua if ua > 0 else 0.0
+
+
+def detection_f1(dets, refs, iou_thresh=0.5):
+    """Mean F1 across frames, greedy IoU matching vs D(H) detections."""
+    f1s = []
+    for d, r in zip(dets, refs):
+        if not r and not d:
+            f1s.append(1.0)
+            continue
+        matched = set()
+        tp = 0
+        for box in sorted(d, key=lambda x: -x[4]):
+            best, bi = 0.0, -1
+            for j, rb in enumerate(r):
+                if j in matched:
+                    continue
+                i = _iou(box, rb)
+                if i > best:
+                    best, bi = i, j
+            if best >= iou_thresh:
+                matched.add(bi)
+                tp += 1
+        prec = tp / max(len(d), 1)
+        rec = tp / max(len(r), 1)
+        f1s.append(2 * prec * rec / max(prec + rec, 1e-9))
+    return float(np.mean(f1s)) if f1s else 1.0
+
+
+def segmentation_iou(out, ref_out):
+    a = np.asarray(jnp.argmax(out["seg"], -1))
+    b = np.asarray(jnp.argmax(ref_out["seg"], -1))
+    ious = []
+    for cls in (0, 1):
+        inter = np.logical_and(a == cls, b == cls).sum()
+        union = np.logical_or(a == cls, b == cls).sum()
+        if union > 0:
+            ious.append(inter / union)
+    return float(np.mean(ious)) if ious else 1.0
+
+
+def keypoint_accuracy(out, ref_out, radius=2.0):
+    """Distance-based accuracy: fraction of keypoints within ``radius``
+    head-units of the reference prediction."""
+    def peaks(o):
+        h = np.asarray(jax.nn.sigmoid(o["kp"]))
+        B, hs, ws, K = h.shape
+        flat = h.reshape(B, hs * ws, K).argmax(axis=1)
+        return np.stack([flat // ws, flat % ws], axis=-1)  # (B, K, 2)
+
+    pa, pb = peaks(out), peaks(ref_out)
+    d = np.sqrt(((pa - pb) ** 2).sum(-1))
+    return float((d <= radius).mean())
+
+
+# ---------------------------------------------------------------------------
+# the black-box wrapper used by AccMPEG
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class FinalDNN:
+    task: str
+    params: dict
+    name: str = "final-dnn"
+
+    def __call__(self, frames):
+        return apply_net(self.task, self.params, frames)
+
+    @functools.cached_property
+    def _jit_apply(self):
+        return jax.jit(lambda f: apply_net(self.task, self.params, f))
+
+    def predict(self, frames):
+        return self._jit_apply(frames)
+
+    # differentiable proxy of Acc(D(X); D(H)) — fn.15 of the paper
+    def proxy_loss(self, frames, ref_out):
+        out = apply_net(self.task, self.params, frames)
+        if self.task == "detection":
+            ph = jax.nn.sigmoid(jax.lax.stop_gradient(ref_out["heat"]))
+            p = jax.nn.sigmoid(out["heat"])
+            l = jnp.mean((p - ph) ** 2) * 100.0
+            mask = (ph > 0.3).astype(jnp.float32)
+            l += (jnp.abs(out["wh"] - jax.lax.stop_gradient(ref_out["wh"]))
+                  * mask).sum() / jnp.maximum(mask.sum(), 1.0) * 0.1
+            return l
+        if self.task == "segmentation":
+            ref = jax.lax.stop_gradient(
+                jax.nn.softmax(ref_out["seg"], axis=-1))
+            logp = jax.nn.log_softmax(out["seg"], axis=-1)
+            return -(ref * logp).mean() * 10.0
+        ref = jax.lax.stop_gradient(jax.nn.sigmoid(ref_out["kp"]))
+        return jnp.mean((jax.nn.sigmoid(out["kp"]) - ref) ** 2) * 100.0
+
+    def accuracy(self, out, ref_out) -> float:
+        if self.task == "detection":
+            return detection_f1(decode_detections(out),
+                                decode_detections(ref_out))
+        if self.task == "segmentation":
+            return segmentation_iou(out, ref_out)
+        return keypoint_accuracy(out, ref_out)

@@ -1,0 +1,95 @@
+"""Train the final DNNs on synthetic scenes (cached to experiments/models).
+
+These stand in for the paper's pretrained torch models (offline container,
+DESIGN.md §5) — the AccMPEG core only ever sees them as black boxes.
+"""
+from __future__ import annotations
+
+import functools
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.video import make_dataset
+from repro.vision import dnn as V
+
+CACHE = Path(__file__).resolve().parents[3] / "experiments" / "models"
+
+
+def _flatten(params, prefix=""):
+    out = {}
+    for k, v in params.items():
+        key = f"{prefix}/{k}" if prefix else k
+        if isinstance(v, dict):
+            out.update(_flatten(v, key))
+        else:
+            out[key] = np.asarray(v)
+    return out
+
+
+def _unflatten(flat):
+    out = {}
+    for k, v in flat.items():
+        parts = k.split("/")
+        d = out
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = jnp.asarray(v)
+    return out
+
+
+def train_final_dnn(task: str, genre: str, steps: int = 400, seed: int = 0,
+                    H: int = 384, W: int = 640, width: int = 32,
+                    cache: bool = True, name: str | None = None) -> V.FinalDNN:
+    name = name or f"{task}_{genre}_w{width}_s{steps}"
+    path = CACHE / f"{name}.npz"
+    if cache and path.exists():
+        params = _unflatten(dict(np.load(path)))
+        return V.FinalDNN(task, params, name=name)
+
+    scenes = make_dataset(genre, n_scenes=6, frames_per_scene=8,
+                          seed=seed, H=H, W=W)
+    frames = np.concatenate([s.frames for s in scenes])  # (N, H, W, 3)
+    if task == "detection":
+        boxes = [b for s in scenes for b in s.boxes]
+        targets = V.render_detection_targets(boxes, H, W)
+        loss_fn = lambda p, f, i: V.detection_train_loss(
+            p, f, tuple(t[i] for t in targets))
+    elif task == "segmentation":
+        masks = np.concatenate([s.masks for s in scenes])
+        seg_t = jnp.asarray(masks[:, ::V.STRIDE, ::V.STRIDE].astype(np.int32))
+        loss_fn = lambda p, f, i: V.segmentation_train_loss(p, f, seg_t[i])
+    else:
+        kps = [k for s in scenes for k in s.keypoints]
+        kp_t = V.render_kp_targets(kps, H, W)
+        loss_fn = lambda p, f, i: V.keypoint_train_loss(p, f, kp_t[i])
+
+    params = V.init_net(task, jax.random.PRNGKey(seed), width)
+    frames_j = jnp.asarray(frames)
+    n = frames.shape[0]
+    bs = 4
+    opt_m = jax.tree_util.tree_map(jnp.zeros_like, params)
+    opt_v = jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step_fn(params, m, v, idx, t):
+        loss, g = jax.value_and_grad(
+            lambda p: loss_fn(p, frames_j[idx], idx))(params)
+        lr = 2e-3 * jnp.minimum(1.0, (t + 1) / 50.0)
+        m = jax.tree_util.tree_map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree_util.tree_map(lambda a, b: 0.99 * a + 0.01 * b * b, v, g)
+        params = jax.tree_util.tree_map(
+            lambda p, mm, vv: p - lr * mm / (jnp.sqrt(vv) + 1e-8), params, m, v)
+        return params, m, v, loss
+
+    rng = np.random.default_rng(seed)
+    loss = None
+    for t in range(steps):
+        idx = jnp.asarray(rng.integers(0, n, bs))
+        params, opt_m, opt_v, loss = step_fn(params, opt_m, opt_v, idx, t)
+    if cache:
+        CACHE.mkdir(parents=True, exist_ok=True)
+        np.savez(path, **_flatten(params))
+    return V.FinalDNN(task, params, name=name)

@@ -1,0 +1,107 @@
+"""Codec behaviour: QP semantics, RoI maps, I/P frames, the Appendix-C
+sublinearity property."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.codec.codec import (encode_chunk, encode_chunk_uniform,
+                               encode_frame)
+from repro.codec.dct import MB, blockify, dct2, idct2, qstep, unblockify
+
+
+def _frame(key, H=64, W=96):
+    return jax.random.uniform(key, (H, W, 3))
+
+
+def test_dct_roundtrip_identity():
+    x = _frame(jax.random.PRNGKey(0))
+    blocks = blockify(x)
+    rec = unblockify(idct2(dct2(blocks)), *x.shape[:2])
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(x), atol=1e-5)
+
+
+def test_blockify_roundtrip():
+    x = _frame(jax.random.PRNGKey(1), 48, 80)
+    np.testing.assert_allclose(
+        np.asarray(unblockify(blockify(x), 48, 80)), np.asarray(x))
+
+
+@given(st.integers(min_value=1, max_value=50))
+@settings(max_examples=20, deadline=None)
+def test_qstep_monotone(qp):
+    assert float(qstep(qp + 1)) > float(qstep(qp))
+
+
+def test_qp_monotone_size_and_distortion():
+    x = _frame(jax.random.PRNGKey(2))
+    sizes, dists = [], []
+    for qp in (20, 30, 40, 50):
+        qmap = jnp.full((4, 6), float(qp))
+        dec, bits = encode_frame(x, qmap)
+        sizes.append(float(bits.sum()))
+        dists.append(float(jnp.mean((dec - x) ** 2)))
+    assert sizes == sorted(sizes, reverse=True), sizes
+    assert dists == sorted(dists), dists
+
+
+def test_roi_map_is_honored():
+    x = _frame(jax.random.PRNGKey(3))
+    qmap = jnp.full((4, 6), 48.0).at[1, 2].set(20.0)
+    dec, bits = encode_frame(x, qmap)
+    err = jnp.mean((dec - x) ** 2, axis=-1)
+    per_block = err.reshape(4, MB, 6, MB).mean(axis=(1, 3))
+    assert float(per_block[1, 2]) < 0.25 * float(per_block.mean())
+    assert float(bits[1, 2]) > float(bits.mean())
+
+
+def test_low_qp_near_lossless():
+    x = _frame(jax.random.PRNGKey(4))
+    dec, _ = encode_frame(x, jnp.full((4, 6), 1.0))
+    assert float(jnp.abs(dec - x).max()) < 0.02
+
+
+def test_pframes_cheaper_for_static_content():
+    x = _frame(jax.random.PRNGKey(5))
+    frames = jnp.stack([x] * 5)
+    _, pbytes = encode_chunk_uniform(frames, 30)
+    assert float(pbytes[1:].mean()) < 0.2 * float(pbytes[0])
+
+
+def test_appendix_c_sublinear_size_growth():
+    """Compressed size grows sublinearly with high-quality area (§3.2 /
+    Appendix C): going 25% -> 100% hi-quality area must cost < 4x the
+    25% increment above the all-lo floor."""
+    x = _frame(jax.random.PRNGKey(6), 64, 64)
+    H, W = 4, 4
+
+    def size_with_area(n_hi):
+        mask = np.zeros(16, bool)
+        mask[:n_hi] = True
+        qmap = jnp.where(jnp.asarray(mask.reshape(H, W)), 30.0, 45.0)
+        _, bits = encode_frame(x, qmap)
+        return float(bits.sum())
+
+    s0, s4, s16 = size_with_area(0), size_with_area(4), size_with_area(16)
+    assert s16 - s0 < 4.0 * (s4 - s0) * 1.05  # sublinear (within 5%)
+    assert s4 > s0 and s16 > s4
+
+
+def test_chunk_qp_map_broadcast_and_per_frame():
+    frames = jax.random.uniform(jax.random.PRNGKey(7), (4, 32, 32, 3))
+    one = jnp.full((1, 2, 2), 35.0)
+    per = jnp.full((4, 2, 2), 35.0)
+    d1, b1 = encode_chunk(frames, one)
+    d2, b2 = encode_chunk(frames, per)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(b1), np.asarray(b2), rtol=1e-6)
+
+
+@given(st.floats(min_value=0.0, max_value=1.0), st.integers(10, 50))
+@settings(max_examples=10, deadline=None)
+def test_encode_frame_output_in_range(fill, qp):
+    x = jnp.full((32, 32, 3), fill)
+    dec, bits = encode_frame(x, jnp.full((2, 2), float(qp)))
+    assert float(dec.min()) >= 0.0 and float(dec.max()) <= 1.0
+    assert float(bits.min()) > 0.0

@@ -1,0 +1,136 @@
+"""Per-kernel shape/dtype sweeps, interpret-mode Pallas vs the pure-jnp
+oracle (assert_allclose per the brief)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.accgrad_reduce.ops import accgrad_reduce
+from repro.kernels.accgrad_reduce.ref import accgrad_reduce_ref
+from repro.kernels.decode_attn.ops import decode_attn
+from repro.kernels.decode_attn.ref import decode_attn_ref
+from repro.kernels.mbcodec.ops import encode_frame_fused, mbcodec
+from repro.kernels.mbcodec.ref import mbcodec_ref
+from repro.kernels.wkv6.ops import wkv6
+from repro.kernels.wkv6.ref import wkv6_ref
+from repro.codec.codec import encode_frame
+
+
+# ---------------------------------------------------------------------------
+# mbcodec
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [64, 128, 65, 200, 1])
+def test_mbcodec_matches_ref(n):
+    blocks = jax.random.uniform(jax.random.PRNGKey(n), (n, 16, 16))
+    qp = jax.random.uniform(jax.random.PRNGKey(n + 1), (n,), minval=10,
+                            maxval=50)
+    r_ref, b_ref = mbcodec_ref(blocks, qp)
+    r_pl, b_pl = mbcodec(blocks, qp, impl="interpret")
+    np.testing.assert_allclose(np.asarray(r_pl), np.asarray(r_ref),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(b_pl), np.asarray(b_ref),
+                               rtol=1e-4)
+
+
+@given(st.integers(5, 50), st.sampled_from([0.0, 0.5, 1.0]))
+@settings(max_examples=10, deadline=None)
+def test_mbcodec_property_qp_and_fill(qp, fill):
+    blocks = jnp.full((64, 16, 16), fill) + 0.1 * jax.random.normal(
+        jax.random.PRNGKey(qp), (64, 16, 16))
+    qpv = jnp.full((64,), float(qp))
+    r_ref, b_ref = mbcodec_ref(blocks, qpv)
+    r_pl, b_pl = mbcodec(blocks, qpv, impl="interpret")
+    np.testing.assert_allclose(np.asarray(r_pl), np.asarray(r_ref), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(b_pl), np.asarray(b_ref), rtol=1e-4)
+
+
+@pytest.mark.parametrize("hw", [(32, 48), (64, 96)])
+def test_frame_fused_matches_codec(hw):
+    H, W = hw
+    frame = jax.random.uniform(jax.random.PRNGKey(0), (H, W, 3))
+    qmap = jax.random.uniform(jax.random.PRNGKey(1), (H // 16, W // 16),
+                              minval=20, maxval=45)
+    d1, b1 = encode_frame(frame, qmap)
+    d2, b2 = encode_frame_fused(frame, qmap, impl="interpret")
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d1), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(b2), np.asarray(b1), rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# accgrad_reduce
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(32, 32, 1), (64, 96, 3), (16, 160, 3)])
+def test_accgrad_reduce_matches_ref(shape):
+    ks = jax.random.split(jax.random.PRNGKey(shape[0]), 3)
+    g, hq, lq = (jax.random.normal(k, shape) for k in ks)
+    a = accgrad_reduce_ref(g, hq, lq)
+    b = accgrad_reduce(g, hq, lq, impl="interpret")
+    np.testing.assert_allclose(np.asarray(b), np.asarray(a), rtol=2e-3,
+                               atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# wkv6
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dims", [(2, 64, 2, 16, 16), (1, 128, 4, 32, 64),
+                                  (2, 100, 2, 16, 32), (1, 32, 1, 8, 32)])
+def test_wkv6_kernel_matches_sequential(dims):
+    B, S, H, hd, c = dims
+    ks = jax.random.split(jax.random.PRNGKey(S), 6)
+    r, k, v = (jax.random.normal(kk, (B, S, H, hd)) * 0.5 for kk in ks[:3])
+    ld = -jnp.exp(jax.random.normal(ks[3], (B, S, H, hd)) * 0.5 - 1.0)
+    u = jax.random.normal(ks[4], (H, hd)) * 0.3
+    s0 = jax.random.normal(ks[5], (B, H, hd, hd)) * 0.2
+    o_ref, s_ref = wkv6_ref(r, k, v, ld, u, s0)
+    o_pl, s_pl = wkv6(r, k, v, ld, u, s0, impl="interpret", chunk=c)
+    np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_ref),
+                               atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s_pl), np.asarray(s_ref),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_wkv6_model_chunked_matches_sequential():
+    from repro.models.rwkv6 import wkv_chunked
+
+    B, S, H, hd = 2, 96, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(9), 6)
+    r, k, v = (jax.random.normal(kk, (B, S, H, hd)) * 0.5 for kk in ks[:3])
+    ld = -jnp.exp(jax.random.normal(ks[3], (B, S, H, hd)) * 0.5 - 1.0)
+    u = jax.random.normal(ks[4], (H, hd)) * 0.3
+    s0 = jnp.zeros((B, H, hd, hd))
+    o_ref, s_ref = wkv6_ref(r, k, v, ld, u, s0)
+    o_m, s_m = wkv_chunked(r, k, v, ld, u, s0, chunk=32)
+    np.testing.assert_allclose(np.asarray(o_m), np.asarray(o_ref),
+                               atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s_m), np.asarray(s_ref),
+                               atol=2e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# decode_attn
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dims", [(2, 256, 2, 4, 32, 255),
+                                  (1, 1024, 4, 8, 64, 700),
+                                  (2, 96, 1, 2, 16, 40)])
+def test_decode_attn_matches_ref(dims):
+    B, S, KV, G, hd, pos = dims
+    ks = jax.random.split(jax.random.PRNGKey(S), 3)
+    q = jax.random.normal(ks[0], (B, KV, G, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    a = decode_attn_ref(q, k, v, pos)
+    b = decode_attn(q, k, v, pos, impl="interpret", blk=64)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(a), atol=1e-5,
+                               rtol=1e-4)
+
+
+def test_decode_attn_bf16_inputs():
+    B, S, KV, G, hd = 1, 128, 2, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, KV, G, hd)).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, KV, hd)).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, KV, hd)).astype(jnp.bfloat16)
+    a = decode_attn_ref(q, k, v, 100)
+    b = decode_attn(q, k, v, 100, impl="interpret", blk=64)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(a), atol=5e-2)

@@ -1,0 +1,110 @@
+"""AccGrad invariants + quality-assignment properties (paper §3.2/§4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.accgrad import accgrad_embeddings, accgrad_frames, block_reduce
+from repro.core.quality import (QualityConfig, dilate, mask_stability,
+                                qp_map_from_scores, select_blocks)
+
+
+class LinearDNN:
+    """Analytically tractable final DNN: D(x) = <w, x>."""
+
+    task = "linear"
+
+    def __init__(self, w):
+        self.w = w
+
+    def predict(self, frames):
+        return {"y": jnp.einsum("bhwc,hwc->b", frames, self.w)}
+
+    def proxy_loss(self, frames, ref):
+        y = jnp.einsum("bhwc,hwc->b", frames, self.w)
+        return jnp.sum((y - jax.lax.stop_gradient(ref["y"])) ** 2)
+
+
+def test_accgrad_zero_where_equal():
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (32, 32, 3))
+    dnn = LinearDNN(w)
+    hq = jax.random.uniform(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    lq = hq.at[:, :16].set(hq[:, :16] + 0.1)  # only the top half differs
+    ag = accgrad_frames(dnn, hq, lq)
+    assert float(ag[:, 1:, :].max()) == 0.0  # bottom macroblock row: H == L
+    assert float(ag[:, 0, :].max()) == 1.0   # normalized to 1
+
+
+def test_accgrad_matches_analytic_linear_case():
+    """For D(x) = <w,x>, dLoss/dX_i = 2(y_L - y_H) w_i: AccGrad per block is
+    |2 dy| * sum_i |w_i||H_i - L_i| (per-pixel L1, summed per block)."""
+    w = jax.random.normal(jax.random.PRNGKey(2), (32, 32, 3))
+    dnn = LinearDNN(w)
+    hq = jax.random.uniform(jax.random.PRNGKey(3), (1, 32, 32, 3))
+    lq = jax.random.uniform(jax.random.PRNGKey(4), (1, 32, 32, 3))
+    dy = float(dnn.predict(lq)["y"][0] - dnn.predict(hq)["y"][0])
+    g = 2 * dy * w
+    per_pixel = jnp.abs(g).sum(-1) * jnp.abs(hq[0] - lq[0]).sum(-1)
+    expected = block_reduce(per_pixel)
+    expected = expected / expected.max()
+    got = accgrad_frames(dnn, hq, lq)[0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expected),
+                               rtol=1e-4)
+
+
+def test_accgrad_embeddings_grouping():
+    hq = jax.random.normal(jax.random.PRNGKey(5), (2, 16, 8))
+    lq = hq + 0.1 * jax.random.normal(jax.random.PRNGKey(6), (2, 16, 8))
+    loss = lambda e: jnp.sum(e ** 2)
+    s1 = accgrad_embeddings(loss, hq, lq)
+    s4 = accgrad_embeddings(loss, hq, lq, group=4)
+    assert s1.shape == (2, 16) and s4.shape == (2, 4)
+    assert float(s1.max()) == 1.0
+
+
+@given(st.floats(0.05, 0.95))
+@settings(max_examples=15, deadline=None)
+def test_alpha_monotone(alpha):
+    scores = jax.random.uniform(jax.random.PRNGKey(7), (12, 20))
+    lo = select_blocks(scores, alpha)
+    hi = select_blocks(scores, min(alpha + 0.2, 1.0))
+    assert bool(jnp.all(hi <= lo))  # higher alpha selects a subset
+
+
+@given(st.integers(0, 4))
+@settings(max_examples=10, deadline=None)
+def test_dilation_monotone_and_identity(gamma):
+    mask = jax.random.uniform(jax.random.PRNGKey(8), (12, 20)) > 0.9
+    d = dilate(mask, gamma)
+    assert bool(jnp.all(d >= mask))  # superset
+    if gamma == 0:
+        assert bool(jnp.all(d == mask))
+    d2 = dilate(mask, gamma + 1)
+    assert bool(jnp.all(d2 >= d))  # monotone in gamma
+
+
+def test_dilation_exact_square():
+    mask = jnp.zeros((9, 9), bool).at[4, 4].set(True)
+    d = dilate(mask, 2)
+    expected = np.zeros((9, 9), bool)
+    expected[2:7, 2:7] = True
+    np.testing.assert_array_equal(np.asarray(d), expected)
+
+
+def test_qp_map_levels():
+    scores = jnp.asarray([[0.9, 0.05], [0.1, 0.8]])
+    cfg = QualityConfig(alpha=0.5, gamma=0, qp_hi=30, qp_lo=42)
+    qmap, mask = qp_map_from_scores(scores, cfg)
+    np.testing.assert_array_equal(np.asarray(mask),
+                                  [[True, False], [False, True]])
+    assert set(np.unique(np.asarray(qmap))) == {30.0, 42.0}
+
+
+def test_mask_stability_metric():
+    m = jnp.zeros((5, 4, 4), bool).at[:, 0, 0].set(True)
+    s = mask_stability(m)
+    np.testing.assert_allclose(np.asarray(s), 1.0)
+    m2 = m.at[4].set(~m[4])
+    assert float(mask_stability(m2)[4]) == 0.0

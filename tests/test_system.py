@@ -1,0 +1,141 @@
+"""End-to-end behaviour of the paper's system on a small synthetic scene:
+the full camera->encode->stream->server pipeline, AccMPEG vs baselines,
+AccModel training, and the frame-sampling/stability claims.
+
+Uses a shared, cached final DNN (module-scoped fixture) so the suite stays
+CPU-friendly.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.baselines.baselines import (frame_diff_feature, run_dds, run_eaar,
+                                       run_reducto, run_uniform, run_vigil)
+from repro.core.accgrad import accgrad_frames
+from repro.core.accmodel import AccModel, accmodel_apply, accmodel_init
+from repro.core.pipeline import NetworkConfig, make_reference, run_accmpeg
+from repro.core.quality import QualityConfig, mask_stability, quality_mask
+from repro.core.training import train_accmodel, train_accmodel_e2e
+from repro.data.video import GENRES, make_scene
+from repro.vision.train import train_final_dnn
+
+H, W = 192, 320
+
+
+@pytest.fixture(scope="module")
+def dnn():
+    return train_final_dnn("detection", "dashcam", steps=300, H=H, W=W,
+                           cache=True, name="det_smoke2")
+
+
+@pytest.fixture(scope="module")
+def accmodel(dnn):
+    frames = np.concatenate([
+        make_scene("dashcam", seed=s, T=12, H=H, W=W).frames
+        for s in (5, 6, 7)])
+    rep = train_accmodel(dnn, frames, epochs=10, width=16, qp_lo=42)
+    assert rep.losses[-1] < rep.losses[0]  # learning happened
+    return rep.accmodel
+
+
+def test_scene_generator_contract():
+    for genre in GENRES:
+        s = make_scene(genre, seed=1, T=4, H=H, W=W)
+        assert s.frames.shape == (4, H, W, 3)
+        assert s.frames.min() >= 0 and s.frames.max() <= 1
+        assert len(s.boxes) == 4
+        if genre == "surf":
+            assert any(len(k) for k in s.keypoints)
+
+
+def test_accgrad_concentrates_on_objects(dnn):
+    """AccGrad must be higher on macroblocks containing objects than on
+    empty background (the paper's core premise)."""
+    scene = make_scene("dashcam", seed=11, T=2, H=H, W=W)
+    from repro.codec.codec import encode_chunk_uniform
+
+    frames = jnp.asarray(scene.frames[:1])
+    hq, _ = encode_chunk_uniform(frames, 30)
+    lq, _ = encode_chunk_uniform(frames, 42)
+    ag = np.asarray(accgrad_frames(dnn, hq, lq)[0])
+    obj = np.zeros_like(ag, bool)
+    for (x0, y0, x1, y1) in scene.boxes[0]:
+        obj[int(y0) // 16 : int(np.ceil(y1 / 16)),
+            int(x0) // 16 : int(np.ceil(x1 / 16))] = True
+    assert obj.any() and (~obj).any()
+    assert ag[obj].mean() > 2.0 * ag[~obj].mean()
+
+
+def test_accmpeg_beats_uniform_tradeoff(dnn, accmodel):
+    """Fig. 1/7 direction: at comparable accuracy AccMPEG's delay must be
+    lower than the uniform-QP baseline's."""
+    scene = make_scene("dashcam", seed=99, T=20, H=H, W=W)
+    refs = make_reference(scene.frames, dnn, qp_hi=30)
+    qcfg = QualityConfig(alpha=0.25, gamma=2, qp_hi=30, qp_lo=42)
+    acc = run_accmpeg(scene.frames, accmodel, dnn, qcfg, refs=refs)
+    # the uniform baseline that reaches (at least) the same accuracy
+    best_uniform = None
+    for qp in (30, 34, 38, 42):
+        r = run_uniform(scene.frames, dnn, qp, refs=refs)
+        if r.accuracy >= acc.accuracy - 1e-6:
+            best_uniform = r
+    assert best_uniform is not None
+    assert acc.mean_delay < best_uniform.mean_delay, (
+        acc.summary(), best_uniform.summary())
+
+
+def test_all_baselines_run(dnn, accmodel):
+    scene = make_scene("dashcam", seed=42, T=10, H=H, W=W)
+    refs = make_reference(scene.frames, dnn, qp_hi=30)
+    camera_det = train_final_dnn("detection", "dashcam", steps=60, H=H, W=W,
+                                 width=8, cache=True, name="vigil_cam")
+    runs = [
+        run_uniform(scene.frames, dnn, 38, refs=refs),
+        run_dds(scene.frames, dnn, refs=refs),
+        run_eaar(scene.frames, dnn, refs=refs),
+        run_reducto(scene.frames, dnn, refs=refs),
+        run_vigil(scene.frames, dnn, camera_det, refs=refs),
+    ]
+    for r in runs:
+        s = r.summary()
+        assert 0.0 <= s["accuracy"] <= 1.0, s
+        assert s["delay_s"] > 0 and s["bytes_per_chunk"] > 0, s
+    # DDS pays the extra server round trip
+    assert runs[1].summary()["extra_rtt_s"] > 0
+
+
+def test_dds_more_accurate_than_lowq(dnn):
+    scene = make_scene("dashcam", seed=43, T=10, H=H, W=W)
+    refs = make_reference(scene.frames, dnn, qp_hi=30)
+    lo = run_uniform(scene.frames, dnn, 42, refs=refs)
+    dds = run_dds(scene.frames, dnn, qp_hi=30, qp_lo=42, refs=refs)
+    assert dds.accuracy >= lo.accuracy
+
+
+def test_mask_temporal_stability(dnn, accmodel):
+    """Fig. 6: most macroblock decisions stay unchanged over a 10-frame
+    window (the basis for frame sampling)."""
+    scene = make_scene("dashcam", seed=7, T=10, H=H, W=W)
+    scores = accmodel.scores(jnp.asarray(scene.frames))
+    masks = quality_mask(scores, QualityConfig(alpha=0.3, gamma=1))
+    stab = np.asarray(mask_stability(masks))
+    assert stab[1:].mean() > 0.84  # the paper's 84% claim
+
+
+def test_decoupled_training_cheaper_per_epoch(dnn):
+    """Table 2 direction: decoupled epochs exclude the final DNN."""
+    scene = make_scene("dashcam", seed=3, T=8, H=H, W=W)
+    dec = train_accmodel(dnn, scene.frames, epochs=2, width=8)
+    e2e = train_accmodel_e2e(dnn, scene.frames, epochs=2, width=8)
+    assert dec.train_time_s < e2e.train_time_s, (
+        dec.train_time_s, e2e.train_time_s)
+
+
+def test_frame_diff_feature_shape():
+    chunk = jnp.asarray(make_scene("dashcam", seed=1, T=5, H=64, W=96).frames)
+    f = frame_diff_feature(chunk)
+    assert f.shape == (5,)
+    assert float(f[0]) == 1.0  # first frame always kept
