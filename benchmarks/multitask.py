@@ -8,9 +8,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import H, QP_HI, W, accmodel_for, emit, final_dnn, test_scene
-from repro.core.pipeline import make_reference, run_accmpeg
+from repro.core.pipeline import make_reference
 from repro.core.quality import QualityConfig
-from repro.baselines.baselines import run_uniform
+from repro.engine import AccMPEGPolicy, StreamingEngine, UniformPolicy
 
 
 def _task_tradeoff(task: str, genre: str, qp_lo: int, alpha=0.4, gamma=2,
@@ -27,11 +27,12 @@ def _task_tradeoff(task: str, genre: str, qp_lo: int, alpha=0.4, gamma=2,
     scene = test_scene(genre, seed=888)
     refs = make_reference(scene.frames, dnn, qp_hi=QP_HI)
     qc = QualityConfig(alpha=alpha, gamma=gamma, qp_hi=QP_HI, qp_lo=qp_lo)
-    r = run_accmpeg(scene.frames, rep.accmodel, dnn, qc, refs=refs)
+    engine = StreamingEngine(dnn)
+    r = engine.run(AccMPEGPolicy(rep.accmodel, qc), scene.frames, refs=refs)
     emit(f"fig7_{label}/accmpeg", r.mean_delay * 1e6,
          f"acc={r.accuracy:.4f};bytes={r.mean_bytes:.0f}")
     for qp in (QP_HI, (QP_HI + qp_lo) // 2, qp_lo):
-        u = run_uniform(scene.frames, dnn, qp, refs=refs)
+        u = engine.run(UniformPolicy(qp), scene.frames, refs=refs)
         emit(f"fig7_{label}/uniform_qp{qp}", u.mean_delay * 1e6,
              f"acc={u.accuracy:.4f};bytes={u.mean_bytes:.0f}")
 

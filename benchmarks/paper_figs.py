@@ -13,31 +13,31 @@ from benchmarks.common import (H, QP_HI, QP_LO, W, accmodel_for, emit,
 
 
 def fig7_tradeoff():
-    """Accuracy-delay frontier: AccMPEG (alpha sweep) vs every baseline."""
-    from repro.baselines.baselines import (run_dds, run_eaar, run_reducto,
-                                           run_uniform, run_vigil)
-    from repro.core.pipeline import run_accmpeg
+    """Accuracy-delay frontier: AccMPEG (alpha sweep) vs every baseline —
+    one StreamingEngine, six QPPolicies, identical accounting."""
     from repro.core.quality import QualityConfig
+    from repro.engine import (AccMPEGPolicy, DDSPolicy, EAARPolicy,
+                              ReductoPolicy, StreamingEngine, UniformPolicy,
+                              VigilPolicy)
 
     dnn = final_dnn()
     am = accmodel_for()
     scene = test_scene()
     refs = references()
-    rows = []
+    engine = StreamingEngine(dnn)
+    policies = []
     for alpha in (0.15, 0.3, 0.5):
         qcfg = QualityConfig(alpha=alpha, gamma=2, qp_hi=QP_HI, qp_lo=QP_LO)
-        r = run_accmpeg(scene.frames, am, dnn, qcfg, refs=refs)
-        rows.append((f"accmpeg_a{alpha}", r))
+        policies.append((f"accmpeg_a{alpha}", AccMPEGPolicy(am, qcfg)))
     for qp in (QP_HI, 32, 34, 38, QP_LO):
-        rows.append((f"awstream_qp{qp}",
-                     run_uniform(scene.frames, dnn, qp, refs=refs)))
-    rows.append(("dds", run_dds(scene.frames, dnn, qp_hi=QP_HI, qp_lo=QP_LO,
-                                refs=refs)))
-    rows.append(("eaar", run_eaar(scene.frames, dnn, qp_hi=QP_HI,
-                                  qp_lo=QP_LO, refs=refs)))
-    rows.append(("reducto", run_reducto(scene.frames, dnn, refs=refs)))
+        policies.append((f"awstream_qp{qp}", UniformPolicy(qp)))
+    policies.append(("dds", DDSPolicy(qp_hi=QP_HI, qp_lo=QP_LO)))
+    policies.append(("eaar", EAARPolicy(qp_hi=QP_HI, qp_lo=QP_LO)))
+    policies.append(("reducto", ReductoPolicy()))
     cam = final_dnn(width=8, steps=250, name="vigil_cam_bench")
-    rows.append(("vigil", run_vigil(scene.frames, dnn, cam, refs=refs)))
+    policies.append(("vigil", VigilPolicy(cam)))
+    rows = [(name, engine.run(p, scene.frames, refs=refs))
+            for name, p in policies]
 
     acc_rows = {n: r for n, r in rows}
     best_acc = max(r.accuracy for n, r in rows if n.startswith("accmpeg"))
@@ -71,21 +71,21 @@ def fig6_stability():
 
 
 def fig8_delay_breakdown():
-    from repro.baselines.baselines import run_dds, run_uniform
-    from repro.core.pipeline import run_accmpeg
     from repro.core.quality import QualityConfig
+    from repro.engine import (AccMPEGPolicy, DDSPolicy, StreamingEngine,
+                              UniformPolicy)
 
     dnn = final_dnn()
     am = accmodel_for()
     scene = test_scene()
     refs = references()
+    engine = StreamingEngine(dnn)
+    qcfg = QualityConfig(alpha=0.5, gamma=2, qp_hi=QP_HI, qp_lo=QP_LO)
     runs = {
-        "accmpeg": run_accmpeg(scene.frames, am, dnn,
-                               QualityConfig(alpha=0.5, gamma=2,
-                                             qp_hi=QP_HI, qp_lo=QP_LO),
-                               refs=refs),
-        "awstream": run_uniform(scene.frames, dnn, 32, refs=refs),
-        "dds": run_dds(scene.frames, dnn, refs=refs),
+        "accmpeg": engine.run(AccMPEGPolicy(am, qcfg), scene.frames,
+                              refs=refs),
+        "awstream": engine.run(UniformPolicy(32), scene.frames, refs=refs),
+        "dds": engine.run(DDSPolicy(), scene.frames, refs=refs),
     }
     for name, r in runs.items():
         s = r.summary()

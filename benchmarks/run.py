@@ -13,9 +13,11 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import kernel_bench, multitask, paper_figs, roofline
+    from benchmarks import (kernel_bench, multistream, multitask, paper_figs,
+                            roofline)
 
     benches = {
+        "multistream": multistream.run,
         "fig6": paper_figs.fig6_stability,
         "fig7": paper_figs.fig7_tradeoff,
         "fig7seg": multitask.fig7_segmentation,

@@ -15,11 +15,11 @@ import numpy as np
 
 
 def main():
-    from repro.baselines.baselines import run_uniform
-    from repro.core.pipeline import make_reference, run_accmpeg
+    from repro.core.pipeline import make_reference
     from repro.core.quality import QualityConfig
     from repro.core.training import train_accmodel
     from repro.data.video import make_scene
+    from repro.engine import AccMPEGPolicy, StreamingEngine, UniformPolicy
     from repro.vision.train import train_final_dnn
 
     H, W = 192, 320
@@ -39,9 +39,11 @@ def main():
     test = make_scene("dashcam", seed=123, T=20, H=H, W=W)
     refs = make_reference(test.frames, dnn, qp_hi=30)
     qcfg = QualityConfig(alpha=0.5, gamma=2, qp_hi=30, qp_lo=42)
-    acc = run_accmpeg(test.frames, rep.accmodel, dnn, qcfg, refs=refs)
-    uni_hi = run_uniform(test.frames, dnn, 30, refs=refs)
-    uni_mid = run_uniform(test.frames, dnn, 36, refs=refs)
+    engine = StreamingEngine(dnn)  # one loop, one accounting, any policy
+    acc = engine.run(AccMPEGPolicy(rep.accmodel, qcfg), test.frames,
+                     refs=refs)
+    uni_hi = engine.run(UniformPolicy(30), test.frames, refs=refs)
+    uni_mid = engine.run(UniformPolicy(36), test.frames, refs=refs)
 
     print(f"\n{'method':<14}{'accuracy':>9}{'bytes/chunk':>13}{'delay s':>9}")
     for r in (acc, uni_hi, uni_mid):

@@ -1,5 +1,5 @@
 """Baselines from the paper's five categories (§6.1), all through the same
-codec + network + accuracy pipeline as AccMPEG:
+StreamingEngine (codec + network + accuracy accounting) as AccMPEG:
 
 - AWStream (idealized): uniform QP per chunk; the benchmark sweeps QP and
   reports the profile (the paper grants AWStream a free profiling pass).
@@ -12,177 +12,57 @@ codec + network + accuracy pipeline as AccMPEG:
   dropped (server reuses the last result); sent frames are uniform QP.
 - Vigil: cheap camera-side detector; bounding-box regions high quality,
   background at QP 51.
+
+Each method is a QPPolicy in :mod:`repro.engine.policies`; the ``run_*``
+functions here are thin wrappers kept for existing callers.
 """
 from __future__ import annotations
 
-import time
-from typing import List, Optional
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.core.pipeline import NetworkConfig, RunResult
+from repro.engine import (DDSPolicy, EAARPolicy, ReductoPolicy,
+                          StreamingEngine, UniformPolicy, VigilPolicy,
+                          boxes_to_mask, frame_diff_feature)
 
-from repro.codec.codec import encode_chunk, encode_chunk_uniform, roi_qp_map
-from repro.codec.dct import MB
-from repro.core.pipeline import (ChunkResult, NetworkConfig, RunResult,
-                                 _jit_encode, chunk_accuracy, stream_delay)
-from repro.core.quality import dilate
-from repro.vision.dnn import decode_detections
+__all__ = ["boxes_to_mask", "frame_diff_feature", "run_dds", "run_eaar",
+           "run_reducto", "run_uniform", "run_vigil"]
 
 
-def _chunks(frames, chunk_size):
-    T = frames.shape[0]
-    for ci, s in enumerate(range(0, T - T % chunk_size, chunk_size)):
-        yield ci, jnp.asarray(frames[s : s + chunk_size])
-
-
-def boxes_to_mask(boxes, mb_h, mb_w, grow: int = 0):
-    m = np.zeros((mb_h, mb_w), bool)
-    for (x0, y0, x1, y1, *_) in boxes:
-        m[max(0, int(y0) // MB - grow): int(np.ceil(y1 / MB)) + grow,
-          max(0, int(x0) // MB - grow): int(np.ceil(x1 / MB)) + grow] = True
-    return jnp.asarray(m)
+def _run(policy, frames, final_dnn, net, chunk_size, refs) -> RunResult:
+    engine = StreamingEngine(final_dnn, net=net, chunk_size=chunk_size)
+    return engine.run(policy, frames, refs=refs)
 
 
 def run_uniform(frames, final_dnn, qp: int,
                 net: NetworkConfig = NetworkConfig(), chunk_size: int = 10,
                 method: Optional[str] = None, refs=None) -> RunResult:
     """AWStream-idealized building block: one uniform QP."""
-    results = []
-    for ci, chunk in _chunks(frames, chunk_size):
-        if ci == 0:  # steady-state timing: exclude jit compilation
-            jax.block_until_ready(encode_chunk_uniform(chunk, qp)[0])
-        t0 = time.perf_counter()
-        decoded, pbytes = encode_chunk_uniform(chunk, qp)
-        jax.block_until_ready(decoded)
-        enc = time.perf_counter() - t0
-        nbytes = float(pbytes.sum())
-        acc = chunk_accuracy(final_dnn, decoded,
-                             refs[ci] if refs is not None else chunk)
-        results.append(ChunkResult(acc, nbytes, enc, 0.0,
-                                   stream_delay(nbytes, net)))
-    return RunResult(method or f"uniform_qp{qp}", results)
+    return _run(UniformPolicy(qp, name=method), frames, final_dnn, net,
+                chunk_size, refs)
 
 
 def run_dds(frames, final_dnn, qp_hi=30, qp_lo=40, grow=1,
             net: NetworkConfig = NetworkConfig(), chunk_size: int = 10,
             refs=None) -> RunResult:
     """Server-driven two-pass (the final DNN itself produces the feedback)."""
-    results = []
-    for ci, chunk in _chunks(frames, chunk_size):
-        H, W = chunk.shape[1:3]
-        if ci == 0:  # steady-state timing
-            jax.block_until_ready(encode_chunk_uniform(chunk, qp_lo)[0])
-            jax.block_until_ready(_jit_encode()(
-                chunk, jnp.full((1, H // MB, W // MB), float(qp_lo)))[0])
-        # pass 1: low quality everywhere
-        t0 = time.perf_counter()
-        dec1, b1 = encode_chunk_uniform(chunk, qp_lo)
-        jax.block_until_ready(dec1)
-        enc1 = time.perf_counter() - t0
-        # server feedback from the low-quality pass
-        out1 = final_dnn.predict(dec1)
-        if final_dnn.task == "detection":
-            dets = decode_detections(out1, thresh=0.15)
-            mask = boxes_to_mask([d for f in dets for d in f],
-                                 H // MB, W // MB, grow)
-        else:  # segmentation/keypoint: active output regions
-            key = "seg" if final_dnn.task == "segmentation" else "kp"
-            act = np.asarray(jnp.abs(out1[key]).max(axis=(0, -1)))
-            act = act >= np.percentile(act, 75)
-            reps = (H // MB) // act.shape[0] + 1
-            mask = jnp.asarray(np.kron(act, np.ones((reps, reps)))[: H // MB, : W // MB] > 0)
-            mask = dilate(mask, grow)
-        # pass 2: re-encode the selected regions in high quality
-        qmap = jnp.where(mask, float(qp_hi), float(qp_lo))
-        t0 = time.perf_counter()
-        dec2, b2 = _jit_encode()(chunk, qmap[None])
-        jax.block_until_ready(dec2)
-        enc2 = time.perf_counter() - t0
-        nbytes = float(b1.sum() + b2.sum())
-        acc = chunk_accuracy(final_dnn, dec2,
-                             refs[ci] if refs is not None else chunk)
-        results.append(ChunkResult(
-            acc, nbytes, enc1 + enc2, 0.0,
-            stream_delay(float(b1.sum()), net) + stream_delay(float(b2.sum()), net),
-            extra_rtt_s=net.rtt_s))  # wait for server feedback
-    return RunResult("dds", results)
+    return _run(DDSPolicy(qp_hi=qp_hi, qp_lo=qp_lo, grow=grow), frames,
+                final_dnn, net, chunk_size, refs)
 
 
 def run_eaar(frames, final_dnn, qp_hi=30, qp_lo=40, grow=2,
              net: NetworkConfig = NetworkConfig(), chunk_size: int = 10,
              refs=None) -> RunResult:
     """Previous chunk's server detections drive the current RoI."""
-    results = []
-    prev_mask = None
-    for ci, chunk in _chunks(frames, chunk_size):
-        H, W = chunk.shape[1:3]
-        mask = prev_mask if prev_mask is not None \
-            else jnp.ones((H // MB, W // MB), bool)
-        qmap = jnp.where(mask, float(qp_hi), float(qp_lo))
-        if ci == 0:  # steady-state timing
-            jax.block_until_ready(_jit_encode()(chunk, qmap[None])[0])
-        t0 = time.perf_counter()
-        decoded, pbytes = _jit_encode()(chunk, qmap[None])
-        jax.block_until_ready(decoded)
-        enc = time.perf_counter() - t0
-        nbytes = float(pbytes.sum())
-        out = final_dnn.predict(decoded)
-        acc = chunk_accuracy(final_dnn, decoded,
-                             refs[ci] if refs is not None else chunk)
-        if final_dnn.task == "detection":
-            dets = decode_detections(out, thresh=0.2)
-            prev_mask = boxes_to_mask([d for f in dets for d in f],
-                                      H // MB, W // MB, grow)
-        else:
-            prev_mask = jnp.ones((H // MB, W // MB), bool)
-        results.append(ChunkResult(acc, nbytes, enc, 0.0,
-                                   stream_delay(nbytes, net)))
-    return RunResult("eaar", results)
-
-
-def frame_diff_feature(chunk) -> jnp.ndarray:
-    """Reducto's per-frame change feature (edge-weighted differencing —
-    the paper notes Harris features dominate its camera cost)."""
-    gray = chunk.mean(-1)
-    gx = jnp.abs(jnp.diff(gray, axis=2)).mean(axis=(1, 2))
-    d = jnp.abs(jnp.diff(gray, axis=0)).mean(axis=(1, 2))
-    return jnp.concatenate([jnp.ones((1,)), d * 10.0]) + 0 * gx
+    return _run(EAARPolicy(qp_hi=qp_hi, qp_lo=qp_lo, grow=grow), frames,
+                final_dnn, net, chunk_size, refs)
 
 
 def run_reducto(frames, final_dnn, qp=32, thresh=0.05,
                 net: NetworkConfig = NetworkConfig(), chunk_size: int = 10,
                 refs=None) -> RunResult:
-    results = []
-    feat_fn = jax.jit(frame_diff_feature)
-    for ci, chunk in _chunks(frames, chunk_size):
-        if ci == 0:
-            jax.block_until_ready(feat_fn(chunk))
-        t0 = time.perf_counter()
-        feat = feat_fn(chunk)
-        jax.block_until_ready(feat)
-        overhead = time.perf_counter() - t0
-        keep = np.asarray(feat) >= thresh
-        keep[0] = True
-        kept = chunk[jnp.asarray(np.where(keep)[0])]
-        t0 = time.perf_counter()
-        decoded_kept, pbytes = encode_chunk_uniform(kept, qp)
-        jax.block_until_ready(decoded_kept)
-        enc = time.perf_counter() - t0
-        # server reuses the last sent frame's decoded content for dropped ones
-        full = []
-        j = -1
-        for t in range(chunk.shape[0]):
-            if keep[t]:
-                j += 1
-            full.append(decoded_kept[j])
-        decoded = jnp.stack(full)
-        nbytes = float(pbytes.sum())
-        acc = chunk_accuracy(final_dnn, decoded,
-                             refs[ci] if refs is not None else chunk)
-        results.append(ChunkResult(acc, nbytes, enc, overhead,
-                                   stream_delay(nbytes, net)))
-    return RunResult("reducto", results)
+    return _run(ReductoPolicy(qp=qp, thresh=thresh), frames, final_dnn, net,
+                chunk_size, refs)
 
 
 def run_vigil(frames, final_dnn, camera_detector, qp_hi=30, qp_lo=51, grow=0,
@@ -190,28 +70,6 @@ def run_vigil(frames, final_dnn, camera_detector, qp_hi=30, qp_lo=51, grow=0,
               refs=None) -> RunResult:
     """Cheap camera detector -> crop regions hi, background effectively
     dropped (QP 51). camera_detector: FinalDNN-like cheap model."""
-    results = []
-    for ci, chunk in _chunks(frames, chunk_size):
-        H, W = chunk.shape[1:3]
-        if ci == 0:  # steady-state timing
-            jax.block_until_ready(camera_detector.predict(chunk)["heat"])
-            jax.block_until_ready(_jit_encode()(
-                chunk, jnp.full((1, H // MB, W // MB), float(qp_lo)))[0])
-        t0 = time.perf_counter()
-        out = camera_detector.predict(chunk)  # every frame (paper §6.3)
-        jax.block_until_ready(out["heat"])
-        overhead = time.perf_counter() - t0
-        dets = decode_detections(out, thresh=0.25)
-        mask = boxes_to_mask([d for f in dets for d in f], H // MB, W // MB,
-                             grow)
-        qmap = jnp.where(mask, float(qp_hi), float(qp_lo))
-        t0 = time.perf_counter()
-        decoded, pbytes = _jit_encode()(chunk, qmap[None])
-        jax.block_until_ready(decoded)
-        enc = time.perf_counter() - t0
-        nbytes = float(pbytes.sum())
-        acc = chunk_accuracy(final_dnn, decoded,
-                             refs[ci] if refs is not None else chunk)
-        results.append(ChunkResult(acc, nbytes, enc, overhead,
-                                   stream_delay(nbytes, net)))
-    return RunResult("vigil", results)
+    return _run(VigilPolicy(camera_detector, qp_hi=qp_hi, qp_lo=qp_lo,
+                            grow=grow), frames, final_dnn, net, chunk_size,
+                refs)

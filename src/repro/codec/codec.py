@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.codec.dct import MB, blockify, dct2, freq_weight, idct2, qstep
+from repro.codec.dct import (MB, blockify, dct2, freq_weight, idct2, qstep,
+                             unblockify)
 
 # entropy model constants (calibrated in tests/bench against the Appendix-C
 # sublinearity property)
@@ -61,8 +62,6 @@ def encode_frame(frame: jnp.ndarray, qp_map: jnp.ndarray,
     q, step = _quantize(coefs, qp_map.reshape(-1))
     deq = q * step
     rec = idct2(deq)
-    from repro.codec.dct import unblockify
-
     rec = unblockify(rec, H, W)
     if reference is not None:
         rec = rec + reference
@@ -105,3 +104,76 @@ def encode_chunk_uniform(frames: jnp.ndarray, qp: int):
 def roi_qp_map(mask: jnp.ndarray, qp_hi: float, qp_lo: float) -> jnp.ndarray:
     """mask (mb_h, mb_w) bool -> QP map."""
     return jnp.where(mask, float(qp_hi), float(qp_lo))
+
+
+# ---------------------------------------------------------------------------
+# serving-path encoder: coefficient-space P-frame accumulation
+# ---------------------------------------------------------------------------
+def encode_chunk_fast(frames: jnp.ndarray, qp_maps: jnp.ndarray):
+    """Throughput-oriented equivalent of :func:`encode_chunk`.
+
+    DCT linearity lets the P-frame recursion run entirely in coefficient
+    space: ``coefs(frame - prev_rec) = coefs(frame) - rec_coefs`` as long as
+    reconstructions are not clipped between frames. All T forward DCTs are
+    hoisted into one batched transform before the scan, all T inverse DCTs
+    into one batched transform after it, and the per-frame scan body shrinks
+    to four elementwise ops. The entropy bits are likewise recovered outside
+    the scan from consecutive coefficient states.
+
+    The one semantic difference from ``encode_chunk``: the [0, 1] clip is
+    applied once at decode time instead of between reference frames, so
+    outputs can drift from the exact encoder where reconstructions leave
+    gamut (saturated pixels) — observed <=1e-3 mean / ~0.15 max pixel
+    deviation and <0.5% byte deviation on the synthetic scenes. Use
+    ``encode_chunk`` when bit-stable accounting matters; use this in the
+    fleet serving path where the scan is the throughput bottleneck.
+    """
+    T, H, W, _ = frames.shape
+    if qp_maps.shape[0] == 1:
+        qp_maps = jnp.broadcast_to(qp_maps, (T,) + qp_maps.shape[1:])
+    w = jnp.asarray(freq_weight())
+    steps = qstep(qp_maps.reshape(T, -1))[:, :, None, None, None] * w
+    rsteps = 1.0 / steps
+    coefs = dct2(jax.vmap(blockify)(frames))  # (T, N, C, 16, 16)
+
+    def body(rec_prev, args):
+        f, step, rstep = args
+        q = jnp.round((f - rec_prev) * rstep)
+        rec = rec_prev + q * step
+        return rec, rec
+
+    _, recs = jax.lax.scan(body, jnp.zeros_like(coefs[0]),
+                           (coefs, steps, rsteps), unroll=T)
+    qs = jnp.diff(recs, axis=0, prepend=jnp.zeros_like(recs[:1])) * rsteps
+    pbytes = jax.vmap(lambda q: block_bits(q).sum() / 8.0)(qs)
+    decoded = jax.vmap(lambda c: unblockify(idct2(c), H, W))(recs)
+    return jnp.clip(decoded, 0.0, 1.0), pbytes
+
+
+# ---------------------------------------------------------------------------
+# batched leading-axis entry points (N independent streams)
+# ---------------------------------------------------------------------------
+CHUNK_ENCODERS = {"exact": encode_chunk, "fast": encode_chunk_fast}
+
+
+@functools.lru_cache()
+def _batched_encoder(impl: str):
+    return jax.jit(jax.vmap(CHUNK_ENCODERS[impl]))
+
+
+def encode_chunk_batched(frames: jnp.ndarray, qp_maps: jnp.ndarray,
+                         impl: str = "exact"):
+    """frames (N, T, H, W, C); qp_maps (N, T or 1, H/16, W/16).
+
+    vmaps :data:`CHUNK_ENCODERS`[impl] over N independent streams in one
+    jitted program. Returns (decoded (N, T, H, W, C), bytes (N, T)).
+    """
+    return _batched_encoder(impl)(frames, qp_maps)
+
+
+def encode_chunk_uniform_batched(frames: jnp.ndarray, qp: int,
+                                 impl: str = "exact"):
+    """Uniform-QP variant of :func:`encode_chunk_batched`."""
+    N, _, H, W, _ = frames.shape
+    qmaps = jnp.full((N, 1, H // MB, W // MB), float(qp))
+    return _batched_encoder(impl)(frames, qmaps)

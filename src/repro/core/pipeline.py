@@ -1,29 +1,46 @@
-"""Camera -> network -> server pipeline with the paper's delay accounting
-(§6.1): per 10-frame chunk, encoding delay (measured wall-clock) +
+"""Delay/accuracy accounting primitives for the camera -> network -> server
+path (§6.1): per 10-frame chunk, encoding delay (measured wall-clock) +
 camera-side model overhead (measured) + streaming delay
 (bytes * 8 / bandwidth + RTT/2). Server inference delay is excluded, as in
-the paper. All methods (AccMPEG + every baseline) run through this one
-pipeline so Fig. 7/8/10 comparisons share identical accounting.
+the paper.
+
+The chunk loop itself lives in :mod:`repro.engine` (StreamingEngine + one
+QPPolicy per method); :func:`run_accmpeg` below is kept as a thin wrapper
+over ``StreamingEngine.run(AccMPEGPolicy(...))`` so existing callers keep
+working. All methods (AccMPEG + every baseline) run through that one engine
+so Fig. 7/8/10 comparisons share identical accounting.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable, List, Optional
+from typing import List, Optional, Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.codec.codec import encode_chunk, roi_qp_map
-from repro.core.accmodel import AccModel
-from repro.core.quality import QualityConfig, qp_map_from_scores
+from repro.core.quality import QualityConfig
 
 
 @dataclasses.dataclass(frozen=True)
 class NetworkConfig:
+    """Per-stream network model.
+
+    ``bandwidth_bps`` is the bandwidth one stream sees. For fleets sharing
+    one uplink, build the config with :meth:`shared`, which records the
+    total ``uplink_bps`` so the multi-stream engine can use
+    processor-sharing accounting (:func:`shared_stream_delays`) instead of
+    a fixed equal split.
+    """
+
     bandwidth_bps: float = 2.5e6 / 5  # 5 streams share a 2.5 Mbps uplink
     rtt_s: float = 0.100
+    uplink_bps: Optional[float] = None  # total shared uplink (fleet mode)
+
+    @classmethod
+    def shared(cls, uplink_bps: float, n_streams: int, rtt_s: float = 0.100):
+        """N streams fair-sharing one uplink."""
+        return cls(bandwidth_bps=uplink_bps / n_streams, rtt_s=rtt_s,
+                   uplink_bps=uplink_bps)
 
 
 @dataclasses.dataclass
@@ -75,6 +92,28 @@ def stream_delay(n_bytes: float, net: NetworkConfig) -> float:
     return n_bytes * 8.0 / net.bandwidth_bps + net.rtt_s / 2.0
 
 
+def shared_stream_delays(stream_bytes: Sequence[float],
+                         net: NetworkConfig) -> List[float]:
+    """Completion time of N simultaneous uploads fair-sharing one uplink
+    (processor sharing): every active stream gets an equal share; when a
+    stream finishes, its share is redistributed to the rest. Returns each
+    stream's delay including RTT/2, in input order. Falls back to
+    ``bandwidth_bps * N`` as the uplink when the config has no
+    ``uplink_bps`` (no stream is ever slower than the fixed equal split;
+    smaller streams finish earlier and donate their share)."""
+    n = len(stream_bytes)
+    uplink = net.uplink_bps or net.bandwidth_bps * n
+    order = sorted(range(n), key=lambda i: stream_bytes[i])
+    delays = [0.0] * n
+    t, sent = 0.0, 0.0
+    for k, i in enumerate(order):
+        bits = stream_bytes[i] * 8.0
+        t += (bits - sent) * (n - k) / uplink
+        sent = bits
+        delays[i] = t + net.rtt_s / 2.0
+    return delays
+
+
 def make_reference(frames: np.ndarray, final_dnn, qp_hi: int = 30,
                    chunk_size: int = 10):
     """Per-chunk reference outputs D(H): the final DNN on the *uniformly
@@ -98,59 +137,22 @@ def chunk_accuracy(final_dnn, decoded, hq_or_ref) -> float:
     return final_dnn.accuracy(out, ref)
 
 
-_ENC_CACHE = {}
-
-
 def _jit_encode():
-    if "enc" not in _ENC_CACHE:
-        _ENC_CACHE["enc"] = jax.jit(encode_chunk)
-    return _ENC_CACHE["enc"]
+    """Back-compat alias for the engine's shared jitted encoder."""
+    from repro.engine.engine import jit_encode
+
+    return jit_encode()
 
 
-def run_accmpeg(frames: np.ndarray, accmodel: AccModel, final_dnn,
+def run_accmpeg(frames: np.ndarray, accmodel, final_dnn,
                 qcfg: QualityConfig = QualityConfig(),
                 net: NetworkConfig = NetworkConfig(),
                 chunk_size: int = 10, refs=None,
                 frame_sample: Optional[int] = None) -> RunResult:
-    """The AccMPEG camera loop: AccModel once every ``frame_sample`` frames
-    (default = chunk size, the paper's k=10), RoI-encode the chunk, stream,
-    serve. ``refs``: precomputed D(H) per chunk (make_reference)."""
-    T = frames.shape[0]
-    results = []
-    enc = _jit_encode()
-    k = frame_sample or chunk_size
-    # warm the jitted paths so measured delays are steady-state (the paper
-    # benchmarks a running camera, not cold compilation)
-    warm = jnp.asarray(frames[:chunk_size])
-    n_maps = chunk_size if (k < chunk_size) else 1
-    jax.block_until_ready(accmodel.scores(warm[:1]))
-    jax.block_until_ready(
-        enc(warm, jnp.full((n_maps,) + tuple(
-            s // 16 for s in warm.shape[1:3]), 35.0))[0])
-    for ci, s in enumerate(range(0, T - T % chunk_size, chunk_size)):
-        chunk = jnp.asarray(frames[s : s + chunk_size])
-        t0 = time.perf_counter()
-        if k >= chunk_size:
-            scores = accmodel.scores(chunk[:1])
-        else:  # run on every k-th frame, keep per-frame masks
-            scores = accmodel.scores(chunk[::k])
-            scores = jnp.repeat(scores, k, axis=0)[: chunk_size]
-        jax.block_until_ready(scores)
-        overhead = time.perf_counter() - t0
+    """The AccMPEG camera loop (thin wrapper over the StreamingEngine).
+    ``refs``: precomputed D(H) per chunk (make_reference)."""
+    from repro.engine import AccMPEGPolicy, StreamingEngine
 
-        qmaps = []
-        for i in range(scores.shape[0]):
-            qm, _ = qp_map_from_scores(scores[i], qcfg)
-            qmaps.append(qm)
-        qmaps = jnp.stack(qmaps)
-        t0 = time.perf_counter()
-        decoded, pbytes = enc(chunk, qmaps)
-        jax.block_until_ready(decoded)
-        encode = time.perf_counter() - t0
-
-        nbytes = float(pbytes.sum())
-        ref = refs[ci] if refs is not None else chunk
-        acc = chunk_accuracy(final_dnn, decoded, ref)
-        results.append(ChunkResult(acc, nbytes, encode, overhead,
-                                   stream_delay(nbytes, net)))
-    return RunResult("accmpeg", results)
+    policy = AccMPEGPolicy(accmodel, qcfg, frame_sample=frame_sample)
+    engine = StreamingEngine(final_dnn, net=net, chunk_size=chunk_size)
+    return engine.run(policy, frames, refs=refs)

@@ -52,6 +52,16 @@ def qp_map_from_scores(scores, cfg: QualityConfig):
     return jnp.where(mask, float(cfg.qp_hi), float(cfg.qp_lo)), mask
 
 
+def qp_maps_from_scores_batched(scores: jnp.ndarray, cfg: QualityConfig):
+    """scores (N, mb_h, mb_w) for N streams -> (qp_maps (N, 1, mb_h, mb_w),
+    mask (N, mb_h, mb_w)). The singleton axis is the chunk's shared-map axis
+    (k = chunk_size frame sampling), shaped for the batched codec entry
+    points. jit/vmap friendly: dilation runs on the whole batch at once."""
+    mask = quality_mask(scores, cfg)
+    qmaps = jnp.where(mask, float(cfg.qp_hi), float(cfg.qp_lo))[:, None]
+    return qmaps, mask
+
+
 def mask_stability(masks: jnp.ndarray) -> jnp.ndarray:
     """Fig. 6: fraction of macroblocks whose assignment matches frame 0,
     per frame distance. masks: (T, mb_h, mb_w) bool -> (T,)."""

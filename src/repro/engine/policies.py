@@ -1,0 +1,251 @@
+"""QP policies: one small object per method from the paper's comparison.
+
+A policy's job is to map chunk state to per-macroblock QP maps (and drive
+any camera-side models or server feedback it needs); the
+:class:`~repro.engine.engine.StreamingEngine` owns everything else. The
+protocol (see also engine/README.md):
+
+    name           result label (RunResult.method)
+    reset()        clear cross-chunk state before a run
+    warm(engine, chunk)
+                   compile/warm every jitted path the policy will use, so
+                   measured delays are steady-state
+    encode_chunk(ctx) -> decoded frames the server sees
+                   drive the chunk through ctx: ctx.time_overhead for
+                   camera-side model cost, ctx.encode / ctx.encode_uniform
+                   per transmission, ctx.add_server_rtt for feedback waits,
+                   ctx.server_predict for (untimed) server inference.
+
+Policies may hold state across chunks (EAAR's previous-chunk mask) and may
+transmit more than once per chunk (DDS's two passes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.codec.codec import roi_qp_map
+from repro.codec.dct import MB
+from repro.core.quality import QualityConfig, dilate, qp_map_from_scores
+from repro.engine.engine import ChunkContext, StreamingEngine, jit_encode
+from repro.vision.dnn import decode_detections
+
+
+def boxes_to_mask(boxes, mb_h: int, mb_w: int, grow: int = 0) -> jnp.ndarray:
+    """Pixel bounding boxes -> macroblock mask (grown by ``grow`` blocks)."""
+    m = np.zeros((mb_h, mb_w), bool)
+    for (x0, y0, x1, y1, *_) in boxes:
+        m[max(0, int(y0) // MB - grow): int(np.ceil(y1 / MB)) + grow,
+          max(0, int(x0) // MB - grow): int(np.ceil(x1 / MB)) + grow] = True
+    return jnp.asarray(m)
+
+
+def frame_diff_feature(chunk) -> jnp.ndarray:
+    """Reducto's per-frame change feature (edge-weighted differencing —
+    the paper notes Harris features dominate its camera cost)."""
+    gray = chunk.mean(-1)
+    gx = jnp.abs(jnp.diff(gray, axis=2)).mean(axis=(1, 2))
+    d = jnp.abs(jnp.diff(gray, axis=0)).mean(axis=(1, 2))
+    return jnp.concatenate([jnp.ones((1,)), d * 10.0]) + 0 * gx
+
+
+class QPPolicy:
+    """Base class; subclasses override encode_chunk (and usually warm)."""
+
+    name = "policy"
+
+    def reset(self):
+        pass
+
+    def warm(self, engine: StreamingEngine, chunk):
+        pass
+
+    def encode_chunk(self, ctx: ChunkContext):
+        raise NotImplementedError
+
+
+class AccMPEGPolicy(QPPolicy):
+    """The paper's camera loop: AccModel once every ``frame_sample`` frames
+    (default = chunk size, k=10), two-level QP map from the scores (§4)."""
+
+    name = "accmpeg"
+
+    def __init__(self, accmodel, qcfg: QualityConfig = QualityConfig(),
+                 frame_sample=None):
+        self.accmodel = accmodel
+        self.qcfg = qcfg
+        self.frame_sample = frame_sample
+
+    def warm(self, engine, chunk):
+        cs = engine.chunk_size
+        k = self.frame_sample or cs
+        n_maps = cs if (k < cs) else 1
+        jax.block_until_ready(self.accmodel.scores(chunk[:1]))
+        jax.block_until_ready(jit_encode()(chunk, jnp.full(
+            (n_maps,) + tuple(s // MB for s in chunk.shape[1:3]), 35.0))[0])
+
+    def encode_chunk(self, ctx):
+        chunk = ctx.chunk
+        cs = ctx.engine.chunk_size
+        k = self.frame_sample or cs
+
+        def scores_fn():
+            if k >= cs:
+                return self.accmodel.scores(chunk[:1])
+            s = self.accmodel.scores(chunk[::k])  # every k-th frame
+            return jnp.repeat(s, k, axis=0)[:cs]
+
+        scores = ctx.time_overhead(scores_fn)
+        qmaps = jnp.stack([qp_map_from_scores(scores[i], self.qcfg)[0]
+                           for i in range(scores.shape[0])])
+        return ctx.encode(qmaps)
+
+
+class UniformPolicy(QPPolicy):
+    """AWStream-idealized building block: one uniform QP (the benchmark
+    sweeps QP and grants AWStream a free profiling pass)."""
+
+    def __init__(self, qp: int, name=None):
+        self.qp = qp
+        self.name = name or f"uniform_qp{qp}"
+
+    def warm(self, engine, chunk):
+        from repro.codec.codec import encode_chunk_uniform
+        jax.block_until_ready(encode_chunk_uniform(chunk, self.qp)[0])
+
+    def encode_chunk(self, ctx):
+        return ctx.encode_uniform(self.qp)
+
+
+def _server_region_mask(server, out, mb_h, mb_w, grow, det_thresh):
+    """Regions-of-interest from a server-side inference output."""
+    if server.task == "detection":
+        dets = decode_detections(out, thresh=det_thresh)
+        return boxes_to_mask([d for f in dets for d in f], mb_h, mb_w, grow)
+    # segmentation/keypoint: active output regions
+    key = "seg" if server.task == "segmentation" else "kp"
+    act = np.asarray(jnp.abs(out[key]).max(axis=(0, -1)))
+    act = act >= np.percentile(act, 75)
+    reps = mb_h // act.shape[0] + 1
+    mask = jnp.asarray(
+        np.kron(act, np.ones((reps, reps)))[:mb_h, :mb_w] > 0)
+    return dilate(mask, grow)
+
+
+class DDSPolicy(QPPolicy):
+    """Server-driven two-pass: low-QP pass to the server, the *final DNN*'s
+    output selects regions, those re-encoded in high quality; pays both
+    streams plus an extra RTT."""
+
+    name = "dds"
+
+    def __init__(self, qp_hi=30, qp_lo=40, grow=1):
+        self.qp_hi, self.qp_lo, self.grow = qp_hi, qp_lo, grow
+
+    def warm(self, engine, chunk):
+        from repro.codec.codec import encode_chunk_uniform
+        H, W = chunk.shape[1:3]
+        jax.block_until_ready(encode_chunk_uniform(chunk, self.qp_lo)[0])
+        jax.block_until_ready(jit_encode()(
+            chunk, jnp.full((1, H // MB, W // MB), float(self.qp_lo)))[0])
+
+    def encode_chunk(self, ctx):
+        H, W = ctx.chunk.shape[1:3]
+        dec1 = ctx.encode_uniform(self.qp_lo)          # pass 1: low quality
+        out1 = ctx.server_predict(dec1)                # server feedback
+        mask = _server_region_mask(ctx.server, out1, H // MB, W // MB,
+                                   self.grow, det_thresh=0.15)
+        qmap = roi_qp_map(mask, self.qp_hi, self.qp_lo)
+        dec2 = ctx.encode(qmap[None])                  # pass 2: RoI redo
+        ctx.add_server_rtt()                           # wait for feedback
+        return dec2
+
+
+class EAARPolicy(QPPolicy):
+    """Previous chunk's server detections drive the current chunk's RoI
+    (one chunk of staleness, no second stream)."""
+
+    name = "eaar"
+
+    def __init__(self, qp_hi=30, qp_lo=40, grow=2):
+        self.qp_hi, self.qp_lo, self.grow = qp_hi, qp_lo, grow
+        self.prev_mask = None
+
+    def reset(self):
+        self.prev_mask = None
+
+    def warm(self, engine, chunk):
+        H, W = chunk.shape[1:3]
+        jax.block_until_ready(jit_encode()(
+            chunk, jnp.full((1, H // MB, W // MB), float(self.qp_hi)))[0])
+
+    def encode_chunk(self, ctx):
+        H, W = ctx.chunk.shape[1:3]
+        mask = self.prev_mask if self.prev_mask is not None \
+            else jnp.ones((H // MB, W // MB), bool)
+        qmap = roi_qp_map(mask, self.qp_hi, self.qp_lo)
+        decoded = ctx.encode(qmap[None])
+        out = ctx.server_predict(decoded)
+        if ctx.server.task == "detection":
+            dets = decode_detections(out, thresh=0.2)
+            self.prev_mask = boxes_to_mask([d for f in dets for d in f],
+                                           H // MB, W // MB, self.grow)
+        else:
+            self.prev_mask = jnp.ones((H // MB, W // MB), bool)
+        return decoded
+
+
+class ReductoPolicy(QPPolicy):
+    """Camera-side frame differencing; below-threshold frames are dropped
+    (the server reuses the last sent frame's result); sent frames uniform."""
+
+    name = "reducto"
+
+    def __init__(self, qp=32, thresh=0.05):
+        self.qp, self.thresh = qp, thresh
+        self._feat = jax.jit(frame_diff_feature)
+
+    def warm(self, engine, chunk):
+        jax.block_until_ready(self._feat(chunk))
+
+    def encode_chunk(self, ctx):
+        chunk = ctx.chunk
+        feat = ctx.time_overhead(self._feat, chunk)
+        keep = np.asarray(feat) >= self.thresh
+        keep[0] = True  # first frame always sent
+        kept = chunk[jnp.asarray(np.where(keep)[0])]
+        decoded_kept = ctx.encode_uniform(self.qp, frames=kept)
+        # server reuses the last sent frame's decoded content for dropped
+        full, j = [], -1
+        for t in range(chunk.shape[0]):
+            if keep[t]:
+                j += 1
+            full.append(decoded_kept[j])
+        return jnp.stack(full)
+
+
+class VigilPolicy(QPPolicy):
+    """Cheap camera-side detector; bounding-box regions high quality,
+    background effectively dropped (QP 51)."""
+
+    name = "vigil"
+
+    def __init__(self, camera_detector, qp_hi=30, qp_lo=51, grow=0):
+        self.camera = camera_detector
+        self.qp_hi, self.qp_lo, self.grow = qp_hi, qp_lo, grow
+
+    def warm(self, engine, chunk):
+        H, W = chunk.shape[1:3]
+        jax.block_until_ready(self.camera.predict(chunk)["heat"])
+        jax.block_until_ready(jit_encode()(
+            chunk, jnp.full((1, H // MB, W // MB), float(self.qp_lo)))[0])
+
+    def encode_chunk(self, ctx):
+        H, W = ctx.chunk.shape[1:3]
+        out = ctx.time_overhead(self.camera.predict, ctx.chunk)  # every frame
+        dets = decode_detections(out, thresh=0.25)
+        mask = boxes_to_mask([d for f in dets for d in f],
+                             H // MB, W // MB, self.grow)
+        qmap = roi_qp_map(mask, self.qp_hi, self.qp_lo)
+        return ctx.encode(qmap[None])

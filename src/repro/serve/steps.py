@@ -1,9 +1,15 @@
-"""Serving steps: prefill and single-token decode (the dry-run's serve_step).
+"""Serving steps: prefill and single-token decode (the dry-run's serve_step),
+plus the camera-fleet step for vmap-batched multi-stream video serving.
 
 ``decode_step`` is what the decode_32k / long_500k cells lower: one new token
 against a seq_len KV cache. The KV cache is sequence-sharded over the model
 axis (batch over data), with GSPMD combining the partial softmax — the
 flash-decoding schedule expressed in pjit.
+
+``make_camera_fleet_step`` is the video analogue: the entire camera side of
+N concurrent AccMPEG streams — AccModel scoring, QP-map assignment, and the
+RoI chunk encode — lowered as one jitted XLA program with the stream axis
+leading, so one dispatch serves a fleet of cameras per chunk interval.
 """
 from __future__ import annotations
 
@@ -12,6 +18,35 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.distributed.sharding import Rules
+
+
+def make_camera_fleet_step(accmodel, qcfg, impl: str = "fast"):
+    """Build the fused per-chunk camera step for N streams.
+
+    Returns ``step(chunks)`` with ``chunks (N, T, H, W, C)`` ->
+    ``(decoded (N, T, H, W, C), bytes (N, T), scores (N, mb_h, mb_w))``.
+
+    Frame sampling is the paper's k = chunk_size: AccModel runs on each
+    stream's chunk head only, and the resulting per-stream QP map is reused
+    for the whole chunk. ``impl`` selects the chunk encoder from
+    ``codec.CHUNK_ENCODERS`` — "fast" (coefficient-space scan, the serving
+    default) or "exact" (bit-stable reference path).
+    """
+    from repro.codec.codec import CHUNK_ENCODERS
+    from repro.core.accmodel import accmodel_apply
+    from repro.core.quality import qp_maps_from_scores_batched
+
+    params = accmodel.params
+    enc = CHUNK_ENCODERS[impl]
+
+    @jax.jit
+    def step(chunks):
+        scores = jax.nn.sigmoid(accmodel_apply(params, chunks[:, 0]))
+        qmaps, _ = qp_maps_from_scores_batched(scores, qcfg)
+        decoded, pbytes = jax.vmap(enc)(chunks, qmaps)
+        return decoded, pbytes, scores
+
+    return step
 
 
 def make_prefill_step(model, cfg: ArchConfig, rules: Rules):

@@ -1,0 +1,81 @@
+"""Deterministic stand-in for the slice of the hypothesis API this suite
+uses (``given`` / ``settings`` / ``st.integers|floats|sampled_from``).
+
+The container may not ship hypothesis (it is a dev-only dependency, see
+requirements-dev.txt); property tests then still run against a fixed,
+boundary-biased sample grid instead of being skipped outright. When the
+real hypothesis is installed the test modules import it instead and this
+module is never used.
+"""
+from __future__ import annotations
+
+import itertools
+import random
+import types
+
+MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, values):
+        self.values = list(values)
+
+
+def _integers(min_value=0, max_value=100):
+    lo, hi = int(min_value), int(max_value)
+    rng = random.Random(0xACC)
+    vals = {lo, hi, (lo + hi) // 2}
+    while len(vals) < min(MAX_EXAMPLES, hi - lo + 1):
+        vals.add(rng.randint(lo, hi))
+    return _Strategy(sorted(vals))
+
+
+def _floats(min_value=0.0, max_value=1.0, **_kw):
+    lo, hi = float(min_value), float(max_value)
+    fracs = (0.0, 1.0, 0.5, 0.123, 0.876, 0.317, 0.701)
+    return _Strategy([lo + f * (hi - lo) for f in fracs[:MAX_EXAMPLES]])
+
+
+def _sampled_from(seq):
+    return _Strategy(seq)
+
+
+st = types.SimpleNamespace(integers=_integers, floats=_floats,
+                           sampled_from=_sampled_from)
+strategies = st  # `from _hypothesis_compat import strategies as st` also works
+
+
+def _combos(strategies_args):
+    """Up to MAX_EXAMPLES tuples covering every strategy's value list.
+
+    The full product is used when it fits; otherwise each axis is cycled
+    independently so no axis is stuck at its first value (a truncated
+    product would pin every axis but the last)."""
+    sizes = [len(s.values) for s in strategies_args]
+    total = 1
+    for n in sizes:
+        total *= n
+    if total <= MAX_EXAMPLES:
+        return list(itertools.product(*(s.values for s in strategies_args)))
+    return [tuple(s.values[i % n] for s, n in zip(strategies_args, sizes))
+            for i in range(MAX_EXAMPLES)]
+
+
+def given(*strategies_args):
+    def deco(fn):
+        # deliberately no functools.wraps: pytest would follow __wrapped__
+        # back to the original signature and treat strategy params as
+        # fixtures. The wrapper takes no arguments.
+        def wrapper():
+            for combo in _combos(strategies_args):
+                fn(*combo)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco
+
+
+def settings(**_kw):
+    def deco(fn):
+        return fn
+    return deco

@@ -1,0 +1,260 @@
+"""StreamingEngine refactor guarantees.
+
+1. Parity: each QPPolicy run through the engine reproduces the legacy
+   per-method chunk loops' accuracy/bytes per chunk. The oracles below are
+   compact reimplementations of the seed's ``run_*`` loops (direct codec
+   calls, no engine) — if a policy drifts from the method it models, these
+   catch it.
+2. Multi-stream: N=4 vmapped streams match N sequential single-stream runs
+   (bit-stable with the exact codec; bounded deviation with the fast
+   serving codec), and the fast codec itself stays close to the exact one.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.baselines.baselines import (boxes_to_mask, frame_diff_feature,
+                                       run_dds, run_eaar, run_reducto,
+                                       run_uniform, run_vigil)
+from repro.codec.codec import (encode_chunk, encode_chunk_batched,
+                               encode_chunk_fast, encode_chunk_uniform)
+from repro.codec.dct import MB
+from repro.core.pipeline import (NetworkConfig, chunk_accuracy,
+                                 make_reference, run_accmpeg,
+                                 shared_stream_delays, stream_delay)
+from repro.core.quality import QualityConfig, qp_map_from_scores
+from repro.core.training import train_accmodel
+from repro.data.video import make_scene
+from repro.engine import (AccMPEGPolicy, MultiStreamEngine, StreamingEngine,
+                          UniformPolicy)
+from repro.vision.dnn import decode_detections
+from repro.vision.train import train_final_dnn
+
+H, W = 96, 160
+QCFG = QualityConfig(alpha=0.3, gamma=2, qp_hi=30, qp_lo=42)
+
+
+@pytest.fixture(scope="module")
+def dnn():
+    return train_final_dnn("detection", "dashcam", steps=80, H=H, W=W,
+                           width=8, cache=True, name="engine_par")
+
+
+@pytest.fixture(scope="module")
+def accmodel(dnn):
+    frames = make_scene("dashcam", seed=21, T=16, H=H, W=W).frames
+    return train_accmodel(dnn, frames, epochs=2, width=8,
+                          qp_lo=42).accmodel
+
+
+@pytest.fixture(scope="module")
+def scene():
+    return make_scene("dashcam", seed=33, T=20, H=H, W=W)
+
+
+@pytest.fixture(scope="module")
+def refs(dnn, scene):
+    return make_reference(scene.frames, dnn, qp_hi=30)
+
+
+def _chunks(frames, cs=10):
+    T = frames.shape[0]
+    for ci, s in enumerate(range(0, T - T % cs, cs)):
+        yield ci, jnp.asarray(frames[s : s + cs])
+
+
+def _assert_chunk_parity(run_result, oracle, tol_bytes=1e-3):
+    """oracle: list of (accuracy, bytes) per chunk from the legacy loop."""
+    assert len(run_result.chunks) == len(oracle)
+    for got, (acc, nbytes) in zip(run_result.chunks, oracle):
+        assert got.accuracy == pytest.approx(acc, abs=1e-6)
+        assert got.bytes == pytest.approx(nbytes, rel=tol_bytes)
+
+
+def test_accmpeg_parity(dnn, accmodel, scene, refs):
+    r = run_accmpeg(scene.frames, accmodel, dnn, QCFG, refs=refs)
+    enc = jax.jit(encode_chunk)
+    oracle = []
+    for ci, chunk in _chunks(scene.frames):
+        scores = accmodel.scores(chunk[:1])
+        qm, _ = qp_map_from_scores(scores[0], QCFG)
+        decoded, pbytes = enc(chunk, qm[None])
+        oracle.append((chunk_accuracy(dnn, decoded, refs[ci]),
+                       float(pbytes.sum())))
+    _assert_chunk_parity(r, oracle)
+
+
+def test_uniform_parity(dnn, scene, refs):
+    r = run_uniform(scene.frames, dnn, 36, refs=refs)
+    assert r.method == "uniform_qp36"
+    oracle = []
+    for ci, chunk in _chunks(scene.frames):
+        decoded, pbytes = encode_chunk_uniform(chunk, 36)
+        oracle.append((chunk_accuracy(dnn, decoded, refs[ci]),
+                       float(pbytes.sum())))
+    _assert_chunk_parity(r, oracle)
+
+
+def test_dds_parity(dnn, scene, refs):
+    qp_hi, qp_lo, grow = 30, 40, 1
+    r = run_dds(scene.frames, dnn, qp_hi=qp_hi, qp_lo=qp_lo, grow=grow,
+                refs=refs)
+    enc = jax.jit(encode_chunk)
+    oracle = []
+    for ci, chunk in _chunks(scene.frames):
+        dec1, b1 = encode_chunk_uniform(chunk, qp_lo)
+        dets = decode_detections(dnn.predict(dec1), thresh=0.15)
+        mask = boxes_to_mask([d for f in dets for d in f],
+                             H // MB, W // MB, grow)
+        qmap = jnp.where(mask, float(qp_hi), float(qp_lo))
+        dec2, b2 = enc(chunk, qmap[None])
+        oracle.append((chunk_accuracy(dnn, dec2, refs[ci]),
+                       float(b1.sum() + b2.sum())))
+    _assert_chunk_parity(r, oracle)
+    # two transmissions + one extra server RTT per chunk
+    net = NetworkConfig()
+    for got, (ci, chunk) in zip(r.chunks, _chunks(scene.frames)):
+        assert got.extra_rtt_s == pytest.approx(net.rtt_s)
+
+
+def test_eaar_parity(dnn, scene, refs):
+    qp_hi, qp_lo, grow = 30, 40, 2
+    r = run_eaar(scene.frames, dnn, qp_hi=qp_hi, qp_lo=qp_lo, grow=grow,
+                 refs=refs)
+    enc = jax.jit(encode_chunk)
+    oracle, prev_mask = [], None
+    for ci, chunk in _chunks(scene.frames):
+        mask = prev_mask if prev_mask is not None \
+            else jnp.ones((H // MB, W // MB), bool)
+        qmap = jnp.where(mask, float(qp_hi), float(qp_lo))
+        decoded, pbytes = enc(chunk, qmap[None])
+        dets = decode_detections(dnn.predict(decoded), thresh=0.2)
+        prev_mask = boxes_to_mask([d for f in dets for d in f],
+                                  H // MB, W // MB, grow)
+        oracle.append((chunk_accuracy(dnn, decoded, refs[ci]),
+                       float(pbytes.sum())))
+    _assert_chunk_parity(r, oracle)
+
+
+def test_reducto_parity(dnn, scene, refs):
+    qp, thresh = 32, 0.05
+    r = run_reducto(scene.frames, dnn, qp=qp, thresh=thresh, refs=refs)
+    oracle = []
+    for ci, chunk in _chunks(scene.frames):
+        feat = frame_diff_feature(chunk)
+        keep = np.asarray(feat) >= thresh
+        keep[0] = True
+        kept = chunk[jnp.asarray(np.where(keep)[0])]
+        decoded_kept, pbytes = encode_chunk_uniform(kept, qp)
+        full, j = [], -1
+        for t in range(chunk.shape[0]):
+            if keep[t]:
+                j += 1
+            full.append(decoded_kept[j])
+        oracle.append((chunk_accuracy(dnn, jnp.stack(full), refs[ci]),
+                       float(pbytes.sum())))
+    _assert_chunk_parity(r, oracle)
+
+
+def test_vigil_parity(dnn, scene, refs):
+    cam = train_final_dnn("detection", "dashcam", steps=30, H=H, W=W,
+                          width=8, cache=True, name="engine_par_cam")
+    qp_hi, qp_lo, grow = 30, 51, 0
+    r = run_vigil(scene.frames, dnn, cam, qp_hi=qp_hi, qp_lo=qp_lo,
+                  grow=grow, refs=refs)
+    enc = jax.jit(encode_chunk)
+    oracle = []
+    for ci, chunk in _chunks(scene.frames):
+        dets = decode_detections(cam.predict(chunk), thresh=0.25)
+        mask = boxes_to_mask([d for f in dets for d in f],
+                             H // MB, W // MB, grow)
+        qmap = jnp.where(mask, float(qp_hi), float(qp_lo))
+        decoded, pbytes = enc(chunk, qmap[None])
+        oracle.append((chunk_accuracy(dnn, decoded, refs[ci]),
+                       float(pbytes.sum())))
+    _assert_chunk_parity(r, oracle)
+
+
+def test_engine_policy_reset_between_runs(dnn, scene, refs):
+    """Stateful policies must not leak chunk state across engine runs."""
+    r1 = run_eaar(scene.frames, dnn, refs=refs)
+    r2 = run_eaar(scene.frames, dnn, refs=refs)
+    for a, b in zip(r1.chunks, r2.chunks):
+        assert a.accuracy == pytest.approx(b.accuracy, abs=1e-6)
+        assert a.bytes == pytest.approx(b.bytes, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fast codec + multi-stream
+# ---------------------------------------------------------------------------
+def test_fast_codec_close_to_exact(scene):
+    chunk = jnp.asarray(scene.frames[:10])
+    qm = jnp.full((1, H // MB, W // MB), 35.0)
+    d_ref, b_ref = jax.jit(encode_chunk)(chunk, qm)
+    d_fast, b_fast = jax.jit(encode_chunk_fast)(chunk, qm)
+    assert float(jnp.abs(d_ref - d_fast).mean()) < 2e-3
+    assert float(b_fast.sum()) == pytest.approx(float(b_ref.sum()), rel=0.02)
+    # per-frame byte curve stays monotone-comparable, not just the total
+    np.testing.assert_allclose(np.asarray(b_fast), np.asarray(b_ref),
+                               rtol=0.1)
+
+
+def test_batched_encoder_matches_per_stream(scene):
+    frames = jnp.stack([
+        jnp.asarray(make_scene("dashcam", seed=60 + i, T=10, H=H,
+                               W=W).frames) for i in range(3)])
+    qmaps = jnp.stack([jnp.full((1, H // MB, W // MB), float(q))
+                       for q in (32, 36, 40)])
+    dec_b, bytes_b = encode_chunk_batched(frames, qmaps, impl="exact")
+    for i in range(3):
+        dec_i, bytes_i = jax.jit(encode_chunk)(frames[i], qmaps[i])
+        np.testing.assert_allclose(np.asarray(dec_b[i]), np.asarray(dec_i),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(bytes_b[i]),
+                                   np.asarray(bytes_i), rtol=1e-5)
+
+
+@pytest.mark.parametrize("impl,acc_tol,byte_tol", [
+    ("exact", 1e-4, 1e-4),
+    ("fast", 0.05, 0.02),
+])
+def test_multistream_matches_sequential(dnn, accmodel, impl, acc_tol,
+                                        byte_tol):
+    """N=4 vmapped streams vs 4 sequential single-stream engine runs."""
+    N = 4
+    scenes = [make_scene("dashcam", seed=70 + i, T=20, H=H, W=W)
+              for i in range(N)]
+    refs = [make_reference(s.frames, dnn, qp_hi=30) for s in scenes]
+    net = NetworkConfig.shared(2.5e6, N)
+
+    seq = [StreamingEngine(dnn, net=net).run(
+        AccMPEGPolicy(accmodel, QCFG), s.frames, refs=r)
+        for s, r in zip(scenes, refs)]
+
+    fleet = MultiStreamEngine(dnn, accmodel, QCFG, net=net, impl=impl).run(
+        np.stack([s.frames for s in scenes]), refs=refs)
+
+    assert fleet.n_streams == N
+    for i in range(N):
+        for cs, cf in zip(seq[i].chunks, fleet.streams[i].chunks):
+            assert cf.accuracy == pytest.approx(cs.accuracy, abs=acc_tol)
+            assert cf.bytes == pytest.approx(cs.bytes, rel=byte_tol)
+
+
+def test_shared_stream_delays_properties():
+    net = NetworkConfig.shared(1e6, 4, rtt_s=0.1)
+    sizes = [1000.0, 2000.0, 4000.0, 8000.0]
+    delays = shared_stream_delays(sizes, net)
+    # processor sharing never beats a dedicated full uplink, never loses to
+    # the fixed equal split
+    for b, d in zip(sizes, delays):
+        assert d >= b * 8.0 / net.uplink_bps + net.rtt_s / 2 - 1e-12
+        assert d <= stream_delay(b, net) + 1e-12
+    # ordering preserved; last finisher = serialized total
+    assert delays == sorted(delays)
+    total = sum(sizes) * 8.0 / net.uplink_bps + net.rtt_s / 2
+    assert delays[-1] == pytest.approx(total)
+    # equal sizes degenerate to the equal split exactly
+    eq = shared_stream_delays([3000.0] * 4, net)
+    assert all(d == pytest.approx(stream_delay(3000.0, net)) for d in eq)

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dev-only dep; fall back to a fixed sample grid
+    from _hypothesis_compat import given, settings, st
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import local_rules

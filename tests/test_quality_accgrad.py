@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dev-only dep; fall back to a fixed sample grid
+    from _hypothesis_compat import given, settings, st
 
 from repro.core.accgrad import accgrad_embeddings, accgrad_frames, block_reduce
 from repro.core.quality import (QualityConfig, dilate, mask_stability,
