@@ -1,12 +1,15 @@
 """Fleet serving: vmap-batched N-stream camera step vs the sequential
-per-stream engine loop (the ROADMAP's many-concurrent-cameras target).
+per-stream engine loop (the ROADMAP's many-concurrent-cameras target),
+the chunk-encoder backend registry, and the double-buffered server overlap.
 
 The sequential baseline is the legacy serving shape — one
 StreamingEngine.camera_chunk per stream per chunk interval (N jit
 dispatches + 2N device syncs). The fleet path is one fused XLA program
 (serve.steps.make_camera_fleet_step: batched AccModel scoring + QP maps +
-coefficient-space RoI encode). Measured camera-side only; server inference
-is excluded in both, as in the paper's delay accounting.
+registry-selected RoI encode). Camera rows measure the camera side only;
+the pipeline rows measure the whole serving loop (camera + batched server
+DNN + host accounting) serialized vs double-buffered — server inference is
+still excluded from per-stream *delay* accounting in both, as in the paper.
 """
 from __future__ import annotations
 
@@ -21,6 +24,10 @@ from benchmarks.common import emit
 N_STREAMS = 8
 CHUNK = 10
 REPS = 5
+
+# registry backends benchmarked on the fused fleet step; "pallas" resolves
+# to the fused mbcodec tile on TPU and the jnp reference tile on CPU hosts
+BACKENDS = ("exact", "fast", "fast_exact", "pallas")
 
 
 def _setup(H, W, width=16):
@@ -43,8 +50,10 @@ def _bench(fn, *args):
 
 
 def fleet_throughput():
-    """N=8 streams at fleet-cam resolutions: fused step speedup + the
-    chunks/sec the serving tier sustains per CPU worker."""
+    """N=8 streams at fleet-cam resolutions: fused step speedup over the
+    sequential loop, plus the full encoder-backend registry behind the
+    same impl= knob (the fast_exact row bounds the clip-correction
+    overhead vs fast)."""
     from repro.core.quality import QualityConfig
     from repro.engine import AccMPEGPolicy, StreamingEngine
     from repro.serve.steps import make_camera_fleet_step
@@ -55,8 +64,8 @@ def fleet_throughput():
         frames, am = _setup(H, W)
         policy = AccMPEGPolicy(am, qcfg)
         engine = StreamingEngine(final_dnn=None, chunk_size=CHUNK)
-        step_fast = make_camera_fleet_step(am, qcfg, impl="fast")
-        step_exact = make_camera_fleet_step(am, qcfg, impl="exact")
+        steps = {impl: make_camera_fleet_step(am, qcfg, impl=impl)
+                 for impl in BACKENDS}
 
         # both paths pay their real host->device transfer: per-stream
         # conversion in the sequential loop (as StreamingEngine does), one
@@ -75,21 +84,69 @@ def fleet_throughput():
         # warm both paths (per-stream warm covers scores + encode compiles)
         policy.warm(engine, jnp.asarray(frames[0]))
         t_seq = _bench(sequential)
-        t_exact = _bench(fleet, step_exact)
-        t_fast = _bench(fleet, step_fast)
-        best = max(best, t_seq / t_fast)
         emit(f"multistream/{H}x{W}_sequential_n{N_STREAMS}", t_seq * 1e6,
              f"chunks_per_s={N_STREAMS / t_seq:.1f}")
-        # attribution: fused-loop-only win (same exact codec) ...
-        emit(f"multistream/{H}x{W}_fleet_exact_n{N_STREAMS}", t_exact * 1e6,
-             f"chunks_per_s={N_STREAMS / t_exact:.1f};"
-             f"speedup={t_seq / t_exact:.2f}x")
-        # ... vs the shipped serving mode (fused loop + fast codec)
-        emit(f"multistream/{H}x{W}_fleet_n{N_STREAMS}", t_fast * 1e6,
-             f"chunks_per_s={N_STREAMS / t_fast:.1f};"
-             f"speedup={t_seq / t_fast:.2f}x")
+        t_impl = {}
+        for impl in BACKENDS:
+            t = _bench(fleet, steps[impl])
+            t_impl[impl] = t
+            emit(f"multistream/{H}x{W}_fleet_{impl}_n{N_STREAMS}", t * 1e6,
+                 f"chunks_per_s={N_STREAMS / t:.1f};"
+                 f"speedup={t_seq / t:.2f}x")
+        best = max(best, t_seq / t_impl["fast"])
+        # exactness-knob overhead: fast_exact's per-step clip check vs fast
+        emit(f"multistream/{H}x{W}_clip_correct_overhead",
+             (t_impl["fast_exact"] - t_impl["fast"]) * 1e6,
+             f"overhead={t_impl['fast_exact'] / t_impl['fast']:.2f}x_of_fast")
     emit("multistream/fleet_speedup_best", 0.0,
          f"speedup={best:.2f}x;target>=2x;met={'yes' if best >= 2.0 else 'no'}")
+
+
+def fleet_pipeline_overlap():
+    """Double-buffered server DNN vs the serialized camera->server loop:
+    same streams, same accounting, wall-clock of the whole serving loop.
+    The overlapped loop dispatches chunk i+1's fused camera step before
+    the host-side scoring of chunk i, so the batched server inference and
+    host accounting hide behind camera encode."""
+    from repro.core.accmodel import AccModel, accmodel_init
+    from repro.core.pipeline import make_reference, pipeline_makespan
+    from repro.core.quality import QualityConfig
+    from repro.data.video import make_scene
+    from repro.engine import MultiStreamEngine
+    from repro.vision.dnn import FinalDNN, init_net
+
+    # width 8 fleet-cam serving regime; D(H) references are precomputed
+    # (the paper's methodology) so the per-chunk loop is camera step +
+    # batched server DNN + host scoring — the three stages the double
+    # buffer pipelines
+    H, W, n_chunks = 96, 160, 4
+    qcfg = QualityConfig(alpha=0.5, gamma=2, qp_hi=30, qp_lo=42)
+    scenes = [make_scene("dashcam", seed=340 + i, T=n_chunks * CHUNK,
+                         H=H, W=W) for i in range(N_STREAMS)]
+    frames = np.stack([s.frames for s in scenes])
+    am = AccModel(accmodel_init(jax.random.PRNGKey(0), 8))
+    dnn = FinalDNN("detection",
+                   init_net("detection", jax.random.PRNGKey(1), width=8))
+    refs = [make_reference(s.frames, dnn, qp_hi=30, chunk_size=CHUNK)
+            for s in scenes]
+    engines = {ov: MultiStreamEngine(dnn, am, qcfg, chunk_size=CHUNK,
+                                     impl="fast", overlap=ov)
+               for ov in (False, True)}
+    for eng in engines.values():
+        eng.run(frames, refs=refs)  # warm the whole loop (compiles+caches)
+    results = {False: [], True: []}
+    for _ in range(2):  # best-of-2, modes interleaved (this box drifts)
+        for ov in (False, True):
+            results[ov].append(engines[ov].run(frames, refs=refs).timing)
+    t_ser = min(results[False], key=lambda t: t.wall_s)
+    t_ovl = min(results[True], key=lambda t: t.wall_s)
+    bound = pipeline_makespan(t_ovl.camera_s, t_ovl.server_s)
+    emit("multistream/pipeline_serialized", t_ser.wall_s * 1e6,
+         f"n={N_STREAMS};chunks={n_chunks}")
+    emit("multistream/pipeline_overlapped", t_ovl.wall_s * 1e6,
+         f"n={N_STREAMS};chunks={n_chunks};"
+         f"speedup={t_ser.wall_s / t_ovl.wall_s:.2f}x;"
+         f"makespan_bound_us={bound * 1e6:.0f}")
 
 
 def fleet_accuracy_accounting():
@@ -114,9 +171,11 @@ def fleet_accuracy_accounting():
     s = fleet.summary()
     emit("multistream/fleet_e2e", s["camera_s_per_chunk"] * 1e6,
          f"n={n};acc={s['accuracy']:.4f};chunks_per_s={s['chunks_per_s']:.1f};"
-         f"p95_delay={s['p95_delay_s']:.3f}")
+         f"p95_delay={s['p95_delay_s']:.3f};"
+         f"overlap_speedup={s['overlap_speedup']:.2f}x")
 
 
 def run():
     fleet_throughput()
+    fleet_pipeline_overlap()
     fleet_accuracy_accounting()

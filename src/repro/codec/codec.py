@@ -70,6 +70,28 @@ def encode_frame(frame: jnp.ndarray, qp_map: jnp.ndarray,
     return rec, bits
 
 
+def _scan_chunk(encode_one, frames: jnp.ndarray, qp_maps: jnp.ndarray):
+    """Shared I-frame + P-frame scan scaffold: ``encode_one(frame, qmap,
+    reference)`` codes one frame (reference=None -> I-frame). Used by the
+    exact and the kernel-backed chunk encoders so the chunk semantics
+    (map broadcast, scan, byte accounting) exist once."""
+    T = frames.shape[0]
+    if qp_maps.shape[0] == 1:
+        qp_maps = jnp.broadcast_to(qp_maps, (T,) + qp_maps.shape[1:])
+
+    dec0, bits0 = encode_one(frames[0], qp_maps[0], None)
+
+    def body(prev, args):
+        frame, qmap = args
+        dec, bits = encode_one(frame, qmap, prev)
+        return dec, (dec, bits.sum() / 8.0)
+
+    _, (decs, pbytes) = jax.lax.scan(body, dec0, (frames[1:], qp_maps[1:]))
+    decoded = jnp.concatenate([dec0[None], decs], axis=0)
+    all_bytes = jnp.concatenate([(bits0.sum() / 8.0)[None], pbytes])
+    return decoded, all_bytes
+
+
 def encode_chunk(frames: jnp.ndarray, qp_maps: jnp.ndarray):
     """frames: (T, H, W, C); qp_maps: (T, H/16, W/16) or (1, H/16, W/16)
     (one RoI map reused for the chunk — the paper's frame-sampling mode).
@@ -77,21 +99,8 @@ def encode_chunk(frames: jnp.ndarray, qp_maps: jnp.ndarray):
     First frame is an I-frame, the rest are P-frames against the decoded
     predecessor. Returns (decoded (T,H,W,C), per_frame_bytes (T,)).
     """
-    T = frames.shape[0]
-    if qp_maps.shape[0] == 1:
-        qp_maps = jnp.broadcast_to(qp_maps, (T,) + qp_maps.shape[1:])
-
-    dec0, bits0 = encode_frame(frames[0], qp_maps[0])
-
-    def body(prev, args):
-        frame, qmap = args
-        dec, bits = encode_frame(frame, qmap, reference=prev)
-        return dec, (dec, bits.sum() / 8.0)
-
-    _, (decs, pbytes) = jax.lax.scan(body, dec0, (frames[1:], qp_maps[1:]))
-    decoded = jnp.concatenate([dec0[None], decs], axis=0)
-    all_bytes = jnp.concatenate([(bits0.sum() / 8.0)[None], pbytes])
-    return decoded, all_bytes
+    return _scan_chunk(
+        lambda f, q, ref: encode_frame(f, q, reference=ref), frames, qp_maps)
 
 
 @functools.partial(jax.jit, static_argnames=("qp",))
@@ -109,7 +118,8 @@ def roi_qp_map(mask: jnp.ndarray, qp_hi: float, qp_lo: float) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 # serving-path encoder: coefficient-space P-frame accumulation
 # ---------------------------------------------------------------------------
-def encode_chunk_fast(frames: jnp.ndarray, qp_maps: jnp.ndarray):
+def encode_chunk_fast(frames: jnp.ndarray, qp_maps: jnp.ndarray,
+                      clip_correct: bool = False):
     """Throughput-oriented equivalent of :func:`encode_chunk`.
 
     DCT linearity lets the P-frame recursion run entirely in coefficient
@@ -127,6 +137,20 @@ def encode_chunk_fast(frames: jnp.ndarray, qp_maps: jnp.ndarray):
     deviation and <0.5% byte deviation on the synthetic scenes. Use
     ``encode_chunk`` when bit-stable accounting matters; use this in the
     fleet serving path where the scan is the throughput bottleneck.
+
+    ``clip_correct=True`` is the exactness knob (ROADMAP item 5): each scan
+    step checks the pixel-space reconstruction and, *only when it leaves
+    gamut*, folds the clip back into the coefficient state
+    (``rec += dct2(clip(pix) - pix)``), so the next P-frame codes against
+    the clipped reference exactly as :func:`encode_chunk` does. The check
+    costs one inverse transform per step; the correction transform sits
+    behind a ``lax.cond``, so single-stream jitted calls skip it entirely
+    on in-gamut steps. Under ``jax.vmap`` (the batched fleet path) the
+    cond lowers to a select, so the correction transform is computed
+    unconditionally there — output identical, and the worst-case overhead
+    is what ``benchmarks/multistream.py`` bounds (it measures the vmapped
+    fleet step). Output is bit-comparable to the exact encoder on every
+    scene (float round-trip error only).
     """
     T, H, W, _ = frames.shape
     if qp_maps.shape[0] == 1:
@@ -136,29 +160,152 @@ def encode_chunk_fast(frames: jnp.ndarray, qp_maps: jnp.ndarray):
     rsteps = 1.0 / steps
     coefs = dct2(jax.vmap(blockify)(frames))  # (T, N, C, 16, 16)
 
+    if not clip_correct:
+        def body(rec_prev, args):
+            f, step, rstep = args
+            q = jnp.round((f - rec_prev) * rstep)
+            rec = rec_prev + q * step
+            return rec, rec
+
+        _, recs = jax.lax.scan(body, jnp.zeros_like(coefs[0]),
+                               (coefs, steps, rsteps), unroll=T)
+        qs = jnp.diff(recs, axis=0, prepend=jnp.zeros_like(recs[:1])) * rsteps
+        pbytes = jax.vmap(lambda q: block_bits(q).sum() / 8.0)(qs)
+        decoded = jax.vmap(lambda c: unblockify(idct2(c), H, W))(recs)
+        return jnp.clip(decoded, 0.0, 1.0), pbytes
+
     def body(rec_prev, args):
         f, step, rstep = args
         q = jnp.round((f - rec_prev) * rstep)
         rec = rec_prev + q * step
-        return rec, rec
+        pix = idct2(rec)
+        delta = jnp.clip(pix, 0.0, 1.0) - pix
+        rec = jax.lax.cond(jnp.any(jnp.abs(delta) > 0.0),
+                           lambda a: a[0] + dct2(a[1]),
+                           lambda a: a[0], (rec, delta))
+        return rec, (pix + delta, q)
 
-    _, recs = jax.lax.scan(body, jnp.zeros_like(coefs[0]),
-                           (coefs, steps, rsteps), unroll=T)
-    qs = jnp.diff(recs, axis=0, prepend=jnp.zeros_like(recs[:1])) * rsteps
+    _, (pix, qs) = jax.lax.scan(body, jnp.zeros_like(coefs[0]),
+                                (coefs, steps, rsteps), unroll=T)
     pbytes = jax.vmap(lambda q: block_bits(q).sum() / 8.0)(qs)
-    decoded = jax.vmap(lambda c: unblockify(idct2(c), H, W))(recs)
-    return jnp.clip(decoded, 0.0, 1.0), pbytes
+    decoded = jax.vmap(lambda p: unblockify(p, H, W))(pix)
+    return decoded, pbytes
+
+
+# ---------------------------------------------------------------------------
+# chunk-encoder backend registry
+# ---------------------------------------------------------------------------
+class ChunkEncoderRegistry:
+    """Named chunk-encoder backends behind the serving path's ``impl=`` knob.
+
+    Every backend shares the chunk-encoder signature
+    ``(frames (T, H, W, C), qp_maps (T or 1, H/16, W/16)) ->
+    (decoded (T, H, W, C), per_frame_bytes (T,))`` and is jit/vmap friendly,
+    so the engine, the fused fleet step, and the batched entry points can
+    select one by name without caring how it is lowered. Mapping-style
+    ``CHUNK_ENCODERS[impl]`` resolves the backend (kept for callers of the
+    old two-entry dict); :meth:`register` admits new backends.
+
+    Backends may declare ``preferred_backend`` (e.g. ``"tpu"``): they still
+    resolve everywhere — off-platform fallback is the backend's own job
+    (the ``pallas`` entry drops to the jnp reference tile off-TPU) —
+    :meth:`describe` surfaces whether the preferred lowering is active.
+    """
+
+    def __init__(self):
+        self._backends = {}
+
+    def register(self, name: str, fn=None, *, doc: str = "",
+                 preferred_backend: str = None):
+        """Register ``fn`` under ``name`` (usable as a decorator).
+
+        Names are write-once: the jitted-encoder caches downstream
+        (``_batched_encoder``, ``engine._jit_encoder``) are keyed by name,
+        so silently replacing a backend would leave them serving the old
+        function — re-registration raises instead."""
+        def _add(f):
+            if name in self._backends:
+                raise ValueError(
+                    f"chunk encoder {name!r} already registered; pick a "
+                    "new name (downstream jit caches are keyed by name)")
+            self._backends[name] = {
+                "fn": f, "doc": doc or (f.__doc__ or "").split("\n")[0],
+                "preferred_backend": preferred_backend,
+            }
+            return f
+        return _add(fn) if fn is not None else _add
+
+    def resolve(self, name: str):
+        try:
+            return self._backends[name]["fn"]
+        except KeyError:
+            raise KeyError(
+                f"unknown chunk encoder {name!r}; registered: "
+                f"{sorted(self._backends)}") from None
+
+    def describe(self, name: str) -> dict:
+        e = self._backends[name]
+        pref = e["preferred_backend"]
+        return {"name": name, "doc": e["doc"],
+                "preferred_backend": pref,
+                "native": pref is None or jax.default_backend() == pref}
+
+    # Mapping protocol (back-compat with the old dict)
+    def __getitem__(self, name: str):
+        return self.resolve(name)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._backends
+
+    def __iter__(self):
+        return iter(self._backends)
+
+    def __len__(self) -> int:
+        return len(self._backends)
+
+    def keys(self):
+        return self._backends.keys()
+
+    def names(self):
+        return sorted(self._backends)
+
+
+CHUNK_ENCODERS = ChunkEncoderRegistry()
+CHUNK_ENCODERS.register("exact", encode_chunk,
+                        doc="bit-stable reference scan (per-frame DCTs)")
+CHUNK_ENCODERS.register("fast", encode_chunk_fast,
+                        doc="coefficient-space scan, hoisted transforms")
+CHUNK_ENCODERS.register(
+    "fast_exact", functools.partial(encode_chunk_fast, clip_correct=True),
+    doc="fast scan + per-step clip correction (bit-comparable to exact)")
+
+
+@CHUNK_ENCODERS.register("pallas", preferred_backend="tpu",
+                         doc="fused mbcodec tile (TPU); jnp tile off-TPU")
+def encode_chunk_pallas(frames: jnp.ndarray, qp_maps: jnp.ndarray):
+    """Chunk encoder backed by the fused ``kernels/mbcodec`` tile.
+
+    Per frame, ``kernels.mbcodec.ops.encode_frame_fused`` runs
+    blockify-DCT-quant-dequant-IDCT + the entropy bits in one VMEM
+    round-trip (Pallas on TPU; the jnp reference tile elsewhere — the
+    off-TPU fallback is automatic, selected at trace time). P-frames code
+    the residual against the previous *decoded* frame exactly like
+    :func:`encode_chunk` (same :func:`_scan_chunk` scaffold), so output is
+    bit-comparable to ``impl="exact"``.
+    """
+    from repro.kernels.mbcodec.ops import encode_frame_fused
+
+    return _scan_chunk(
+        lambda f, q, ref: encode_frame_fused(f, q, reference=ref),
+        frames, qp_maps)
 
 
 # ---------------------------------------------------------------------------
 # batched leading-axis entry points (N independent streams)
 # ---------------------------------------------------------------------------
-CHUNK_ENCODERS = {"exact": encode_chunk, "fast": encode_chunk_fast}
-
-
 @functools.lru_cache()
 def _batched_encoder(impl: str):
-    return jax.jit(jax.vmap(CHUNK_ENCODERS[impl]))
+    return jax.jit(jax.vmap(CHUNK_ENCODERS.resolve(impl)))
 
 
 def encode_chunk_batched(frames: jnp.ndarray, qp_maps: jnp.ndarray,

@@ -67,6 +67,47 @@ def make_local_mesh() -> Mesh:
     return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
 
 
+# ---------------------------------------------------------------------------
+# fleet-serving stream meshes (camera-stream data parallelism)
+# ---------------------------------------------------------------------------
+STREAM_AXIS = "stream"
+
+
+def make_stream_mesh(n_shards: int = None) -> Mesh:
+    """1-D mesh over the ``"stream"`` axis for sharded fleet serving.
+
+    Camera streams are embarrassingly parallel (no cross-stream collectives
+    in the camera step), so the fleet axis shards over a flat device list:
+    each device runs the identical per-shard camera program on N/n_shards
+    streams. Defaults to every available device; works on host-platform
+    devices (``--xla_force_host_platform_device_count``) for tests.
+    """
+    devices = jax.devices()
+    n = n_shards or len(devices)
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices for a {n}-way stream mesh, "
+                           f"have {len(devices)}")
+    return Mesh(np.asarray(devices[:n]), (STREAM_AXIS,))
+
+
+def make_local_stream_mesh() -> Mesh:
+    """Single-device stream mesh (the make_local_mesh-style fallback)."""
+    return Mesh(np.asarray(jax.devices()[:1]), (STREAM_AXIS,))
+
+
+def stream_mesh_for(n_streams: int) -> Mesh:
+    """Largest stream mesh that divides ``n_streams`` evenly.
+
+    shard_map needs the stream axis to divide the mesh; this picks the
+    widest usable mesh on whatever devices exist (1 device -> the local
+    fallback), so callers can say ``mesh="auto"`` and run anywhere.
+    """
+    n_dev = len(jax.devices())
+    width = max(d for d in range(1, min(n_dev, n_streams) + 1)
+                if n_streams % d == 0)
+    return make_stream_mesh(width)
+
+
 def dp_axes(mesh: Mesh) -> tuple:
     """Mesh axes that carry data parallelism (pod + data when present)."""
     return tuple(a for a in ("pod", "data") if a in mesh.shape)

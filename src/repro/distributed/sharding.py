@@ -26,6 +26,23 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+def shard_map(f, mesh: Mesh, in_specs, out_specs):
+    """Version-spanning shard_map with replication checking off.
+
+    Newer jax exposes ``jax.shard_map(..., check_vma=False)``; 0.4.x has
+    ``jax.experimental.shard_map.shard_map(..., check_rep=False)``. The
+    sharded fleet-serving path (and the distributed tests) go through this
+    one shim so the rest of the tree never version-switches.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
 @dataclasses.dataclass(frozen=True)
 class Rules:
     mesh: Mesh

@@ -3,13 +3,13 @@ vmap-batched multi-stream serving. See engine/README.md."""
 from repro.engine.engine import ChunkContext, StreamingEngine, jit_encode
 from repro.engine.multistream import FleetResult, MultiStreamEngine
 from repro.engine.policies import (AccMPEGPolicy, DDSPolicy, EAARPolicy,
-                                   QPPolicy, ReductoPolicy, UniformPolicy,
-                                   VigilPolicy, boxes_to_mask,
-                                   frame_diff_feature)
+                                   QPPolicy, ReductoAccMPEGPolicy,
+                                   ReductoPolicy, UniformPolicy, VigilPolicy,
+                                   boxes_to_mask, frame_diff_feature)
 
 __all__ = [
     "AccMPEGPolicy", "ChunkContext", "DDSPolicy", "EAARPolicy",
-    "FleetResult", "MultiStreamEngine", "QPPolicy", "ReductoPolicy",
-    "StreamingEngine", "UniformPolicy", "VigilPolicy", "boxes_to_mask",
-    "frame_diff_feature", "jit_encode",
+    "FleetResult", "MultiStreamEngine", "QPPolicy", "ReductoAccMPEGPolicy",
+    "ReductoPolicy", "StreamingEngine", "UniformPolicy", "VigilPolicy",
+    "boxes_to_mask", "frame_diff_feature", "jit_encode",
 ]

@@ -25,16 +25,25 @@ from typing import List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.codec.codec import encode_chunk, encode_chunk_uniform
+from repro.codec.codec import CHUNK_ENCODERS, encode_chunk_uniform
 from repro.core.pipeline import (ChunkResult, NetworkConfig, RunResult,
                                  chunk_accuracy, stream_delay)
 
 
 @functools.lru_cache()
-def jit_encode():
-    """The process-wide jitted RoI chunk encoder (one compile cache for
-    every policy; replaces the old ``core.pipeline._ENC_CACHE`` dict)."""
-    return jax.jit(encode_chunk)
+def _jit_encoder(impl: str):
+    return jax.jit(CHUNK_ENCODERS.resolve(impl))
+
+
+def jit_encode(impl: str = "exact"):
+    """The process-wide jitted RoI chunk encoder (one compile cache per
+    ``codec.CHUNK_ENCODERS`` backend; replaces the old
+    ``core.pipeline._ENC_CACHE`` dict). Default stays the bit-stable
+    "exact" backend so Fig. 7/8/10 accounting is unchanged; pass the
+    engine's ``impl`` to select "fast" / "fast_exact" / "pallas".
+    (The cache lives behind the default-applied signature so
+    ``jit_encode()`` and ``jit_encode("exact")`` share one entry.)"""
+    return _jit_encoder(impl)
 
 
 class ChunkContext:
@@ -75,9 +84,11 @@ class ChunkContext:
 
     def encode(self, qp_maps: jnp.ndarray, frames=None) -> jnp.ndarray:
         """RoI-encode ``frames`` (default: the chunk) with per-macroblock
-        QP maps (T or 1 leading); one transmission on the wire."""
+        QP maps (T or 1 leading); one transmission on the wire. The codec
+        backend is the engine's ``impl`` (CHUNK_ENCODERS registry)."""
         frames = self.chunk if frames is None else frames
-        return self._timed_encode(jit_encode(), frames, qp_maps)
+        return self._timed_encode(jit_encode(self.engine.impl), frames,
+                                  qp_maps)
 
     def encode_uniform(self, qp: int, frames=None) -> jnp.ndarray:
         frames = self.chunk if frames is None else frames
@@ -93,13 +104,19 @@ class ChunkContext:
 
 
 class StreamingEngine:
-    """Runs any QPPolicy through the shared chunk loop."""
+    """Runs any QPPolicy through the shared chunk loop.
+
+    ``impl`` selects the RoI chunk-encoder backend from the
+    ``codec.CHUNK_ENCODERS`` registry for every ``ctx.encode`` call —
+    "exact" (default, bit-stable paper accounting), "fast", "fast_exact",
+    or "pallas" (fused mbcodec tile on TPU; jnp tile elsewhere)."""
 
     def __init__(self, final_dnn, net: NetworkConfig = NetworkConfig(),
-                 chunk_size: int = 10):
+                 chunk_size: int = 10, impl: str = "exact"):
         self.final_dnn = final_dnn
         self.net = net
         self.chunk_size = chunk_size
+        self.impl = impl
 
     def chunks(self, frames):
         T = frames.shape[0]

@@ -50,6 +50,37 @@ def frame_diff_feature(chunk) -> jnp.ndarray:
     return jnp.concatenate([jnp.ones((1,)), d * 10.0]) + 0 * gx
 
 
+def drop_static_frames(ctx: ChunkContext, feat_fn, thresh: float):
+    """Reducto's temporal filter: timed frame-diff feature -> keep mask
+    (the first frame is always sent)."""
+    feat = ctx.time_overhead(feat_fn, ctx.chunk)
+    keep = np.asarray(feat) >= thresh
+    keep[0] = True
+    return keep
+
+
+def reconstruct_dropped(decoded_kept, keep) -> jnp.ndarray:
+    """Server-side reuse: dropped frames take the last sent frame's
+    decoded content."""
+    full, j = [], -1
+    for t in range(len(keep)):
+        if keep[t]:
+            j += 1
+        full.append(decoded_kept[j])
+    return jnp.stack(full)
+
+
+def _ensure_compiled(seen: set, key, encode_fn):
+    """Frame-dropping policies encode data-dependent kept-frame counts, so
+    each new count means a fresh XLA compile that warm() cannot predict.
+    Run the encode once untimed on first sight of ``key`` so the compile
+    never lands inside ChunkContext's timed region (encode_s stays
+    steady-state; the duplicate device execution happens once per count)."""
+    if key not in seen:
+        seen.add(key)
+        jax.block_until_ready(encode_fn()[0])
+
+
 class QPPolicy:
     """Base class; subclasses override encode_chunk (and usually warm)."""
 
@@ -82,7 +113,7 @@ class AccMPEGPolicy(QPPolicy):
         k = self.frame_sample or cs
         n_maps = cs if (k < cs) else 1
         jax.block_until_ready(self.accmodel.scores(chunk[:1]))
-        jax.block_until_ready(jit_encode()(chunk, jnp.full(
+        jax.block_until_ready(jit_encode(engine.impl)(chunk, jnp.full(
             (n_maps,) + tuple(s // MB for s in chunk.shape[1:3]), 35.0))[0])
 
     def encode_chunk(self, ctx):
@@ -147,7 +178,7 @@ class DDSPolicy(QPPolicy):
         from repro.codec.codec import encode_chunk_uniform
         H, W = chunk.shape[1:3]
         jax.block_until_ready(encode_chunk_uniform(chunk, self.qp_lo)[0])
-        jax.block_until_ready(jit_encode()(
+        jax.block_until_ready(jit_encode(engine.impl)(
             chunk, jnp.full((1, H // MB, W // MB), float(self.qp_lo)))[0])
 
     def encode_chunk(self, ctx):
@@ -177,7 +208,7 @@ class EAARPolicy(QPPolicy):
 
     def warm(self, engine, chunk):
         H, W = chunk.shape[1:3]
-        jax.block_until_ready(jit_encode()(
+        jax.block_until_ready(jit_encode(engine.impl)(
             chunk, jnp.full((1, H // MB, W // MB), float(self.qp_hi)))[0])
 
     def encode_chunk(self, ctx):
@@ -205,24 +236,55 @@ class ReductoPolicy(QPPolicy):
     def __init__(self, qp=32, thresh=0.05):
         self.qp, self.thresh = qp, thresh
         self._feat = jax.jit(frame_diff_feature)
+        self._warmed = set()  # kept-frame shapes already compiled
 
     def warm(self, engine, chunk):
         jax.block_until_ready(self._feat(chunk))
 
     def encode_chunk(self, ctx):
-        chunk = ctx.chunk
-        feat = ctx.time_overhead(self._feat, chunk)
-        keep = np.asarray(feat) >= self.thresh
-        keep[0] = True  # first frame always sent
-        kept = chunk[jnp.asarray(np.where(keep)[0])]
+        from repro.codec.codec import encode_chunk_uniform
+
+        keep = drop_static_frames(ctx, self._feat, self.thresh)
+        kept = ctx.chunk[jnp.asarray(np.where(keep)[0])]
+        _ensure_compiled(self._warmed, (kept.shape, self.qp),
+                         lambda: encode_chunk_uniform(kept, self.qp))
         decoded_kept = ctx.encode_uniform(self.qp, frames=kept)
-        # server reuses the last sent frame's decoded content for dropped
-        full, j = [], -1
-        for t in range(chunk.shape[0]):
-            if keep[t]:
-                j += 1
-            full.append(decoded_kept[j])
-        return jnp.stack(full)
+        return reconstruct_dropped(decoded_kept, keep)
+
+
+class ReductoAccMPEGPolicy(QPPolicy):
+    """Hybrid Reducto+AccMPEG: camera-side frame differencing drops static
+    frames (the server reuses the last sent frame's result), and the frames
+    that *are* sent get AccMPEG's AccModel-driven RoI encode instead of
+    Reducto's uniform QP — cheap temporal filtering composed with cheap
+    spatial quality selection."""
+
+    name = "reducto_accmpeg"
+
+    def __init__(self, accmodel, qcfg: QualityConfig = QualityConfig(),
+                 thresh: float = 0.05):
+        self.accmodel = accmodel
+        self.qcfg = qcfg
+        self.thresh = thresh
+        self._feat = jax.jit(frame_diff_feature)
+        self._warmed = set()  # kept-frame shapes already compiled
+
+    def warm(self, engine, chunk):
+        jax.block_until_ready(self._feat(chunk))
+        jax.block_until_ready(self.accmodel.scores(chunk[:1]))
+        jax.block_until_ready(jit_encode(engine.impl)(chunk, jnp.full(
+            (1,) + tuple(s // MB for s in chunk.shape[1:3]), 35.0))[0])
+
+    def encode_chunk(self, ctx):
+        keep = drop_static_frames(ctx, self._feat, self.thresh)
+        scores = ctx.time_overhead(self.accmodel.scores, ctx.chunk[:1])
+        qmap, _ = qp_map_from_scores(scores[0], self.qcfg)
+        kept = ctx.chunk[jnp.asarray(np.where(keep)[0])]
+        impl = ctx.engine.impl
+        _ensure_compiled(self._warmed, (kept.shape, impl),
+                         lambda: jit_encode(impl)(kept, qmap[None]))
+        decoded_kept = ctx.encode(qmap[None], frames=kept)
+        return reconstruct_dropped(decoded_kept, keep)
 
 
 class VigilPolicy(QPPolicy):
@@ -238,7 +300,7 @@ class VigilPolicy(QPPolicy):
     def warm(self, engine, chunk):
         H, W = chunk.shape[1:3]
         jax.block_until_ready(self.camera.predict(chunk)["heat"])
-        jax.block_until_ready(jit_encode()(
+        jax.block_until_ready(jit_encode(engine.impl)(
             chunk, jnp.full((1, H // MB, W // MB), float(self.qp_lo)))[0])
 
     def encode_chunk(self, ctx):

@@ -37,16 +37,22 @@ def mbcodec(blocks: jnp.ndarray, qp: jnp.ndarray, impl: str = "auto"):
 
 
 def encode_frame_fused(frame: jnp.ndarray, qp_map: jnp.ndarray,
-                       impl: str = "auto"):
-    """Kernel-backed equivalent of repro.codec.codec.encode_frame (I-frame).
+                       impl: str = "auto", reference: jnp.ndarray = None):
+    """Kernel-backed equivalent of repro.codec.codec.encode_frame.
 
     frame (H, W, C); qp_map (H/16, W/16) -> (decoded, bits_map).
+    ``reference`` is the previous *decoded* frame for P-frame coding
+    (None -> I-frame), mirroring ``codec.encode_frame`` so the serving
+    path's ``impl="pallas"`` chunk encoder can scan this per frame.
     """
     H, W, C = frame.shape
-    blocks = blockify(frame).reshape(-1, MB, MB)  # (N*C, 16, 16)
+    src = frame if reference is None else frame - reference
+    blocks = blockify(src).reshape(-1, MB, MB)  # (N*C, 16, 16)
     qp = jnp.repeat(qp_map.reshape(-1), C)
     rec, bits = mbcodec(blocks, qp, impl)
     rec = unblockify(rec.reshape(-1, C, MB, MB), H, W)
+    if reference is not None:
+        rec = rec + reference
     # one per-macroblock header, not one per channel (match codec.block_bits)
     from repro.codec.codec import BLOCK_OVERHEAD
 

@@ -26,22 +26,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.distributed.sharding import Rules
+from repro.distributed.sharding import Rules, shard_map
 from repro.models.layers import Linear, normal_init
 from repro.utils import ceil_div
-
-try:  # jax >= 0.8
-    from jax import shard_map as _shard_map
-
-    def shard_map(f, mesh, in_specs, out_specs):
-        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                          check_vma=False)
-except (ImportError, TypeError):  # pragma: no cover - older jax
-    from jax.experimental.shard_map import shard_map as _shard_map_old
-
-    def shard_map(f, mesh, in_specs, out_specs):
-        return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
-                              out_specs=out_specs, check_rep=False)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -35,6 +35,25 @@ from repro.models.rwkv6 import RWKV6ChannelMix, RWKV6TimeMix
 from repro.utils import fold_in_str, split_like
 
 
+@jax.custom_vjp
+def _carry_barrier(x):
+    """optimization_barrier with a gradient: jax 0.4.x has no built-in
+    differentiation rule for the primitive, and the barrier must survive the
+    backward pass too (the saved residual is re-read there)."""
+    return jax.lax.optimization_barrier(x)
+
+
+def _carry_barrier_fwd(x):
+    return _carry_barrier(x), None
+
+
+def _carry_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_carry_barrier.defvjp(_carry_barrier_fwd, _carry_barrier_bwd)
+
+
 def _mixer_module(cfg: ArchConfig, kind: str, dtype):
     if kind == ATTN:
         return L.Attention(
@@ -193,7 +212,7 @@ class Stack:
             # pin the remat-saved carry to its compute dtype — without the
             # barrier XLA fuses the norm's f32 upcast into the residual save
             # buffer, doubling saved-activation memory (observed on CPU XLA)
-            x = jax.lax.optimization_barrier(x)
+            x = _carry_barrier(x)
             if self.cfg.seq_shard_activations:
                 # Megatron-SP: the residual stream (and thus the remat-saved
                 # block input) is sequence-sharded over the model axis

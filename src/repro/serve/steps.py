@@ -15,12 +15,14 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.distributed.sharding import Rules
+from repro.distributed.sharding import Rules, shard_map
 
 
-def make_camera_fleet_step(accmodel, qcfg, impl: str = "fast"):
+def make_camera_fleet_step(accmodel, qcfg, impl: str = "fast",
+                           mesh: Mesh = None):
     """Build the fused per-chunk camera step for N streams.
 
     Returns ``step(chunks)`` with ``chunks (N, T, H, W, C)`` ->
@@ -28,25 +30,85 @@ def make_camera_fleet_step(accmodel, qcfg, impl: str = "fast"):
 
     Frame sampling is the paper's k = chunk_size: AccModel runs on each
     stream's chunk head only, and the resulting per-stream QP map is reused
-    for the whole chunk. ``impl`` selects the chunk encoder from
-    ``codec.CHUNK_ENCODERS`` — "fast" (coefficient-space scan, the serving
-    default) or "exact" (bit-stable reference path).
+    for the whole chunk. ``impl`` selects the chunk encoder from the
+    ``codec.CHUNK_ENCODERS`` registry — "fast" (coefficient-space scan, the
+    serving default), "exact" (bit-stable reference), "fast_exact"
+    (clip-corrected fast scan), or "pallas" (fused mbcodec tile on TPU,
+    jnp tile elsewhere).
+
+    ``mesh``: a 1-D ``"stream"`` mesh (``distributed.mesh.make_stream_mesh``)
+    shards the fleet axis via shard_map — each device traces the identical
+    per-shard program on its N/n_shards streams (the camera side has no
+    cross-stream collectives), so one host serves hundreds of cameras.
+    N must divide the mesh width; ``mesh=None`` keeps the single-device
+    vmap lowering.
     """
     from repro.codec.codec import CHUNK_ENCODERS
     from repro.core.accmodel import accmodel_apply
     from repro.core.quality import qp_maps_from_scores_batched
+    from repro.distributed.mesh import STREAM_AXIS
 
     params = accmodel.params
-    enc = CHUNK_ENCODERS[impl]
+    enc = CHUNK_ENCODERS.resolve(impl)
 
-    @jax.jit
-    def step(chunks):
+    def _step(chunks):
         scores = jax.nn.sigmoid(accmodel_apply(params, chunks[:, 0]))
         qmaps, _ = qp_maps_from_scores_batched(scores, qcfg)
         decoded, pbytes = jax.vmap(enc)(chunks, qmaps)
         return decoded, pbytes, scores
 
-    return step
+    if mesh is None:
+        return jax.jit(_step)
+    spec = P(STREAM_AXIS)
+    sharded = shard_map(_step, mesh, in_specs=spec,
+                        out_specs=(spec, spec, spec))
+    return jax.jit(sharded)
+
+
+def stream_sharding(mesh: Mesh) -> NamedSharding:
+    """Stream-major input sharding for fleet batches (leading axis)."""
+    from repro.distributed.mesh import STREAM_AXIS
+
+    return NamedSharding(mesh, P(STREAM_AXIS))
+
+
+def make_server_fleet_step(final_dnn, mesh: Mesh = None):
+    """Batch the server-side DNN across streams.
+
+    Returns ``server(decoded (N, T, H, W, C)) -> pytree of (N, T, ...)``
+    dense outputs — ONE jitted apply over the flattened (N*T) frame batch
+    instead of the N per-stream ``final_dnn.predict`` Python calls the
+    fleet engine used to make. The engine double-buffers this against the
+    next chunk's camera step (dispatching it asynchronously before the
+    host-side accuracy decode of the previous chunk), so server inference
+    overlaps camera encode.
+
+    ``mesh``: optional ``"stream"`` mesh; shards the stream axis with
+    shard_map like the camera step (the backbone is per-frame, so the
+    fleet axis stays embarrassingly parallel).
+    """
+    from repro.distributed.mesh import STREAM_AXIS
+    from repro.vision.dnn import apply_net, detection_keep_heat
+
+    task, params = final_dnn.task, final_dnn.params
+
+    def _server(decoded):
+        N, T = decoded.shape[:2]
+        flat = decoded.reshape((N * T,) + decoded.shape[2:])
+        out = apply_net(task, params, flat)
+        if task == "detection":
+            # fold the NMS device half of detection decoding into the
+            # batched program: the host-side decode is then numpy-only and
+            # genuinely overlaps the next chunk's camera step
+            out = dict(out, keep=detection_keep_heat(out))
+        return jax.tree_util.tree_map(
+            lambda v: v.reshape((N, T) + v.shape[1:]), out)
+
+    if mesh is None:
+        return jax.jit(_server)
+    spec = P(STREAM_AXIS)
+    sharded = shard_map(_server, mesh, in_specs=spec, out_specs=spec)
+    return jax.jit(sharded)
 
 
 def make_prefill_step(model, cfg: ArchConfig, rules: Rules):

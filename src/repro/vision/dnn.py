@@ -188,14 +188,22 @@ def render_kp_targets(kps_per_frame, H, W, K=5):
 # ---------------------------------------------------------------------------
 # decoding + accuracy metrics (host-side, vs D(H))
 # ---------------------------------------------------------------------------
-def decode_detections(out, thresh=0.3, topk=50):
-    """-> per-frame list of (x0, y0, x1, y1, score)."""
+def detection_keep_heat(out):
+    """Device half of :func:`decode_detections`: sigmoid + 3x3 max-pool NMS.
+    Returns the suppressed heat (B, hs, ws). The batched server fleet step
+    precomputes this inside its jitted program (key ``"keep"``) so the
+    host-side decode is pure numpy and can overlap the next chunk's camera
+    step instead of enqueuing device work behind it."""
     heat = jax.nn.sigmoid(out["heat"])
-    # 3x3 max-pool NMS
     pooled = jax.lax.reduce_window(heat, -jnp.inf, jax.lax.max,
                                    (1, 3, 3, 1), (1, 1, 1, 1), "SAME")
-    keep = jnp.where(heat >= pooled - 1e-6, heat, 0.0)
-    keep_np = np.asarray(keep[..., 0])
+    return jnp.where(heat >= pooled - 1e-6, heat, 0.0)[..., 0]
+
+
+def decode_detections(out, thresh=0.3, topk=50):
+    """-> per-frame list of (x0, y0, x1, y1, score)."""
+    keep = out["keep"] if "keep" in out else detection_keep_heat(out)
+    keep_np = np.asarray(keep)
     wh = np.asarray(out["wh"])
     results = []
     for b in range(keep_np.shape[0]):

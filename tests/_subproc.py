@@ -1,0 +1,28 @@
+"""Shared subprocess harness for tests that need a host-forced multi-device
+JAX view. The device count locks at first JAX init and the rest of the
+suite needs the plain single-CPU backend, so each such test runs its body
+in a fresh interpreter with ``--xla_force_host_platform_device_count``.
+Used by test_distributed.py and test_fleet_sharded.py."""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def run_sub(body: str, devices: int = 8, timeout: int = 900):
+    script = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import sys
+        sys.path.insert(0, {SRC!r})
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        jax.config.update("jax_enable_x64", False)
+    """) + textwrap.dedent(body)
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=timeout)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+    return r.stdout

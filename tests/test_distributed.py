@@ -5,27 +5,10 @@ init and the rest of the suite needs the plain single-CPU view.
 """
 import subprocess
 import sys
-import textwrap
-from pathlib import Path
 
 import pytest
 
-SRC = str(Path(__file__).resolve().parents[1] / "src")
-
-
-def run_sub(body: str, devices: int = 8, timeout: int = 900):
-    script = textwrap.dedent(f"""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
-        import sys
-        sys.path.insert(0, {SRC!r})
-        import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-    """) + textwrap.dedent(body)
-    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
-                       text=True, timeout=timeout)
-    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
-    return r.stdout
+from _subproc import SRC, run_sub
 
 
 def test_moe_ep_matches_dense_under_mesh():
@@ -87,6 +70,7 @@ def test_sharded_train_step_matches_single_device():
 def test_compressed_psum_properties():
     run_sub("""
         from repro.distributed.mesh import make_mesh
+        from repro.distributed.sharding import shard_map
         from repro.distributed.compression import compressed_psum, ef_compressed_psum
         from functools import partial
         mesh = make_mesh((4,), ("pod",))
@@ -96,9 +80,8 @@ def test_compressed_psum_properties():
             return compressed_psum({"g": x}, "pod", method=method)["g"]
 
         for method in ("none", "bf16", "int8"):
-            fn = jax.jit(jax.shard_map(partial(f, method=method), mesh=mesh,
-                                       in_specs=P("pod"), out_specs=P("pod"),
-                                       check_vma=False))
+            fn = jax.jit(shard_map(partial(f, method=method), mesh,
+                                   in_specs=P("pod"), out_specs=P("pod")))
             out = fn(x)
             true = x.sum(0, keepdims=True).repeat(4, 0)
             rel = float(jnp.abs(out - true).max() / jnp.abs(true).max())
@@ -110,10 +93,9 @@ def test_compressed_psum_properties():
         def g(x, r):
             out, new_r = ef_compressed_psum({"g": x}, {"g": r}, "pod")
             return out["g"], new_r["g"]
-        fn = jax.jit(jax.shard_map(g, mesh=mesh,
-                                   in_specs=(P("pod"), P("pod")),
-                                   out_specs=(P("pod"), P("pod")),
-                                   check_vma=False))
+        fn = jax.jit(shard_map(g, mesh,
+                               in_specs=(P("pod"), P("pod")),
+                               out_specs=(P("pod"), P("pod"))))
         r = jnp.zeros_like(x)
         out, r = fn(x, r)
         assert float(jnp.abs(r).max()) > 0  # residual captured

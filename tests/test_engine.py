@@ -26,7 +26,8 @@ from repro.core.pipeline import (NetworkConfig, chunk_accuracy,
 from repro.core.quality import QualityConfig, qp_map_from_scores
 from repro.core.training import train_accmodel
 from repro.data.video import make_scene
-from repro.engine import (AccMPEGPolicy, MultiStreamEngine, StreamingEngine,
+from repro.engine import (AccMPEGPolicy, MultiStreamEngine,
+                          ReductoAccMPEGPolicy, StreamingEngine,
                           UniformPolicy)
 from repro.vision.dnn import decode_detections
 from repro.vision.train import train_final_dnn
@@ -240,6 +241,74 @@ def test_multistream_matches_sequential(dnn, accmodel, impl, acc_tol,
         for cs, cf in zip(seq[i].chunks, fleet.streams[i].chunks):
             assert cf.accuracy == pytest.approx(cs.accuracy, abs=acc_tol)
             assert cf.bytes == pytest.approx(cs.bytes, rel=byte_tol)
+
+
+def test_hybrid_reducto_accmpeg_parity(dnn, accmodel, scene, refs):
+    """Hybrid policy == frame-diff dropping + AccModel RoI on kept frames."""
+    thresh = 0.05
+    r = StreamingEngine(dnn).run(
+        ReductoAccMPEGPolicy(accmodel, QCFG, thresh=thresh), scene.frames,
+        refs=refs)
+    assert r.method == "reducto_accmpeg"
+    enc = jax.jit(encode_chunk)
+    oracle = []
+    for ci, chunk in _chunks(scene.frames):
+        feat = frame_diff_feature(chunk)
+        keep = np.asarray(feat) >= thresh
+        keep[0] = True
+        scores = accmodel.scores(chunk[:1])
+        qm, _ = qp_map_from_scores(scores[0], QCFG)
+        kept = chunk[jnp.asarray(np.where(keep)[0])]
+        decoded_kept, pbytes = enc(kept, qm[None])
+        full, j = [], -1
+        for t in range(chunk.shape[0]):
+            if keep[t]:
+                j += 1
+            full.append(decoded_kept[j])
+        oracle.append((chunk_accuracy(dnn, jnp.stack(full), refs[ci]),
+                       float(pbytes.sum())))
+    _assert_chunk_parity(r, oracle)
+
+
+def test_multistream_overlap_matches_serialized(dnn, accmodel):
+    """Double-buffered fleet loop returns identical per-stream results to
+    the serialized camera->server loop, and records pipeline timing."""
+    N = 2
+    scenes = [make_scene("dashcam", seed=90 + i, T=20, H=H, W=W)
+              for i in range(N)]
+    frames = np.stack([s.frames for s in scenes])
+    refs = [make_reference(s.frames, dnn, qp_hi=30) for s in scenes]
+    runs = {}
+    for overlap in (False, True):
+        runs[overlap] = MultiStreamEngine(
+            dnn, accmodel, QCFG, impl="exact",
+            overlap=overlap).run(frames, refs=refs)
+    for i in range(N):
+        for cs_, co in zip(runs[False].streams[i].chunks,
+                           runs[True].streams[i].chunks):
+            assert co.accuracy == pytest.approx(cs_.accuracy, abs=1e-9)
+            assert co.bytes == pytest.approx(cs_.bytes, rel=1e-9)
+    t = runs[True].timing
+    assert t is not None and t.wall_s > 0
+    assert len(t.camera_s) == len(t.server_s) == len(t.host_s) == 2
+    assert t.serialized_s > 0 and t.overlap_speedup > 0
+
+
+def test_fleet_step_pallas_matches_exact(accmodel):
+    """The registry's pallas backend rides the fused fleet step off-TPU
+    (automatic jnp-tile fallback) and matches the exact backend."""
+    from repro.serve.steps import make_camera_fleet_step
+
+    frames = jnp.stack([
+        jnp.asarray(make_scene("dashcam", seed=50 + i, T=10, H=H,
+                               W=W).frames) for i in range(2)])
+    d_ex, b_ex, s_ex = make_camera_fleet_step(accmodel, QCFG,
+                                              impl="exact")(frames)
+    d_pa, b_pa, s_pa = make_camera_fleet_step(accmodel, QCFG,
+                                              impl="pallas")(frames)
+    np.testing.assert_allclose(np.asarray(d_pa), np.asarray(d_ex), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(b_pa), np.asarray(b_ex), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_pa), np.asarray(s_ex), atol=1e-6)
 
 
 def test_shared_stream_delays_properties():

@@ -1,0 +1,98 @@
+"""Sharded fleet-serving semantics under a real (host-forced) stream mesh.
+
+Subprocess-isolated (shared harness in tests/_subproc.py): the device count
+is locked at first JAX init and the rest of the suite needs the plain
+single-CPU view. Pins the shard_map-lowered camera fleet step and the
+sharded MultiStreamEngine (per-stream accuracy/bytes) to the single-device
+vmap path.
+"""
+import functools
+
+from _subproc import run_sub as _run_sub
+
+run_sub = functools.partial(_run_sub, devices=4)
+
+
+# indented to match the 8-space test bodies so textwrap.dedent sees one
+# uniform block after concatenation
+_SETUP = """
+        from repro.core.accmodel import AccModel, accmodel_init
+        from repro.core.quality import QualityConfig
+        from repro.vision.dnn import FinalDNN, init_net
+        H, W, T, N = 64, 96, 10, 8
+        rng = np.random.RandomState(7)
+        frames = np.clip(rng.rand(N, 2 * T, H, W, 3) * 1.3 - 0.15,
+                         0, 1).astype(np.float32)
+        am = AccModel(accmodel_init(jax.random.PRNGKey(0), 8))
+        qcfg = QualityConfig(alpha=0.3, gamma=2, qp_hi=30, qp_lo=42)
+        dnn = FinalDNN("detection",
+                       init_net("detection", jax.random.PRNGKey(1), width=8))
+"""
+
+
+def test_sharded_camera_step_matches_vmap():
+    """shard_map lowering over a 4-way stream mesh is bit-identical to the
+    single-device vmap program (decoded frames, bytes, scores)."""
+    run_sub(_SETUP + """
+        from repro.distributed.mesh import make_stream_mesh
+        from repro.serve.steps import make_camera_fleet_step, stream_sharding
+        assert len(jax.devices()) == 4
+        mesh = make_stream_mesh(4)
+        batch = jnp.asarray(frames[:, :T])
+        for impl in ("fast", "exact"):
+            step_v = make_camera_fleet_step(am, qcfg, impl=impl)
+            step_m = make_camera_fleet_step(am, qcfg, impl=impl, mesh=mesh)
+            dv, pv, sv = step_v(batch)
+            dm, pm, sm = step_m(jax.device_put(batch, stream_sharding(mesh)))
+            assert dm.sharding.is_equivalent_to(stream_sharding(mesh),
+                                                dm.ndim)
+            np.testing.assert_allclose(np.asarray(dm), np.asarray(dv),
+                                       atol=1e-6)
+            np.testing.assert_allclose(np.asarray(pm), np.asarray(pv),
+                                       rtol=1e-6)
+            np.testing.assert_allclose(np.asarray(sm), np.asarray(sv),
+                                       atol=1e-6)
+            print(impl, "sharded==vmap OK")
+    """)
+
+
+def test_sharded_multistream_engine_matches_vmap():
+    """End-to-end MultiStreamEngine on a 4-way stream mesh (mesh="auto",
+    double-buffered) reproduces the single-device vmap path's per-stream
+    accuracy and bytes; server outputs ride the same sharding."""
+    run_sub(_SETUP + """
+        from repro.engine import MultiStreamEngine
+        r_v = MultiStreamEngine(dnn, am, qcfg, impl="fast",
+                                mesh=None, overlap=False).run(frames)
+        r_m = MultiStreamEngine(dnn, am, qcfg, impl="fast",
+                                mesh="auto", overlap=True).run(frames)
+        assert r_m.n_streams == N and len(r_m.camera_s) == 2
+        assert r_m.timing is not None and r_m.timing.wall_s > 0
+        for i in range(N):
+            for cv, cm in zip(r_v.streams[i].chunks, r_m.streams[i].chunks):
+                assert abs(cv.accuracy - cm.accuracy) < 1e-6, \\
+                    (i, cv.accuracy, cm.accuracy)
+                assert abs(cv.bytes - cm.bytes) / max(cv.bytes, 1.0) < 1e-5
+        print("sharded engine==vmap OK",
+              r_m.timing.summary()["overlap_speedup"])
+    """)
+
+
+def test_stream_mesh_helpers():
+    """stream_mesh_for picks the widest divisor mesh; local fallback is a
+    1-device stream mesh usable by the same step builder."""
+    run_sub(_SETUP + """
+        from repro.distributed.mesh import (STREAM_AXIS, make_local_stream_mesh,
+                                            make_stream_mesh, stream_mesh_for)
+        from repro.serve.steps import make_camera_fleet_step
+        assert dict(make_stream_mesh().shape) == {STREAM_AXIS: 4}
+        assert dict(stream_mesh_for(8).shape) == {STREAM_AXIS: 4}
+        assert dict(stream_mesh_for(6).shape) == {STREAM_AXIS: 3}
+        assert dict(stream_mesh_for(7).shape) == {STREAM_AXIS: 1}
+        local = make_local_stream_mesh()
+        assert dict(local.shape) == {STREAM_AXIS: 1}
+        step = make_camera_fleet_step(am, qcfg, mesh=local)
+        d, p, s = step(jnp.asarray(frames[:, :T]))
+        assert d.shape == frames[:, :T].shape
+        print("mesh helpers OK")
+    """)

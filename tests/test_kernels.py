@@ -60,6 +60,23 @@ def test_frame_fused_matches_codec(hw):
     np.testing.assert_allclose(np.asarray(b2), np.asarray(b1), rtol=1e-3)
 
 
+def test_frame_fused_pframe_reference(hw=(64, 96)):
+    """The serving path's P-frame mode: residual coding against the previous
+    decoded frame must match codec.encode_frame(reference=...) through the
+    actual kernel semantics (interpret mode)."""
+    H, W = hw
+    k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+    prev = jax.random.uniform(k1, (H, W, 3))
+    frame = jnp.clip(prev + 0.05 * jax.random.normal(k2, (H, W, 3)), 0, 1)
+    qmap = jnp.full((H // 16, W // 16), 34.0)
+    ref_dec, _ = encode_frame(prev, qmap)
+    d1, b1 = encode_frame(frame, qmap, reference=ref_dec)
+    d2, b2 = encode_frame_fused(frame, qmap, impl="interpret",
+                                reference=ref_dec)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d1), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(b2), np.asarray(b1), rtol=1e-3)
+
+
 # ---------------------------------------------------------------------------
 # accgrad_reduce
 # ---------------------------------------------------------------------------
