@@ -7,13 +7,15 @@ under experiments/models so re-runs are cheap.
 from __future__ import annotations
 
 import functools
+import json
 import sys
 import time
 from pathlib import Path
 
 import numpy as np
 
-SRC = Path(__file__).resolve().parents[1] / "src"
+REPO_ROOT = Path(__file__).resolve().parents[1]
+SRC = REPO_ROOT / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
 
@@ -21,10 +23,29 @@ H, W = 192, 320
 QP_HI, QP_LO = 30, 42
 
 _STATE = {}
+_ROWS: list = []  # rows emitted since the last drain (machine-readable)
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}")
+    _ROWS.append({"name": name, "us_per_call": float(us_per_call),
+                  "derived": derived})
+
+
+def drain_rows() -> list:
+    """Return (and clear) the rows emitted since the last drain."""
+    rows, _ROWS[:] = _ROWS[:], []
+    return rows
+
+
+def write_bench_json(bench: str, rows: list, root: Path = REPO_ROOT) -> Path:
+    """Persist one benchmark's emitted rows as ``BENCH_<bench>.json`` at
+    the repo root, so the perf trajectory is diffable across PRs."""
+    path = root / f"BENCH_{bench}.json"
+    payload = {"bench": bench, "generated_by": "benchmarks.run",
+               "unix_time": int(time.time()), "rows": rows}
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    return path
 
 
 def timer():

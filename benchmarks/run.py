@@ -12,11 +12,17 @@ import time
 import traceback
 
 
+#: benches whose rows are also persisted as BENCH_<name>.json at the repo
+#: root (machine-readable perf trajectory across PRs)
+JSON_BENCHES = ("control", "multistream")
+
+
 def main() -> None:
-    from benchmarks import (kernel_bench, multistream, multitask, paper_figs,
-                            roofline)
+    from benchmarks import (control, kernel_bench, multistream, multitask,
+                            paper_figs, roofline)
 
     benches = {
+        "control": control.run,
         "multistream": multistream.run,
         "fig6": paper_figs.fig6_stability,
         "fig7": paper_figs.fig7_tradeoff,
@@ -33,15 +39,20 @@ def main() -> None:
         "kernels": kernel_bench.kernel_microbench,
         "roofline": roofline.run,
     }
+    from benchmarks import common
+
     wanted = sys.argv[1:] or list(benches)
     print("name,us_per_call,derived")
     failures = 0
     for name in wanted:
         fn = benches[name]
+        common.drain_rows()  # rows emitted from here on belong to `name`
         t0 = time.time()
         try:
             fn()
             print(f"bench/{name}_wall,{(time.time() - t0) * 1e6:.0f},ok")
+            if name in JSON_BENCHES:  # only a complete run may replace
+                common.write_bench_json(name, common.drain_rows())
         except Exception as e:
             failures += 1
             traceback.print_exc()

@@ -1,0 +1,32 @@
+"""Adaptive control plane for trace-driven serving (see engine/README.md).
+
+Three parts, consumed by the engines:
+
+- :mod:`repro.control.traces` — seeded, genre-based time-varying bandwidth
+  traces (``NetworkTrace`` + lte/wifi/drone generators) and the
+  transmit-time solvers that replace constant-bandwidth ``stream_delay``
+  on the serving path (``StreamingEngine(trace=...)``).
+- :mod:`repro.control.controller` — the per-stream AIMD ``RateController``
+  that picks encode knobs (qp_hi/qp_lo, AccModel threshold, frame-drop
+  aggressiveness) per chunk from observed delay and queue backlog; knobs
+  travel as traced arrays so per-chunk changes never retrigger XLA
+  compilation.
+- :mod:`repro.control.autoscaler` — the ``FleetAutoscaler`` that consumes
+  ``core.pipeline.FleetTiming`` stage occupancies to pick stream-mesh
+  width and server batch depth, with admission control that pads stream
+  joins/leaves to already-compiled fleet shapes.
+"""
+from repro.control.autoscaler import (AdmissionPlan, FleetAutoscaler,
+                                      ScaleDecision, pad_streams)
+from repro.control.controller import (ChunkObservation, ControlKnobs,
+                                      ControlledAccMPEGPolicy,
+                                      RateController)
+from repro.control.traces import (NetworkTrace, TRACE_GENRES, drone_trace,
+                                  lte_trace, make_trace, wifi_trace)
+
+__all__ = [
+    "AdmissionPlan", "ChunkObservation", "ControlKnobs",
+    "ControlledAccMPEGPolicy", "FleetAutoscaler", "NetworkTrace",
+    "RateController", "ScaleDecision", "TRACE_GENRES", "drone_trace",
+    "lte_trace", "make_trace", "pad_streams", "wifi_trace",
+]

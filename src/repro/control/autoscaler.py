@@ -1,0 +1,163 @@
+"""Fleet autoscaling from measured stage occupancy.
+
+``MultiStreamEngine`` measures what each serving stage actually costs per
+chunk interval (``core.pipeline.FleetTiming``: fused camera step, batched
+server DNN, host accounting, and the loop's wall clock). The
+:class:`FleetAutoscaler` turns those measurements into deployment
+decisions — the ROADMAP's open "server-side autoscaling" item:
+
+- **stream-mesh width**: when the camera stage saturates the wall clock,
+  shard the stream axis wider (more devices per
+  ``distributed.mesh.make_stream_mesh``); when everything idles, narrow.
+- **server batch depth**: when the server stage dominates, deepen the
+  double buffer (more chunks in flight hide server latency behind camera
+  encode); ``depth=1`` is the serialized loop.
+
+Admission control (:meth:`FleetAutoscaler.admit`) handles stream
+joins/leaves: fleet steps are compiled per (N, T, H, W, C) shape, so
+serving N±1 streams naively would recompile every chunk the fleet churns.
+Instead the active streams are padded up to a bucketed shape (multiples of
+the mesh width, rounded to powers of two) and shapes already compiled are
+reused — churn costs device idle lanes, never a recompile.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Set
+
+import numpy as np
+
+from repro.core.pipeline import FleetTiming
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleDecision:
+    """What the fleet should look like for the next serving interval."""
+
+    mesh_width: int
+    batch_depth: int  # chunks in flight; 1 = serialized, >=2 = overlapped
+    reason: str
+
+    @property
+    def overlap(self) -> bool:
+        return self.batch_depth >= 2
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionPlan:
+    """Padded fleet shape for the current set of active streams."""
+
+    n_active: int
+    n_padded: int
+    active: np.ndarray  # (n_padded,) bool — which lanes carry real streams
+    reused: bool        # True if a previously compiled shape was reused
+
+
+def stage_occupancy(timing: FleetTiming) -> Dict[str, float]:
+    """Fraction of the loop's wall clock each stage kept busy. With
+    overlap the fractions can sum past 1 — that is the pipelining."""
+    wall = max(timing.wall_s, 1e-12)
+    return {
+        "camera": float(np.sum(timing.camera_s)) / wall,
+        "server": float(np.sum(timing.server_s)) / wall,
+        "host": float(np.sum(timing.host_s)) / wall,
+    }
+
+
+class FleetAutoscaler:
+    """Occupancy-driven mesh-width / batch-depth policy + admission.
+
+    ``target_occupancy`` is the busy fraction above which a stage counts
+    as the bottleneck; below ``idle_fraction`` the fleet is
+    over-provisioned and scales back in. Decisions are deliberately
+    single-step (one knob notch per interval) — the same damping argument
+    as AIMD: occupancy measurements are noisy, and a fleet that jumps to
+    the "optimal" width on one sample oscillates.
+    """
+
+    def __init__(self, target_occupancy: float = 0.8,
+                 idle_fraction: float = 0.4,
+                 min_depth: int = 1, max_depth: int = 4,
+                 pad_pow2: bool = True):
+        self.target_occupancy = target_occupancy
+        self.idle_fraction = idle_fraction
+        self.min_depth = min_depth
+        self.max_depth = max_depth
+        self.pad_pow2 = pad_pow2
+        self._compiled_shapes: Set[int] = set()
+
+    # -- scaling --------------------------------------------------------------
+    def decide(self, timing: FleetTiming, n_streams: int,
+               mesh_width: int = 1, batch_depth: int = 2,
+               n_devices: Optional[int] = None) -> ScaleDecision:
+        """Pick the next (mesh_width, batch_depth) from measured timing."""
+        if n_devices is None:
+            import jax
+
+            n_devices = len(jax.devices())
+        occ = stage_occupancy(timing)
+        bottleneck = max(occ, key=occ.get)
+        if occ[bottleneck] < self.idle_fraction:
+            # everything idles: scale in one notch (narrower, shallower)
+            widths = [d for d in range(1, mesh_width)
+                      if n_streams % d == 0]
+            return ScaleDecision(
+                mesh_width=widths[-1] if widths else mesh_width,
+                batch_depth=max(batch_depth - 1, self.min_depth),
+                reason=f"idle (max occupancy {occ[bottleneck]:.2f})")
+        if bottleneck == "camera" and occ["camera"] >= self.target_occupancy:
+            wider = [d for d in range(mesh_width + 1, n_devices + 1)
+                     if n_streams % d == 0]
+            if wider:
+                return ScaleDecision(
+                    mesh_width=wider[0], batch_depth=batch_depth,
+                    reason=f"camera-bound ({occ['camera']:.2f}): widen "
+                           f"stream mesh {mesh_width}->{wider[0]}")
+        if bottleneck == "server" and occ["server"] >= self.target_occupancy \
+                and batch_depth < self.max_depth:
+            return ScaleDecision(
+                mesh_width=mesh_width, batch_depth=batch_depth + 1,
+                reason=f"server-bound ({occ['server']:.2f}): deepen "
+                       f"buffer {batch_depth}->{batch_depth + 1}")
+        return ScaleDecision(mesh_width=mesh_width, batch_depth=batch_depth,
+                             reason="steady")
+
+    # -- admission control ----------------------------------------------------
+    def admit(self, n_active: int, mesh_width: int = 1) -> AdmissionPlan:
+        """Pad ``n_active`` streams to a compiled-shape-friendly width.
+
+        The padded count is a multiple of ``mesh_width`` (shard_map
+        divisibility), bucketed to powers of two when ``pad_pow2`` so the
+        set of shapes ever compiled stays logarithmic under join/leave
+        churn; any already-compiled shape that fits is reused outright."""
+        if n_active < 1:
+            raise ValueError("admit needs at least one active stream")
+        fits = [s for s in self._compiled_shapes
+                if s >= n_active and s % mesh_width == 0]
+        if fits:
+            n_padded, reused = min(fits), True
+        else:
+            lanes = (n_active + mesh_width - 1) // mesh_width
+            if self.pad_pow2:  # bucket the per-shard lane count, so the
+                # result stays divisible by any mesh width
+                lanes = 1 << (lanes - 1).bit_length()
+            n_padded = lanes * mesh_width
+            self._compiled_shapes.add(n_padded)
+            reused = False
+        active = np.zeros(n_padded, bool)
+        active[:n_active] = True
+        return AdmissionPlan(n_active=n_active, n_padded=n_padded,
+                             active=active, reused=reused)
+
+
+def pad_streams(frames: np.ndarray, n_padded: int) -> np.ndarray:
+    """Pad a (N, T, H, W, C) fleet batch up to ``n_padded`` streams by
+    repeating the last stream (idle lanes carry real pixels so padded
+    fleet steps exercise the identical program)."""
+    n = frames.shape[0]
+    if n_padded < n:
+        raise ValueError(f"cannot pad {n} streams down to {n_padded}")
+    if n_padded == n:
+        return frames
+    fill = np.repeat(frames[-1:], n_padded - n, axis=0)
+    return np.concatenate([frames, fill], axis=0)

@@ -1,0 +1,203 @@
+"""Congestion-aware rate control for one camera stream.
+
+AccMPEG picks *where* to spend quality (the AccModel's macroblock scores);
+this module picks *how much* to spend per chunk, closing the loop against
+the network the camera actually sees. The :class:`RateController` is
+AIMD-shaped, like TCP and like the adaptive-configuration controllers the
+efficiency survey (Tang et al., 2025) identifies as the missing layer in
+camera analytics stacks: one scalar quality ``level`` in [0, 1] is cut
+multiplicatively when a chunk misses its delay budget (or the uplink shows
+backlog) and grown additively when there is headroom. The level maps to
+four encode knobs:
+
+    qp_hi / qp_lo       the two-level QP pair (§4) — higher QP = fewer bits
+    alpha               the AccModel score threshold — higher = smaller
+                        high-quality area
+    drop_thresh         frame-drop aggressiveness — frames whose change
+                        feature falls below it are replaced by the previous
+                        kept frame *before* encoding (a near-zero P-frame
+                        residual), the cheap SiEVE/Reducto-style temporal
+                        knob
+
+Knobs travel as one traced ``jnp`` array (:meth:`RateController.knob_array`
+-> ``core.quality.qp_maps_from_knobs_batched`` / the fused prep below), so
+per-chunk changes never retrigger XLA compilation — the engine keeps one
+compiled encode program while the controller sweeps the knob space
+(pinned by ``tests/test_control.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.engine import jit_encode
+from repro.engine.policies import QPPolicy, soft_drop_previous
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlKnobs:
+    """One chunk's encode configuration (host-side view)."""
+
+    alpha: float
+    qp_hi: float
+    qp_lo: float
+    drop_thresh: float
+
+    def as_array(self) -> jnp.ndarray:
+        """The traced representation handed to jitted programs."""
+        return jnp.asarray([self.alpha, self.qp_hi, self.qp_lo,
+                            self.drop_thresh], jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkObservation:
+    """What the engine feeds back after each chunk."""
+
+    n_bytes: float
+    stream_s: float        # transmit + RTT/2 (per-stream completion)
+    queue_s: float = 0.0   # uplink-busy wait before the upload started
+    compute_s: float = 0.0  # encode + camera-side model overhead
+    extra_rtt_s: float = 0.0
+
+    @property
+    def total_delay_s(self) -> float:
+        return self.compute_s + self.queue_s + self.stream_s \
+            + self.extra_rtt_s
+
+    @property
+    def goodput_bps(self) -> float:
+        """Observed uplink goodput (lower bound: includes the RTT/2)."""
+        return self.n_bytes * 8.0 / max(self.stream_s, 1e-9)
+
+
+def _lerp(lo: float, hi: float, x: float) -> float:
+    return lo + (hi - lo) * x
+
+
+class RateController:
+    """AIMD controller: delay budget in, per-chunk encode knobs out.
+
+    ``level=1`` is the richest configuration (lowest QPs, widest
+    high-quality area, no frame drops); ``level=0`` the leanest. A chunk
+    whose end-to-end delay exceeds ``delay_budget_s`` — or that had to
+    queue behind the previous chunk for more than ``backlog_tolerance`` of
+    the budget — is congestion: multiplicative decrease. A chunk finishing
+    under ``headroom * budget`` is room to spend: additive increase.
+    In between the controller holds (hysteresis keeps the knobs from
+    oscillating every chunk).
+    """
+
+    def __init__(self, delay_budget_s: float = 0.5,
+                 qp_hi_range: Tuple[float, float] = (30.0, 42.0),
+                 qp_lo_span: float = 10.0,
+                 alpha_range: Tuple[float, float] = (0.25, 0.6),
+                 drop_range: Tuple[float, float] = (0.0, 0.15),
+                 increase_step: float = 0.10,
+                 decrease_factor: float = 0.6,
+                 headroom: float = 0.7,
+                 backlog_tolerance: float = 0.25,
+                 init_level: float = 1.0):
+        self.delay_budget_s = delay_budget_s
+        self.qp_hi_range = qp_hi_range
+        self.qp_lo_span = qp_lo_span
+        self.alpha_range = alpha_range
+        self.drop_range = drop_range
+        self.increase_step = increase_step
+        self.decrease_factor = decrease_factor
+        self.headroom = headroom
+        self.backlog_tolerance = backlog_tolerance
+        self.init_level = init_level
+        self.reset()
+
+    def reset(self):
+        self.level = self.init_level
+        self.history: List[Tuple[ControlKnobs, ChunkObservation]] = []
+
+    # -- level -> knobs -------------------------------------------------------
+    def knobs(self) -> ControlKnobs:
+        x = 1.0 - self.level  # 0 = richest, 1 = leanest
+        qp_hi = _lerp(self.qp_hi_range[0], self.qp_hi_range[1], x)
+        return ControlKnobs(
+            alpha=_lerp(self.alpha_range[0], self.alpha_range[1], x),
+            qp_hi=qp_hi,
+            qp_lo=min(qp_hi + self.qp_lo_span, 51.0),
+            drop_thresh=_lerp(self.drop_range[0], self.drop_range[1], x),
+        )
+
+    def knob_array(self) -> jnp.ndarray:
+        return self.knobs().as_array()
+
+    # -- feedback -------------------------------------------------------------
+    def observe(self, obs: ChunkObservation,
+                used_knobs: ControlKnobs = None) -> ControlKnobs:
+        """Record the outcome of a chunk, then update the level for the
+        next one. ``used_knobs`` names the knob set the chunk was actually
+        encoded with — pipelined engines pass it because their feedback
+        arrives several dispatches late (default: the current knobs, which
+        is exact for the serial single-stream loop). Returns the new knob
+        set (convenience for callers that poll)."""
+        self.history.append((used_knobs or self.knobs(), obs))
+        budget = self.delay_budget_s
+        congested = (obs.total_delay_s > budget
+                     or obs.queue_s > self.backlog_tolerance * budget)
+        if congested:
+            self.level = max(self.level * self.decrease_factor, 0.0)
+        elif obs.total_delay_s < self.headroom * budget:
+            self.level = min(self.level + self.increase_step, 1.0)
+        return self.knobs()
+
+
+# ---------------------------------------------------------------------------
+# the controlled policy (StreamingEngine-compatible)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("gamma",))
+def _controlled_prep(chunk, scores, knobs, *, gamma: int):
+    """Fused knob application: scores + knobs -> QP map; change feature +
+    drop threshold -> effective frames (``engine.policies
+    .soft_drop_previous``: dropped frames become copies of the previous
+    kept frame at a static shape, so per-chunk drop changes cannot force
+    a recompile)."""
+    from repro.core.quality import dilate
+
+    mask = dilate(scores[0] >= knobs[0], gamma)
+    qmap = jnp.where(mask, knobs[1], knobs[2])[None]
+    frames_eff, keep = soft_drop_previous(chunk, knobs[3])
+    return frames_eff, qmap, keep
+
+
+class ControlledAccMPEGPolicy(QPPolicy):
+    """AccMPEG's camera loop with the RateController in the loop: the
+    AccModel still says *where* quality goes; the controller's knobs say
+    how high the two QP levels are, how much area qualifies (alpha), and
+    how aggressively static frames are dropped. All knob use is traced
+    (``_controlled_prep`` + the registry encoder), so the chunk loop keeps
+    exactly the compiled programs of its first chunk."""
+
+    name = "accmpeg_controlled"
+
+    def __init__(self, accmodel, controller: RateController,
+                 gamma: int = 2):
+        self.accmodel = accmodel
+        self.controller = controller
+        self.gamma = gamma
+
+    def warm(self, engine, chunk):
+        knobs = self.controller.knob_array()
+        scores = self.accmodel.scores(chunk[:1])
+        jax.block_until_ready(scores)
+        frames_eff, qmap, _ = _controlled_prep(chunk, scores, knobs,
+                                               gamma=self.gamma)
+        jax.block_until_ready(
+            jit_encode(engine.impl)(frames_eff, qmap)[0])
+
+    def encode_chunk(self, ctx):
+        knobs = self.controller.knob_array()
+        scores = ctx.time_overhead(self.accmodel.scores, ctx.chunk[:1])
+        frames_eff, qmap, _ = ctx.time_overhead(
+            lambda: _controlled_prep(ctx.chunk, scores, knobs,
+                                     gamma=self.gamma))
+        return ctx.encode(qmap, frames=frames_eff)

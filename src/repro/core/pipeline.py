@@ -51,10 +51,12 @@ class ChunkResult:
     overhead_s: float      # camera-side model cost (AccModel / heuristic)
     stream_s: float
     extra_rtt_s: float = 0.0  # server-driven feedback loops (DDS)
+    queue_s: float = 0.0   # uplink backlog wait (trace-aware accounting)
 
     @property
     def total_delay_s(self):
-        return self.encode_s + self.overhead_s + self.stream_s + self.extra_rtt_s
+        return (self.encode_s + self.overhead_s + self.stream_s
+                + self.extra_rtt_s + self.queue_s)
 
 
 @dataclasses.dataclass
@@ -74,17 +76,26 @@ class RunResult:
     def mean_bytes(self):
         return float(np.mean([c.bytes for c in self.chunks]))
 
+    @property
+    def p90_delay(self):
+        """Tail end-to-end chunk delay — the SLO the rate controller
+        targets (mean delay hides the queue spikes a fade causes)."""
+        return float(np.percentile([c.total_delay_s for c in self.chunks],
+                                   90))
+
     def summary(self):
         c = self.chunks
         return {
             "method": self.method,
             "accuracy": self.accuracy,
             "delay_s": self.mean_delay,
+            "p90_delay_s": self.p90_delay,
             "bytes_per_chunk": self.mean_bytes,
             "encode_s": float(np.mean([x.encode_s for x in c])),
             "overhead_s": float(np.mean([x.overhead_s for x in c])),
             "stream_s": float(np.mean([x.stream_s for x in c])),
             "extra_rtt_s": float(np.mean([x.extra_rtt_s for x in c])),
+            "queue_s": float(np.mean([x.queue_s for x in c])),
         }
 
 
@@ -169,6 +180,57 @@ def shared_stream_delays(stream_bytes: Sequence[float],
         sent = bits
         delays[i] = t + net.rtt_s / 2.0
     return delays
+
+
+class UplinkClock:
+    """Trace-aware delay accounting for one camera uplink (or one fleet's
+    shared uplink).
+
+    The constant-bandwidth model prices every chunk independently
+    (:func:`stream_delay`); with a time-varying trace
+    (:class:`repro.control.traces.NetworkTrace`, duck-typed here so the
+    core stays import-light) two new effects matter and this clock owns
+    both: the transmit time depends on *when* the upload starts
+    (``trace.transmit_time`` integrates rate over the trace), and chunk
+    ``ci+1`` cannot start uploading until chunk ``ci`` left the uplink —
+    during a fade the backlog queues, and that wait is charged as
+    ``queue_s`` on the chunk's :class:`ChunkResult`.
+
+    Chunk ``ci`` is captured at ``ci * chunk_size / fps`` (a live camera,
+    not a file read); it becomes ready to send after its camera-side
+    compute (``ready_s``), and starts as soon as the uplink frees up.
+    """
+
+    def __init__(self, trace, chunk_size: int = 10, fps: float = 30.0):
+        self.trace = trace
+        self.chunk_wall_s = chunk_size / fps
+        self.free_at_s = 0.0
+
+    def capture_s(self, ci: int) -> float:
+        return ci * self.chunk_wall_s
+
+    def send(self, ci: int, n_bytes: float, ready_s: float):
+        """One stream's transmission -> ``(stream_s, queue_s)``.
+        ``stream_s`` (transmit + RTT/2) matches :func:`stream_delay`'s
+        meaning; ``queue_s`` is the uplink-busy wait before it."""
+        ready = self.capture_s(ci) + ready_s
+        start = max(ready, self.free_at_s)
+        dt = self.trace.transmit_time(n_bytes, start)
+        self.free_at_s = start + dt
+        return dt + self.trace.rtt_s / 2.0, start - ready
+
+    def send_shared(self, ci: int, stream_bytes: Sequence[float],
+                    ready_s: float):
+        """Fleet variant: N chunk uploads start together and
+        processor-share the uplink (``trace.shared_transmit_times``).
+        Returns ``(per-stream stream_s list, queue_s)`` — the queue wait
+        is common to the batch (the fused camera step releases all
+        streams' chunks at once)."""
+        ready = self.capture_s(ci) + ready_s
+        start = max(ready, self.free_at_s)
+        durs = self.trace.shared_transmit_times(stream_bytes, start)
+        self.free_at_s = start + (max(durs) if durs else 0.0)
+        return [d + self.trace.rtt_s / 2.0 for d in durs], start - ready
 
 
 def make_reference(frames: np.ndarray, final_dnn, qp_hi: int = 30,

@@ -62,6 +62,18 @@ def qp_maps_from_scores_batched(scores: jnp.ndarray, cfg: QualityConfig):
     return qmaps, mask
 
 
+def qp_maps_from_knobs_batched(scores: jnp.ndarray, knobs: jnp.ndarray,
+                               gamma: int):
+    """Traced-knob variant of :func:`qp_maps_from_scores_batched` for the
+    rate-controlled serving path. ``knobs = [alpha, qp_hi, qp_lo, ...]``
+    arrives as a traced array (``repro.control.controller.ControlKnobs``),
+    so per-chunk controller changes never retrigger XLA compilation; only
+    ``gamma`` stays static (it sets the dilation window shape)."""
+    mask = dilate(scores >= knobs[0], gamma)
+    qmaps = jnp.where(mask, knobs[1], knobs[2])[:, None]
+    return qmaps, mask
+
+
 def mask_stability(masks: jnp.ndarray) -> jnp.ndarray:
     """Fig. 6: fraction of macroblocks whose assignment matches frame 0,
     per frame distance. masks: (T, mb_h, mb_w) bool -> (T,)."""

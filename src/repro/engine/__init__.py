@@ -4,12 +4,15 @@ from repro.engine.engine import ChunkContext, StreamingEngine, jit_encode
 from repro.engine.multistream import FleetResult, MultiStreamEngine
 from repro.engine.policies import (AccMPEGPolicy, DDSPolicy, EAARPolicy,
                                    QPPolicy, ReductoAccMPEGPolicy,
-                                   ReductoPolicy, UniformPolicy, VigilPolicy,
-                                   boxes_to_mask, frame_diff_feature)
+                                   ReductoPolicy, SiEVEPolicy, UniformPolicy,
+                                   VigilPolicy, boxes_to_mask,
+                                   class_presence, frame_diff_feature,
+                                   soft_drop_previous)
 
 __all__ = [
     "AccMPEGPolicy", "ChunkContext", "DDSPolicy", "EAARPolicy",
     "FleetResult", "MultiStreamEngine", "QPPolicy", "ReductoAccMPEGPolicy",
-    "ReductoPolicy", "StreamingEngine", "UniformPolicy", "VigilPolicy",
-    "boxes_to_mask", "frame_diff_feature", "jit_encode",
+    "ReductoPolicy", "SiEVEPolicy", "StreamingEngine", "UniformPolicy",
+    "VigilPolicy", "boxes_to_mask", "class_presence", "frame_diff_feature",
+    "jit_encode", "soft_drop_previous",
 ]

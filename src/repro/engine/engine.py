@@ -27,7 +27,7 @@ import jax.numpy as jnp
 
 from repro.codec.codec import CHUNK_ENCODERS, encode_chunk_uniform
 from repro.core.pipeline import (ChunkResult, NetworkConfig, RunResult,
-                                 chunk_accuracy, stream_delay)
+                                 UplinkClock, chunk_accuracy, stream_delay)
 
 
 @functools.lru_cache()
@@ -95,8 +95,12 @@ class ChunkContext:
         return self._timed_encode(encode_chunk_uniform, frames, qp)
 
     def add_server_rtt(self):
-        """Charge one camera<->server round trip (server-driven methods)."""
-        self.extra_rtt_s += self.engine.net.rtt_s
+        """Charge one camera<->server round trip (server-driven methods).
+        On the trace path the trace defines the network, so its RTT is
+        charged — mixing the constant net's RTT into a traced run would
+        price two different networks in one chunk."""
+        self.extra_rtt_s += self.engine.net.rtt_s \
+            if self.engine.trace is None else self.engine.trace.rtt_s
 
     def server_predict(self, decoded):
         """Run the final DNN (server-side, excluded from delay)."""
@@ -109,14 +113,32 @@ class StreamingEngine:
     ``impl`` selects the RoI chunk-encoder backend from the
     ``codec.CHUNK_ENCODERS`` registry for every ``ctx.encode`` call —
     "exact" (default, bit-stable paper accounting), "fast", "fast_exact",
-    or "pallas" (fused mbcodec tile on TPU; jnp tile elsewhere)."""
+    or "pallas" (fused mbcodec tile on TPU; jnp tile elsewhere).
+
+    ``trace`` switches streaming-delay accounting from the constant
+    ``net`` model to a time-varying bandwidth trace
+    (``control.traces.NetworkTrace``): transmit time integrates rate over
+    the trace at the chunk's actual send time, and chunks that find the
+    uplink still busy are charged ``queue_s`` (``core.pipeline
+    .UplinkClock``; chunk ci is captured at ``ci * chunk_size / fps``).
+
+    ``controller`` (``control.controller.RateController``) closes the
+    feedback loop: after every chunk the engine reports a
+    ``ChunkObservation`` (bytes, stream/queue/compute delay) and the
+    controller adjusts its knobs for the next chunk. Policies that consume
+    the knobs (``ControlledAccMPEGPolicy``) read them as traced arrays, so
+    the adjustment never recompiles anything."""
 
     def __init__(self, final_dnn, net: NetworkConfig = NetworkConfig(),
-                 chunk_size: int = 10, impl: str = "exact"):
+                 chunk_size: int = 10, impl: str = "exact",
+                 trace=None, controller=None, fps: float = 30.0):
         self.final_dnn = final_dnn
         self.net = net
         self.chunk_size = chunk_size
         self.impl = impl
+        self.trace = trace
+        self.controller = controller
+        self.fps = fps
 
     def chunks(self, frames):
         T = frames.shape[0]
@@ -136,6 +158,10 @@ class StreamingEngine:
         accounting. ``refs``: precomputed per-chunk D(H) outputs
         (``core.pipeline.make_reference``), shared across methods."""
         policy.reset()
+        if self.controller is not None:
+            self.controller.reset()
+        clock = None if self.trace is None else \
+            UplinkClock(self.trace, self.chunk_size, self.fps)
         results = []
         for ci, chunk in self.chunks(frames):
             if ci == 0:
@@ -144,11 +170,33 @@ class StreamingEngine:
                 # running camera, not cold compilation)
                 policy.warm(self, chunk)
             ctx = self.camera_chunk(policy, ci, chunk)
-            stream_s = sum(stream_delay(b, self.net)
-                           for b in ctx.transmissions)
+            queue_s = 0.0
+            if clock is None:
+                stream_s = sum(stream_delay(b, self.net)
+                               for b in ctx.transmissions)
+            else:
+                stream_s = 0.0
+                ready = ctx.encode_s + ctx.overhead_s
+                for b in ctx.transmissions:
+                    s, q = clock.send(ci, b, ready)
+                    stream_s += s
+                    queue_s += q
+                    # a later transmission of the same chunk (DDS's second
+                    # pass) starts after this upload ends — advance its
+                    # ready point so the wait is not double-charged as
+                    # queue on top of the summed stream_s
+                    ready += q + (s - self.trace.rtt_s / 2.0)
             ref = refs[ci] if refs is not None else chunk
             acc = chunk_accuracy(self.final_dnn, ctx.decoded, ref)
             results.append(ChunkResult(acc, sum(ctx.transmissions),
                                        ctx.encode_s, ctx.overhead_s,
-                                       stream_s, ctx.extra_rtt_s))
+                                       stream_s, ctx.extra_rtt_s, queue_s))
+            if self.controller is not None:
+                from repro.control.controller import ChunkObservation
+
+                self.controller.observe(ChunkObservation(
+                    n_bytes=sum(ctx.transmissions), stream_s=stream_s,
+                    queue_s=queue_s,
+                    compute_s=ctx.encode_s + ctx.overhead_s,
+                    extra_rtt_s=ctx.extra_rtt_s))
         return RunResult(policy.name, results)

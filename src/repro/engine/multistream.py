@@ -52,7 +52,8 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core.pipeline import (ChunkResult, FleetTiming, NetworkConfig,
-                                 RunResult, shared_stream_delays)
+                                 RunResult, UplinkClock,
+                                 shared_stream_delays)
 from repro.core.quality import QualityConfig
 from repro.serve.steps import (make_camera_fleet_step, make_server_fleet_step,
                                stream_sharding)
@@ -119,6 +120,26 @@ class MultiStreamEngine:
     ``overlap`` double-buffer the batched server DNN + host accounting
                against the next chunk's camera step (False = serialized
                camera -> server -> host loop, the pre-pipeline shape).
+    ``depth``  chunks in flight when overlapped (2 = the classic double
+               buffer; deeper buffers let slow server steps hide behind
+               several camera steps — the autoscaler's batch-depth knob).
+    ``trace``  time-varying shared-uplink bandwidth trace
+               (``control.traces.NetworkTrace``): per-chunk uploads
+               processor-share the trace at their actual send time and
+               queue behind the previous chunk's upload
+               (``core.pipeline.UplinkClock.send_shared``); replaces the
+               constant ``net`` accounting.
+    ``controller`` fleet-wide ``control.controller.RateController``: the
+               camera step is built knob-taking (``make_camera_fleet_step
+               (knobs=True)``), the controller's traced knob array rides
+               along each dispatch (no recompiles), and each finished
+               chunk's tail delay feeds back. With ``overlap=True`` the
+               feedback lags by the pipeline depth, exactly like a real
+               double-buffered deployment.
+    ``autoscaler`` ``control.autoscaler.FleetAutoscaler``: after each run
+               the measured ``FleetTiming`` is turned into a
+               ``ScaleDecision`` (``self.last_scale``); ``apply_scale()``
+               adopts it for the next run.
     """
 
     def __init__(self, final_dnn, accmodel,
@@ -126,7 +147,8 @@ class MultiStreamEngine:
                  net: Optional[NetworkConfig] = None,
                  chunk_size: int = 10, impl: str = "fast",
                  mesh: Union[Mesh, str, None] = None,
-                 overlap: bool = True):
+                 overlap: bool = True, depth: int = 2, trace=None,
+                 controller=None, autoscaler=None, fps: float = 30.0):
         self.final_dnn = final_dnn
         self.accmodel = accmodel
         self.qcfg = qcfg
@@ -135,6 +157,12 @@ class MultiStreamEngine:
         self.impl = impl
         self.mesh = mesh
         self.overlap = overlap
+        self.depth = depth
+        self.trace = trace
+        self.controller = controller
+        self.autoscaler = autoscaler
+        self.fps = fps
+        self.last_scale = None  # autoscaler's most recent ScaleDecision
         self._steps = {}  # resolved mesh (or None) -> (camera, server)
         self._warm = {}   # (shape, mesh, refs is None) -> steady-state times
         self._refs_prepared = None  # (refs object, prepared copy)
@@ -149,13 +177,36 @@ class MultiStreamEngine:
 
     def _steps_for(self, n_streams: int):
         mesh = self._resolve_mesh(n_streams)
-        if mesh not in self._steps:
-            self._steps[mesh] = (
+        # the camera step's arity depends on controller presence, so the
+        # cache key must too (toggling controller between runs would
+        # otherwise dispatch into a step of the wrong arity)
+        key = (mesh, self.controller is not None)
+        if key not in self._steps:
+            self._steps[key] = (
                 make_camera_fleet_step(self.accmodel, self.qcfg,
-                                       impl=self.impl, mesh=mesh),
+                                       impl=self.impl, mesh=mesh,
+                                       knobs=self.controller is not None),
                 make_server_fleet_step(self.final_dnn, mesh=mesh),
             )
-        return self._steps[mesh] + (mesh,)
+        return self._steps[key] + (mesh,)
+
+    def apply_scale(self, decision=None) -> "MultiStreamEngine":
+        """Adopt a ``ScaleDecision`` (default: the last one) for the next
+        ``run``: stream-mesh width, buffer depth, and overlap on/off.
+        Compiled steps for previously used meshes stay cached."""
+        d = decision or self.last_scale
+        if d is None:
+            raise ValueError("no ScaleDecision to apply (run first, or "
+                             "pass one)")
+        if d.mesh_width > 1:
+            from repro.distributed.mesh import make_stream_mesh
+
+            self.mesh = make_stream_mesh(d.mesh_width)
+        else:
+            self.mesh = None
+        self.overlap = d.overlap
+        self.depth = d.batch_depth
+        return self
 
     def _prepare_refs(self, refs):
         """Normalize references and precompute their device half once, up
@@ -186,7 +237,8 @@ class MultiStreamEngine:
         return prepared
 
     # -- chunk post-processing (host side) ------------------------------------
-    def _finish(self, p, per_stream, net, refs, timing, overlap: bool):
+    def _finish(self, p, per_stream, net, refs, timing, overlap: bool,
+                clock=None):
         """Server-output scoring + uplink accounting for one chunk; in
         overlapped mode this host work runs while the device executes the
         next chunk's camera step."""
@@ -202,7 +254,11 @@ class MultiStreamEngine:
         N = len(per_stream)
         pbytes = np.asarray(p["pbytes"])
         nbytes = [float(pbytes[i].sum()) for i in range(N)]
-        delays = shared_stream_delays(nbytes, net)
+        if clock is None:
+            delays, queue_s = shared_stream_delays(nbytes, net), 0.0
+        else:
+            delays, queue_s = clock.send_shared(p["ci"], nbytes,
+                                                p["cam_dt"])
         for i in range(N):
             out_i = {k: v[i] for k, v in outs.items()}
             if refs is not None:
@@ -212,7 +268,19 @@ class MultiStreamEngine:
             acc = self.final_dnn.accuracy(out_i, ref)
             per_stream[i].append(ChunkResult(
                 acc, nbytes[i], encode_s=p["cam_dt"], overhead_s=0.0,
-                stream_s=delays[i]))
+                stream_s=delays[i], queue_s=queue_s))
+        if self.controller is not None:
+            from repro.control.controller import ChunkObservation
+
+            # the fleet shares one uplink, so the controller tracks the
+            # batch tail: the slowest stream's completion is what a fade
+            # turns into backlog for the next chunk interval; used_knobs
+            # is what this chunk was dispatched with (under overlap the
+            # level has moved since)
+            self.controller.observe(ChunkObservation(
+                n_bytes=float(np.sum(nbytes)), stream_s=max(delays),
+                queue_s=queue_s, compute_s=p["cam_dt"]),
+                used_knobs=p.get("knobs"))
         timing.host_s.append(time.perf_counter() - t0)
 
     # -- the pipelined fleet loop ---------------------------------------------
@@ -230,6 +298,16 @@ class MultiStreamEngine:
         timing = FleetTiming()
         starts = list(range(0, T - T % cs, cs))
         refs = self._prepare_refs(refs)
+        controlled = self.controller is not None
+        if controlled:
+            self.controller.reset()
+        clock = None if self.trace is None else \
+            UplinkClock(self.trace, cs, self.fps)
+
+        def camera(batch):
+            if controlled:  # traced knob array: fresh values, same program
+                return cam_step(batch, self.controller.knob_array())
+            return cam_step(batch)
 
         def put(x):
             x = jnp.asarray(x)
@@ -242,19 +320,20 @@ class MultiStreamEngine:
         # timing.server_s report (wall_s stays the measured ground truth
         # for the whole loop). Cached per (shape, mesh, refs mode) so
         # repeat runs skip the warm-up device work entirely.
-        warm_key = (frames.shape, mesh, refs is None, self.overlap)
+        warm_key = (frames.shape, mesh, refs is None, self.overlap,
+                    controlled)
         if warm_key in self._warm:
             cam_steady_s, server_steady_s = self._warm[warm_key]
         else:
             warm = put(frames[:, : cs])
-            d0, _, _ = cam_step(warm)
+            d0, _, _ = camera(warm)
             jax.block_until_ready(d0)
             jax.block_until_ready(
                 jax.tree_util.tree_leaves(server_step(d0)))
             cam_steady_s = server_steady_s = 0.0
             if self.overlap:  # serialized mode measures stages per chunk
                 t0 = time.perf_counter()
-                jax.block_until_ready(cam_step(warm)[0])
+                jax.block_until_ready(camera(warm)[0])
                 cam_steady_s = time.perf_counter() - t0
                 t0 = time.perf_counter()
                 jax.block_until_ready(
@@ -265,21 +344,23 @@ class MultiStreamEngine:
                 server_steady_s = time.perf_counter() - t0
             self._warm[warm_key] = (cam_steady_s, server_steady_s)
 
-        # two chunks stay in flight (double buffer): at iteration ci the
-        # host scores chunk ci-2, whose server outputs are long since
-        # ready, while the device queue still holds server(ci-1) and
-        # camera(ci) — so host accounting overlaps BOTH device stages and
-        # the host never stalls waiting for the server step
+        # ``depth`` chunks stay in flight (2 = the classic double buffer):
+        # at iteration ci the host scores chunk ci-depth, whose server
+        # outputs are long since ready, while the device queue still holds
+        # the later chunks' server and camera steps — so host accounting
+        # overlaps the device stages and the host never stalls waiting for
+        # the server step
         pending: List[dict] = []
-        depth = 2
+        depth = self.depth
         t_run = time.perf_counter()
         for ci, s in enumerate(starts):
             batch = put(frames[:, s : s + cs])
+            knobs_used = self.controller.knobs() if controlled else None
             t0 = time.perf_counter()
-            decoded, pbytes, _ = cam_step(batch)  # async dispatch
+            decoded, pbytes, _ = camera(batch)    # async dispatch
             if self.overlap and len(pending) >= depth:
                 self._finish(pending.pop(0), per_stream, net, refs,
-                             timing, True)
+                             timing, True, clock)
             jax.block_until_ready(decoded)
             cam_dt = cam_steady_s if self.overlap \
                 else time.perf_counter() - t0
@@ -289,7 +370,8 @@ class MultiStreamEngine:
             ref_outs = server_step(batch) if refs is None else None
             pending.append(dict(ci=ci, outs=outs, ref_outs=ref_outs,
                                 pbytes=pbytes, cam_dt=cam_dt,
-                                server_steady_s=server_steady_s))
+                                server_steady_s=server_steady_s,
+                                knobs=knobs_used))
             if not self.overlap:
                 jax.block_until_ready(jax.tree_util.tree_leaves(outs))
                 if ref_outs is not None:  # attribute the ref pass to server
@@ -297,11 +379,16 @@ class MultiStreamEngine:
                         jax.tree_util.tree_leaves(ref_outs))
                 timing.server_s.append(time.perf_counter() - t1)
                 self._finish(pending.pop(0), per_stream, net, refs,
-                             timing, False)
+                             timing, False, clock)
         while pending:
             self._finish(pending.pop(0), per_stream, net, refs, timing,
-                         self.overlap)
+                         self.overlap, clock)
         timing.wall_s = time.perf_counter() - t_run
+        if self.autoscaler is not None:
+            width = mesh.devices.size if mesh is not None else 1
+            self.last_scale = self.autoscaler.decide(
+                timing, N, mesh_width=width,
+                batch_depth=self.depth if self.overlap else 1)
         streams = [RunResult(f"accmpeg_fleet[{i}]", per_stream[i])
                    for i in range(N)]
         return FleetResult(streams, timing.camera_s, timing=timing)

@@ -50,6 +50,20 @@ def frame_diff_feature(chunk) -> jnp.ndarray:
     return jnp.concatenate([jnp.ones((1,)), d * 10.0]) + 0 * gx
 
 
+def soft_drop_previous(chunk: jnp.ndarray, drop_thresh) -> jnp.ndarray:
+    """Traced frame drop at a static shape: frames whose change feature
+    (:func:`frame_diff_feature`) falls below ``drop_thresh`` are *replaced
+    by the previous kept frame* rather than removed, so the encode shape
+    never changes (the repeated P-frame residual quantizes to ~0 bits).
+    ``drop_thresh`` may be a traced scalar — the rate controller moves it
+    per chunk without recompiling. Frame 0 always survives. Shared by the
+    single-stream controlled policy and the fleet knob step (vmapped)."""
+    T = chunk.shape[0]
+    keep = (frame_diff_feature(chunk) >= drop_thresh).at[0].set(True)
+    last_kept = jax.lax.cummax(jnp.where(keep, jnp.arange(T), -1))
+    return chunk[last_kept], keep
+
+
 def drop_static_frames(ctx: ChunkContext, feat_fn, thresh: float):
     """Reducto's temporal filter: timed frame-diff feature -> keep mask
     (the first frame is always sent)."""
@@ -245,6 +259,64 @@ class ReductoPolicy(QPPolicy):
         from repro.codec.codec import encode_chunk_uniform
 
         keep = drop_static_frames(ctx, self._feat, self.thresh)
+        kept = ctx.chunk[jnp.asarray(np.where(keep)[0])]
+        _ensure_compiled(self._warmed, (kept.shape, self.qp),
+                         lambda: encode_chunk_uniform(kept, self.qp))
+        decoded_kept = ctx.encode_uniform(self.qp, frames=kept)
+        return reconstruct_dropped(decoded_kept, keep)
+
+
+def class_presence(out) -> jnp.ndarray:
+    """Per-frame class-presence vector from a cheap model's dense output:
+    mean activation per output channel (detection heat / segmentation
+    logits / keypoint channels). SiEVE's semantic filter compares these
+    across frames — a frame whose presence vector barely moved carries no
+    new semantic content for the query."""
+    for key in ("heat", "seg", "kp"):
+        if key in out:
+            return jax.nn.sigmoid(out[key]).mean(axis=(1, 2))
+    raise KeyError(f"no dense head in output (keys: {sorted(out)})")
+
+
+class SiEVEPolicy(QPPolicy):
+    """SiEVE-style semantic frame filtering (Elgamal et al.): a cheap
+    camera-side model scores every frame's class presence, and frames
+    whose presence *delta vs the last sent frame* stays below ``delta``
+    are dropped — the server reuses the last sent frame's result
+    (``reconstruct_dropped``, mirroring :class:`ReductoPolicy`). Unlike
+    Reducto's pixel differencing this keys on semantic change: a lighting
+    flicker moves pixels but not class presence; a new object moves both.
+    Sent frames go out at one uniform QP."""
+
+    name = "sieve"
+
+    def __init__(self, cheap_model, qp: int = 32, delta: float = 0.02):
+        self.camera = cheap_model
+        self.qp = qp
+        self.delta = delta
+        self._warmed = set()  # kept-frame shapes already compiled
+
+    def warm(self, engine, chunk):
+        from repro.codec.codec import encode_chunk_uniform
+
+        jax.block_until_ready(self.camera.predict(chunk))
+        jax.block_until_ready(encode_chunk_uniform(chunk, self.qp)[0])
+
+    def encode_chunk(self, ctx):
+        from repro.codec.codec import encode_chunk_uniform
+
+        def presence_fn(chunk):
+            return class_presence(self.camera.predict(chunk))
+
+        pres = np.asarray(ctx.time_overhead(presence_fn, ctx.chunk))
+        T = ctx.chunk.shape[0]
+        keep = np.zeros(T, bool)
+        keep[0] = True
+        last = pres[0]
+        for t in range(1, T):  # delta vs last *sent* frame, not neighbor
+            if np.abs(pres[t] - last).max() >= self.delta:
+                keep[t] = True
+                last = pres[t]
         kept = ctx.chunk[jnp.asarray(np.where(keep)[0])]
         _ensure_compiled(self._warmed, (kept.shape, self.qp),
                          lambda: encode_chunk_uniform(kept, self.qp))

@@ -22,7 +22,7 @@ from repro.distributed.sharding import Rules, shard_map
 
 
 def make_camera_fleet_step(accmodel, qcfg, impl: str = "fast",
-                           mesh: Mesh = None):
+                           mesh: Mesh = None, knobs: bool = False):
     """Build the fused per-chunk camera step for N streams.
 
     Returns ``step(chunks)`` with ``chunks (N, T, H, W, C)`` ->
@@ -42,25 +42,51 @@ def make_camera_fleet_step(accmodel, qcfg, impl: str = "fast",
     cross-stream collectives), so one host serves hundreds of cameras.
     N must divide the mesh width; ``mesh=None`` keeps the single-device
     vmap lowering.
+
+    ``knobs=True`` builds the rate-controlled variant ``step(chunks,
+    knob_array)``: alpha/qp_hi/qp_lo/drop_thresh arrive as a traced array
+    (``control.controller.ControlKnobs.as_array``) instead of baked
+    ``qcfg`` constants, so the fleet controller can move them every chunk
+    without retriggering compilation (only ``qcfg.gamma`` stays static —
+    it shapes the dilation window). Frames whose change feature falls
+    below the drop threshold are replaced by the previous kept frame
+    before encoding — the same static-shape soft drop as the
+    single-stream ``ControlledAccMPEGPolicy``, vmapped over streams. The
+    knob array is replicated across the stream mesh (every camera shares
+    the fleet's uplink, so one knob set governs the fleet).
     """
     from repro.codec.codec import CHUNK_ENCODERS
     from repro.core.accmodel import accmodel_apply
-    from repro.core.quality import qp_maps_from_scores_batched
+    from repro.core.quality import (qp_maps_from_knobs_batched,
+                                    qp_maps_from_scores_batched)
     from repro.distributed.mesh import STREAM_AXIS
+    from repro.engine.policies import soft_drop_previous
 
     params = accmodel.params
     enc = CHUNK_ENCODERS.resolve(impl)
 
-    def _step(chunks):
-        scores = jax.nn.sigmoid(accmodel_apply(params, chunks[:, 0]))
-        qmaps, _ = qp_maps_from_scores_batched(scores, qcfg)
+    def _encode(chunks, qmaps, scores):
         decoded, pbytes = jax.vmap(enc)(chunks, qmaps)
         return decoded, pbytes, scores
 
+    def _step(chunks):
+        scores = jax.nn.sigmoid(accmodel_apply(params, chunks[:, 0]))
+        qmaps, _ = qp_maps_from_scores_batched(scores, qcfg)
+        return _encode(chunks, qmaps, scores)
+
+    def _step_knobs(chunks, knob_arr):
+        scores = jax.nn.sigmoid(accmodel_apply(params, chunks[:, 0]))
+        qmaps, _ = qp_maps_from_knobs_batched(scores, knob_arr, qcfg.gamma)
+        chunks = jax.vmap(
+            lambda c: soft_drop_previous(c, knob_arr[3])[0])(chunks)
+        return _encode(chunks, qmaps, scores)
+
+    fn = _step_knobs if knobs else _step
     if mesh is None:
-        return jax.jit(_step)
+        return jax.jit(fn)
     spec = P(STREAM_AXIS)
-    sharded = shard_map(_step, mesh, in_specs=spec,
+    in_specs = (spec, P()) if knobs else spec
+    sharded = shard_map(fn, mesh, in_specs=in_specs,
                         out_specs=(spec, spec, spec))
     return jax.jit(sharded)
 

@@ -1,0 +1,369 @@
+"""Adaptive control plane: traces, rate controller, autoscaler.
+
+Covers the three subsystem contracts plus the PR's compile guarantee:
+
+1. NetworkTrace — seeded determinism, exact piecewise transmit-time
+   integration (incl. wrap), and the processor-sharing solver degenerating
+   to the constant-bandwidth accounting on a flat trace.
+2. UplinkClock — saturated uplinks accumulate queue_s chunk over chunk.
+3. RateController — AIMD: multiplicative decrease on congestion, additive
+   increase with headroom, knobs monotone in the level and bounded.
+4. Zero recompiles — a full controlled engine run whose knobs move every
+   chunk reuses exactly the compiled programs of its first chunk (the
+   warm-check discipline of tests/test_engine.py, asserted on the jit
+   caches themselves).
+5. FleetAutoscaler — occupancy-driven decisions and admission padding
+   that reuses compiled fleet shapes under join/leave churn.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.control import (ControlledAccMPEGPolicy, FleetAutoscaler,
+                           NetworkTrace, RateController, TRACE_GENRES,
+                           make_trace, pad_streams)
+from repro.control.autoscaler import stage_occupancy
+from repro.control.controller import ChunkObservation, _controlled_prep
+from repro.control.traces import constant_trace
+from repro.core.accmodel import AccModel, accmodel_init
+from repro.core.pipeline import (FleetTiming, NetworkConfig, UplinkClock,
+                                 stream_delay)
+from repro.engine import MultiStreamEngine, StreamingEngine
+from repro.engine.engine import _jit_encoder
+from repro.vision.dnn import FinalDNN, init_net
+
+H, W = 64, 112
+
+
+@pytest.fixture(scope="module")
+def dnn():
+    return FinalDNN("detection",
+                    init_net("detection", jax.random.PRNGKey(0), width=8))
+
+
+@pytest.fixture(scope="module")
+def accmodel():
+    return AccModel(accmodel_init(jax.random.PRNGKey(1), 8))
+
+
+@pytest.fixture(scope="module")
+def frames():
+    from repro.data.video import make_scene
+
+    return make_scene("dashcam", seed=5, T=40, H=H, W=W).frames
+
+
+# ---------------------------------------------------------------------------
+# traces
+# ---------------------------------------------------------------------------
+def test_trace_genres_seeded_and_positive():
+    for genre in TRACE_GENRES:
+        a = make_trace(genre, seed=4, duration_s=30.0)
+        b = make_trace(genre, seed=4, duration_s=30.0)
+        c = make_trace(genre, seed=5, duration_s=30.0)
+        np.testing.assert_array_equal(a.bw_bps, b.bw_bps)
+        assert not np.array_equal(a.bw_bps, c.bw_bps)
+        assert a.genre == genre and a.min_bps > 0
+        # calibration helper hits the requested mean exactly
+        assert make_trace(genre, seed=4).scaled_to_mean(2e6).mean_bps \
+            == pytest.approx(2e6)
+    with pytest.raises(KeyError):
+        make_trace("starlink")
+
+
+def test_transmit_time_piecewise_exact():
+    tr = NetworkTrace(np.array([1e6, 2e6]), dt_s=1.0, rtt_s=0.0)
+    # 1.5e6 bits from t=0: 1 s at 1 Mbps + 0.25 s at 2 Mbps
+    assert tr.transmit_time(1.5e6 / 8, 0.0) == pytest.approx(1.25)
+    # mid-segment start at t=1.5 wraps into the 1 Mbps segment
+    assert tr.transmit_time(1.5e6 / 8, 1.5) == pytest.approx(1.0)
+    assert tr.transmit_time(0.0, 3.3) == 0.0
+    # start time changes the answer — the whole point of a trace
+    assert tr.transmit_time(1e6 / 8, 1.0) == pytest.approx(0.5)
+
+
+def test_constant_trace_matches_stream_delay():
+    net = NetworkConfig(bandwidth_bps=7.5e5, rtt_s=0.08)
+    tr = constant_trace(net.bandwidth_bps, rtt_s=net.rtt_s)
+    for b in (0.0, 123.0, 54321.0):
+        assert tr.transmit_time(b) + tr.rtt_s / 2 \
+            == pytest.approx(stream_delay(b, net))
+
+
+def test_shared_transmit_times_processor_sharing():
+    tr = constant_trace(1e6, rtt_s=0.0)
+    # equal sizes: exact equal split
+    durs = tr.shared_transmit_times([1000.0, 1000.0])
+    assert all(d == pytest.approx(16e-3) for d in durs)
+    # zero-byte stream finishes instantly and donates its share
+    durs = tr.shared_transmit_times([0.0, 1000.0])
+    assert durs[0] == 0.0 and durs[1] == pytest.approx(8e-3)
+    # last finisher sees the serialized total (work conservation)
+    sizes = [100.0, 900.0, 4000.0]
+    durs = tr.shared_transmit_times(sizes)
+    assert max(durs) == pytest.approx(sum(sizes) * 8.0 / 1e6)
+    # time-varying uplink: faster second segment finishes sooner than the
+    # flat-rate answer
+    tr2 = NetworkTrace(np.array([1e6, 4e6]), dt_s=1.0, rtt_s=0.0)
+    d_var = tr2.shared_transmit_times([2e6 / 8, 2e6 / 8])
+    assert max(d_var) < max(tr.shared_transmit_times([2e6 / 8, 2e6 / 8]))
+
+
+def test_transmit_time_survives_rounding_boundaries():
+    """dt_s values like 0.1 make floor(seg_end/dt) re-yield the same
+    segment under float rounding; the integer segment walk must still
+    terminate and conserve work (regression: this used to loop forever)."""
+    tr = NetworkTrace(np.full(1000, 1e6), dt_s=0.1, rtt_s=0.0)
+    # crosses many segment boundaries, starts mid-trace
+    assert tr.transmit_time(1.5e5 / 8, 4.25) == pytest.approx(0.15)
+    durs = tr.shared_transmit_times([1e5 / 8, 1e5 / 8], 4.25)
+    assert max(durs) == pytest.approx(0.2)
+    # sweep start offsets around boundaries on an awkward dt
+    tr3 = NetworkTrace(np.full(50, 2e6), dt_s=0.3, rtt_s=0.0)
+    for s in np.arange(0.0, 3.0, 0.137):
+        assert tr3.transmit_time(1e6 / 8, s) == pytest.approx(0.5)
+
+
+def test_uplink_clock_queues_on_saturation():
+    # 1 KB/s uplink, 1 KB chunks arriving every 1/3 s: each chunk waits
+    # behind all previous ones; backlog grows by (1 - 1/3) s per chunk
+    clk = UplinkClock(constant_trace(8e3, rtt_s=0.0), chunk_size=10,
+                      fps=30.0)
+    queues = [clk.send(ci, 1000.0, 0.0)[1] for ci in range(4)]
+    assert queues[0] == 0.0
+    deltas = np.diff(queues)
+    np.testing.assert_allclose(deltas, 1.0 - 1.0 / 3.0, rtol=1e-9)
+    # shared sends queue the batch as one unit
+    clk2 = UplinkClock(constant_trace(8e3, rtt_s=0.1), chunk_size=10,
+                       fps=30.0)
+    d0, q0 = clk2.send_shared(0, [500.0, 500.0], 0.0)
+    d1, q1 = clk2.send_shared(1, [500.0, 500.0], 0.0)
+    assert q0 == 0.0 and q1 == pytest.approx(1.0 - 1.0 / 3.0)
+    assert max(d0) == pytest.approx(1.0 + 0.05)
+
+
+def test_trace_multi_transmission_no_double_charge(dnn, frames):
+    """Two transmissions of one chunk (DDS's two passes) on an idle, fast
+    uplink: the second starts when the first ends — already priced into
+    stream_s — so queue_s must stay zero, and each pass pays its own
+    RTT/2 exactly as the constant-bandwidth accounting does."""
+    from repro.engine import DDSPolicy
+
+    bw, rtt = 1e9, 0.1  # effectively instant uploads, visible RTT
+    trace = constant_trace(bw, rtt_s=rtt)
+    # net deliberately disagrees with the trace: on the trace path every
+    # RTT charge (streaming AND server feedback) must come from the trace
+    r = StreamingEngine(dnn, net=NetworkConfig(bw, rtt_s=0.7),
+                        chunk_size=10, trace=trace).run(DDSPolicy(),
+                                                        frames[:20])
+    for c in r.chunks:
+        assert c.queue_s == pytest.approx(0.0, abs=1e-9)
+        assert c.stream_s == pytest.approx(
+            c.bytes * 8 / bw + rtt, rel=1e-6)  # 2 passes x RTT/2
+        assert c.extra_rtt_s == pytest.approx(rtt)
+
+
+# ---------------------------------------------------------------------------
+# rate controller
+# ---------------------------------------------------------------------------
+def test_controller_aimd_shape():
+    ctrl = RateController(delay_budget_s=0.5)
+    rich = ctrl.knobs()
+    # congestion: multiplicative decrease, knobs move leaner together
+    ctrl.observe(ChunkObservation(n_bytes=1e4, stream_s=1.0, queue_s=0.3))
+    lean = ctrl.knobs()
+    assert lean.qp_hi > rich.qp_hi and lean.alpha > rich.alpha
+    assert lean.drop_thresh > rich.drop_thresh
+    assert lean.qp_lo == pytest.approx(lean.qp_hi + ctrl.qp_lo_span)
+    # repeated congestion saturates at the leanest config, never past it
+    for _ in range(40):
+        ctrl.observe(ChunkObservation(n_bytes=1e4, stream_s=9.0,
+                                      queue_s=9.0))
+    floor = ctrl.knobs()
+    assert floor.qp_hi == pytest.approx(ctrl.qp_hi_range[1])
+    assert floor.qp_lo <= 51.0
+    # headroom: additive climb back to the richest config
+    for _ in range(40):
+        ctrl.observe(ChunkObservation(n_bytes=1e3, stream_s=0.01))
+    assert ctrl.knobs() == rich
+    # backlog alone (delay still under budget) also counts as congestion
+    ctrl2 = RateController(delay_budget_s=1.0)
+    ctrl2.observe(ChunkObservation(n_bytes=1e3, stream_s=0.2,
+                                   queue_s=0.3))
+    assert ctrl2.level < 1.0
+    # in-between delays hold the level (hysteresis band)
+    ctrl3 = RateController(delay_budget_s=1.0, headroom=0.7)
+    ctrl3.level = 0.5
+    ctrl3.observe(ChunkObservation(n_bytes=1e3, stream_s=0.85))
+    assert ctrl3.level == 0.5
+    assert len(ctrl3.history) == 1
+    ctrl3.reset()
+    assert ctrl3.level == ctrl3.init_level and not ctrl3.history
+
+
+def test_controlled_prep_soft_drop():
+    """Dropped frames are replaced by the previous kept frame (static
+    shapes), the first frame always survives."""
+    chunk = jnp.asarray(np.random.RandomState(0).rand(6, 32, 48, 3)
+                        .astype(np.float32))
+    scores = jnp.ones((1, 2, 3)) * 0.9
+    # drop everything: all frames become frame 0
+    knobs = jnp.asarray([0.5, 30.0, 42.0, 1e9], jnp.float32)
+    frames_eff, qmap, keep = _controlled_prep(chunk, scores, knobs,
+                                              gamma=1)
+    assert bool(keep[0]) and not bool(keep[1:].any())
+    np.testing.assert_allclose(np.asarray(frames_eff),
+                               np.broadcast_to(np.asarray(chunk[0]),
+                                               chunk.shape))
+    # keep everything: identity
+    knobs = jnp.asarray([0.5, 30.0, 42.0, -1.0], jnp.float32)
+    frames_eff, qmap, keep = _controlled_prep(chunk, scores, knobs,
+                                              gamma=1)
+    assert bool(keep.all())
+    np.testing.assert_allclose(np.asarray(frames_eff), np.asarray(chunk))
+    # scores above alpha get the hi QP
+    assert np.asarray(qmap).min() == pytest.approx(30.0)
+
+
+def test_controlled_run_zero_recompiles(dnn, accmodel, frames):
+    """The acceptance guard: per-chunk knob changes across a controlled
+    run must not retrigger XLA compilation — every jitted program on the
+    encode path keeps the cache entries of its first (warm) chunk."""
+    trace = constant_trace(2e5, rtt_s=0.02)  # saturated: knobs must move
+    ctrl = RateController(delay_budget_s=0.4)
+    engine = StreamingEngine(dnn, chunk_size=10, impl="fast", trace=trace,
+                             controller=ctrl)
+    policy = ControlledAccMPEGPolicy(accmodel, ctrl)
+    engine.run(policy, frames)
+    sizes = (_controlled_prep._cache_size(),
+             _jit_encoder("fast")._cache_size(),
+             accmodel._jit._cache_size())
+    # the controller really did move the knobs chunk-to-chunk
+    qp_path = [k.qp_hi for k, _ in ctrl.history]
+    assert len(set(qp_path)) >= 2, qp_path
+    # a second run sweeps a different knob path: caches must not grow
+    engine.trace = constant_trace(5e4, rtt_s=0.02)
+    engine.run(policy, frames)
+    assert len({k.qp_hi for k, _ in ctrl.history}) >= 2
+    assert (_controlled_prep._cache_size(),
+            _jit_encoder("fast")._cache_size(),
+            accmodel._jit._cache_size()) == sizes
+    # and the controlled results stay well-formed
+    res = engine.run(policy, frames)
+    assert len(res.chunks) == 4
+    assert all(c.bytes > 0 and c.queue_s >= 0.0 for c in res.chunks)
+
+
+def test_controlled_congestion_cuts_bytes(dnn, accmodel, frames):
+    """Under a saturated uplink the controller sheds bytes vs its own
+    first (richest) chunk — the feedback loop actually bites."""
+    ctrl = RateController(delay_budget_s=0.4)
+    engine = StreamingEngine(dnn, chunk_size=10, impl="fast",
+                             trace=constant_trace(5e4, rtt_s=0.02),
+                             controller=ctrl)
+    res = engine.run(ControlledAccMPEGPolicy(accmodel, ctrl), frames)
+    assert res.chunks[-1].bytes < 0.7 * res.chunks[0].bytes
+    # queue built up at some point (that's what triggered the cuts)
+    assert max(c.queue_s for c in res.chunks) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# fleet: controlled camera step + autoscaler
+# ---------------------------------------------------------------------------
+def test_fleet_controlled_trace_single_compile(dnn, accmodel, frames):
+    """Knob-taking fleet camera step: one compile for the whole controlled
+    run, trace-aware shared-uplink accounting on every chunk."""
+    N = 2
+    fleet = np.stack([frames[:20]] * N)
+    ctrl = RateController(delay_budget_s=0.4)
+    engine = MultiStreamEngine(dnn, accmodel, impl="fast",
+                               trace=constant_trace(1e5, rtt_s=0.02),
+                               controller=ctrl)
+    res = engine.run(fleet)
+    cam_step = engine._steps[(None, True)][0]
+    assert cam_step._cache_size() == 1
+    assert len(ctrl.history) == 2  # one observation per chunk interval
+    for stream in res.streams:
+        assert all(c.queue_s >= 0.0 and c.bytes > 0 for c in stream.chunks)
+    # run again (same shapes, moved knobs): still exactly one program
+    engine.run(fleet)
+    assert cam_step._cache_size() == 1
+    # history pairs carry the knobs the chunk was dispatched with
+    assert all(k is not None for k, _ in ctrl.history)
+    # toggling the controller off rebuilds a step of the right arity
+    engine.controller = None
+    plain = engine.run(fleet)
+    assert len(plain.streams[0].chunks) == 2
+
+
+def test_fleet_depth_knob_matches_double_buffer(dnn, accmodel, frames):
+    """A deeper in-flight buffer (the autoscaler's batch-depth knob)
+    changes scheduling only — per-stream results match depth 2, and
+    apply_scale threads the decision's depth into the engine."""
+    from repro.control import ScaleDecision
+
+    fleet = np.stack([frames] * 2)  # 4 chunks: depth 3 actually engages
+    runs = {}
+    for depth in (2, 3):
+        eng = MultiStreamEngine(dnn, accmodel, impl="exact", depth=depth)
+        runs[depth] = eng.run(fleet)
+    for s2, s3 in zip(runs[2].streams, runs[3].streams):
+        for c2, c3 in zip(s2.chunks, s3.chunks):
+            assert c3.accuracy == pytest.approx(c2.accuracy, abs=1e-9)
+            assert c3.bytes == pytest.approx(c2.bytes, rel=1e-9)
+    eng = MultiStreamEngine(dnn, accmodel)
+    eng.apply_scale(ScaleDecision(mesh_width=1, batch_depth=3,
+                                  reason="server-bound"))
+    assert eng.depth == 3 and eng.overlap
+    eng.apply_scale(ScaleDecision(mesh_width=1, batch_depth=1,
+                                  reason="idle"))
+    assert not eng.overlap
+
+
+def test_autoscaler_decisions():
+    scaler = FleetAutoscaler(target_occupancy=0.8, idle_fraction=0.4)
+    cam_bound = FleetTiming(camera_s=[0.9], server_s=[0.1],
+                            host_s=[0.02], wall_s=1.0)
+    d = scaler.decide(cam_bound, n_streams=8, mesh_width=1,
+                      batch_depth=2, n_devices=4)
+    assert d.mesh_width == 2 and d.batch_depth == 2
+    assert "camera-bound" in d.reason
+    srv_bound = FleetTiming(camera_s=[0.2], server_s=[0.9],
+                            host_s=[0.02], wall_s=1.0)
+    d = scaler.decide(srv_bound, n_streams=8, mesh_width=2,
+                      batch_depth=2, n_devices=4)
+    assert d.batch_depth == 3 and d.mesh_width == 2 and d.overlap
+    idle = FleetTiming(camera_s=[0.1], server_s=[0.1], host_s=[0.01],
+                       wall_s=1.0)
+    d = scaler.decide(idle, n_streams=8, mesh_width=2, batch_depth=2,
+                      n_devices=4)
+    assert d.mesh_width == 1 and d.batch_depth == 1 and "idle" in d.reason
+    # depth never exceeds max_depth, widths always divide the stream count
+    d = scaler.decide(srv_bound, n_streams=8, mesh_width=2,
+                      batch_depth=4, n_devices=4)
+    assert d.batch_depth == 4
+    occ = stage_occupancy(cam_bound)
+    assert occ["camera"] == pytest.approx(0.9)
+
+
+def test_autoscaler_admission_churn():
+    scaler = FleetAutoscaler()
+    p3 = scaler.admit(3, mesh_width=2)
+    assert p3.n_padded == 4 and not p3.reused
+    assert p3.active.sum() == 3 and p3.active[:3].all()
+    p4 = scaler.admit(4, mesh_width=2)
+    assert p4.n_padded == 4 and p4.reused  # join fits the compiled shape
+    p5 = scaler.admit(5, mesh_width=2)
+    assert p5.n_padded == 8 and not p5.reused
+    assert scaler.admit(2, mesh_width=2).reused  # leave: reuse 4 again
+    # non-power-of-two mesh widths bucket the per-shard lane count
+    p = FleetAutoscaler().admit(4, mesh_width=3)
+    assert p.n_padded == 6 and p.n_padded % 3 == 0
+    with pytest.raises(ValueError):
+        scaler.admit(0)
+    padded = pad_streams(np.zeros((3, 10, 8, 8, 3)), 4)
+    assert padded.shape[0] == 4
+    np.testing.assert_array_equal(padded[3], padded[2])
+    with pytest.raises(ValueError):
+        pad_streams(np.zeros((3, 1, 1, 1, 1)), 2)

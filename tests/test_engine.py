@@ -311,6 +311,78 @@ def test_fleet_step_pallas_matches_exact(accmodel):
     np.testing.assert_allclose(np.asarray(s_pa), np.asarray(s_ex), atol=1e-6)
 
 
+def test_sieve_parity(dnn, scene, refs):
+    """SiEVE == class-presence-delta frame filtering + uniform encode of
+    the kept frames + server-side reuse of the last sent result."""
+    from repro.engine import SiEVEPolicy, class_presence
+
+    cam = train_final_dnn("detection", "dashcam", steps=30, H=H, W=W,
+                          width=8, cache=True, name="engine_par_cam")
+    qp, delta = 32, 0.01
+    r = StreamingEngine(dnn).run(SiEVEPolicy(cam, qp=qp, delta=delta),
+                                 scene.frames, refs=refs)
+    assert r.method == "sieve"
+    oracle, any_dropped = [], False
+    for ci, chunk in _chunks(scene.frames):
+        pres = np.asarray(class_presence(cam.predict(chunk)))
+        keep = np.zeros(chunk.shape[0], bool)
+        keep[0], last = True, pres[0]
+        for t in range(1, chunk.shape[0]):
+            if np.abs(pres[t] - last).max() >= delta:
+                keep[t], last = True, pres[t]
+        any_dropped |= not keep.all()
+        kept = chunk[jnp.asarray(np.where(keep)[0])]
+        decoded_kept, pbytes = encode_chunk_uniform(kept, qp)
+        full, j = [], -1
+        for t in range(chunk.shape[0]):
+            j += int(keep[t])
+            full.append(decoded_kept[j])
+        oracle.append((chunk_accuracy(dnn, jnp.stack(full), refs[ci]),
+                       float(pbytes.sum())))
+    _assert_chunk_parity(r, oracle)
+    assert any_dropped  # the semantic filter actually filtered something
+
+
+def test_shared_stream_delays_edge_cases():
+    """Single stream, zero-byte chunks, and one stream dominating the
+    shared uplink (the corner shapes the fleet accounting must survive)."""
+    # single stream: owns the whole uplink, degenerates to stream_delay
+    net1 = NetworkConfig.shared(1e6, 1, rtt_s=0.1)
+    [d] = shared_stream_delays([2000.0], net1)
+    assert d == pytest.approx(stream_delay(2000.0, net1))
+    # zero-byte chunks finish in RTT/2 and donate their share instantly
+    net = NetworkConfig.shared(1e6, 3, rtt_s=0.1)
+    delays = shared_stream_delays([0.0, 0.0, 3000.0], net)
+    assert delays[0] == delays[1] == pytest.approx(net.rtt_s / 2)
+    assert delays[2] == pytest.approx(3000.0 * 8 / 1e6 + net.rtt_s / 2)
+    # all-zero batch: everyone pays only the propagation delay
+    assert shared_stream_delays([0.0, 0.0], net) \
+        == pytest.approx([net.rtt_s / 2] * 2)
+    # one stream dominating: the small ones see (nearly) the fair-share
+    # finish of their own bytes; the big one the serialized total
+    sizes = [10.0, 10.0, 1e6]
+    delays = shared_stream_delays(sizes, net)
+    assert delays[2] == pytest.approx(sum(sizes) * 8 / 1e6 + 0.05)
+    assert delays[0] == delays[1] < 1e-3 + 0.05 + 1e-9
+    # order of the input must not matter (delays follow the stream)
+    rev = shared_stream_delays(sizes[::-1], net)
+    assert rev[0] == pytest.approx(delays[2])
+
+
+def test_pipeline_makespan_edge_cases():
+    from repro.core.pipeline import pipeline_makespan
+
+    assert pipeline_makespan([], []) == 0.0
+    # single chunk: no overlap possible
+    assert pipeline_makespan([2.0], [3.0]) == pytest.approx(5.0)
+    # server-dominated: one camera fill, then the server runs back-to-back
+    assert pipeline_makespan([1.0] * 3, [10.0] * 3) == pytest.approx(31.0)
+    # camera-dominated: cameras back-to-back, one trailing server step
+    assert pipeline_makespan([10.0] * 3, [1.0] * 3) == pytest.approx(31.0)
+    # zero-cost server stage collapses to the camera total
+    assert pipeline_makespan([1.0, 2.0], [0.0, 0.0]) == pytest.approx(3.0)
+
+
 def test_shared_stream_delays_properties():
     net = NetworkConfig.shared(1e6, 4, rtt_s=0.1)
     sizes = [1000.0, 2000.0, 4000.0, 8000.0]

@@ -56,6 +56,38 @@ def test_sharded_camera_step_matches_vmap():
     """)
 
 
+def test_sharded_knob_step_matches_vmap():
+    """The rate-controlled (knob-taking) camera step shards like the plain
+    one: the replicated knob array reproduces the baked-qcfg program when
+    the knobs equal the config, on mesh and off."""
+    run_sub(_SETUP + """
+        from repro.distributed.mesh import make_stream_mesh
+        from repro.serve.steps import make_camera_fleet_step, stream_sharding
+        mesh = make_stream_mesh(4)
+        batch = jnp.asarray(frames[:, :T])
+        knobs = jnp.asarray([qcfg.alpha, qcfg.qp_hi, qcfg.qp_lo, 0.0],
+                            jnp.float32)
+        d0, p0, s0 = make_camera_fleet_step(am, qcfg, impl="fast")(batch)
+        step_k = make_camera_fleet_step(am, qcfg, impl="fast", knobs=True)
+        dk, pk, sk = step_k(batch, knobs)
+        step_km = make_camera_fleet_step(am, qcfg, impl="fast", knobs=True,
+                                         mesh=mesh)
+        dm, pm, sm = step_km(jax.device_put(batch, stream_sharding(mesh)),
+                             knobs)
+        for got in ((dk, pk, sk), (dm, pm, sm)):
+            np.testing.assert_allclose(np.asarray(got[0]), np.asarray(d0),
+                                       atol=1e-6)
+            np.testing.assert_allclose(np.asarray(got[1]), np.asarray(p0),
+                                       rtol=1e-6)
+        # knob changes re-enter the same compiled program (no recompile)
+        assert step_km._cache_size() == 1
+        step_km(jax.device_put(batch, stream_sharding(mesh)),
+                jnp.asarray([0.5, 34.0, 46.0, 0.1], jnp.float32))
+        assert step_km._cache_size() == 1
+        print("knob step sharded==vmap OK")
+    """)
+
+
 def test_sharded_multistream_engine_matches_vmap():
     """End-to-end MultiStreamEngine on a 4-way stream mesh (mesh="auto",
     double-buffered) reproduces the single-device vmap path's per-stream
