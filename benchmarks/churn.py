@@ -1,0 +1,156 @@
+"""Closed-loop autoscaling under stream churn: mid-stream re-admission
+vs a static max-width fleet.
+
+The deployment question this answers: a fleet provisioned for N_max
+cameras spends the full N_max-lane camera step on every chunk interval
+even when most cameras have left — the pre-closed-loop engines could only
+re-shape *between* runs. ``MultiStreamEngine.serve_loop`` re-admits the
+active set through ``FleetAutoscaler.admit``'s power-of-two padded shapes
+every interval, so a churned-down fleet runs a small compiled program
+while the set of programs ever compiled stays O(log N_max).
+
+Setup: N_max streams serve a 21-interval schedule that churns 4 -> 2 -> 1
+active streams on a shared uplink fast enough that camera compute is the
+delay driver (the regime closed-loop scaling targets — the uplink story
+is BENCH_control's). The static baseline is the same loop with its
+admission pinned to the N_max shape (exactly what a fleet sized for
+N_max and never re-admitted pays); per-chunk bytes are identical by
+construction, so the comparison isolates the fleet-shape effect.
+
+Verdict rows check the acceptance property: per-interval batch-tail p90
+delay (the fleet SLO the autoscaler targets) no worse than static at
+equal-or-better accuracy, with the compiled-shape count logarithmic in
+the churn events.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+
+CHUNK = 10
+FPS = 30.0
+H, W = 96, 160
+N_MAX = 4
+N_INTERVALS = 21
+
+
+def _interval_tails(res):
+    """Per-interval batch-tail delay: the slowest active stream's
+    completion, grouped by absolute chunk index (streams churn, so a
+    stream's k-th chunk is not interval k)."""
+    tails = {}
+    for r in res.streams:
+        for c in r.chunks:
+            tails[c.ci] = max(tails.get(c.ci, 0.0), c.total_delay_s)
+    return [tails[ci] for ci in sorted(tails)]
+
+
+def _schedule():
+    """4 active for 2 intervals, 2 for 4, then a long 1-stream tail —
+    the over-provisioned regime where closed-loop admission pays."""
+    from repro.control import ChurnEvent
+
+    return [ChurnEvent(2, leave=(2, 3)), ChurnEvent(6, leave=(1,))]
+
+
+def mid_stream_rescale():
+    from benchmarks.control import _models
+    from repro.control import FleetAutoscaler
+    from repro.core.pipeline import NetworkConfig, make_reference
+    from repro.core.quality import QualityConfig
+    from repro.data.video import make_scene
+    from repro.engine import MultiStreamEngine
+
+    dnn, am = _models()
+    qcfg = QualityConfig(alpha=0.3, gamma=2, qp_hi=30, qp_lo=42)
+    frames = np.stack([
+        make_scene("dashcam", seed=70 + i, T=N_INTERVALS * CHUNK,
+                   H=H, W=W).frames for i in range(N_MAX)])
+    refs = [make_reference(frames[i], dnn, qp_hi=30, chunk_size=CHUNK)
+            for i in range(N_MAX)]
+    events = _schedule()
+    # generous shared uplink: camera compute, not bytes, drives delay
+    net = NetworkConfig.shared(2e7, N_MAX)
+
+    runs = {}
+    for name in ("adaptive", "static"):
+        # reuse_slack=1: always run the tight pow2 bucket (compute-
+        # optimal admission; at most log2(N_max)+1 compiles either way)
+        scaler = FleetAutoscaler(reuse_slack=1.0)
+        if name == "static":
+            # a fleet provisioned for N_max and never re-admitted: seed
+            # the N_max shape and reuse it unconditionally, whole schedule
+            scaler = FleetAutoscaler(reuse_slack=float("inf"))
+            scaler.admit(N_MAX, mesh_width=1)
+        engine = MultiStreamEngine(dnn, am, qcfg, net=net,
+                                   chunk_size=CHUNK, impl="fast",
+                                   autoscaler=scaler, fps=FPS)
+        res = engine.serve_loop(frames, events=events, refs=refs,
+                                rescale=(name == "adaptive"))
+        tails = _interval_tails(res)
+        runs[name] = dict(res=res, tails=tails,
+                          tail_p90=float(np.percentile(tails, 90)),
+                          camera_total=float(np.sum(res.timing.camera_s)))
+        emit(f"churn/{name}_tail_p90", runs[name]["tail_p90"] * 1e6,
+             f"acc={res.accuracy:.4f};pooled_p90={res.p90_delay:.4f};"
+             f"camera_total_s={runs[name]['camera_total']:.3f};"
+             f"shapes={'|'.join(map(str, res.shapes))}")
+    a, s = runs["adaptive"], runs["static"]
+    emit("churn/camera_compute_saving", 0.0,
+         f"adaptive_s={a['camera_total']:.3f};"
+         f"static_s={s['camera_total']:.3f};"
+         f"saving={1.0 - a['camera_total'] / s['camera_total']:.2%}")
+    n_events = len(_schedule())
+    n_shapes = len(a["res"].shapes)
+    emit("churn/compiled_shapes_vs_events", float(n_shapes),
+         f"shapes={n_shapes};churn_events={n_events};"
+         f"bound=log2(N_max)+1={int(np.log2(N_MAX)) + 1};"
+         f"ok={'yes' if n_shapes <= int(np.log2(N_MAX)) + 1 else 'no'}")
+    acc_a, acc_s = a["res"].accuracy, s["res"].accuracy
+    ok = (a["tail_p90"] <= s["tail_p90"]
+          and acc_a >= acc_s - 0.005)
+    emit("churn/verdict", 0.0,
+         f"tail_p90_speedup={s['tail_p90'] / a['tail_p90']:.2f}x;"
+         f"acc_delta={acc_a - acc_s:+.4f};"
+         f"met={'yes' if ok else 'no'}")
+
+
+def smoke():
+    """CI smoke: one churny closed-loop run end to end on the host
+    platform — untrained tiny models, a few intervals, a few seconds.
+    Guards the serve_loop plumbing (churn events, admission padding,
+    masked accounting) without the full benchmark's training cost."""
+    import jax
+
+    from repro.control import ChurnEvent, FleetAutoscaler
+    from repro.core.accmodel import AccModel, accmodel_init
+    from repro.data.video import make_scene
+    from repro.engine import MultiStreamEngine
+    from repro.vision.dnn import FinalDNN, init_net
+
+    h, w = 64, 112
+    dnn = FinalDNN("detection",
+                   init_net("detection", jax.random.PRNGKey(0), width=8))
+    am = AccModel(accmodel_init(jax.random.PRNGKey(1), 8))
+    frames = np.stack([
+        make_scene("dashcam", seed=5 + i, T=3 * CHUNK, H=h, W=w).frames
+        for i in range(2)])
+    engine = MultiStreamEngine(dnn, am, impl="fast",
+                               autoscaler=FleetAutoscaler(), fps=FPS,
+                               chunk_size=CHUNK)
+    res = engine.serve_loop(
+        frames, initial=(0,),
+        events=[ChurnEvent(1, join=(1,)), ChurnEvent(2, leave=(0,))])
+    assert res.stream_ids == [0, 1]
+    assert [len(r.chunks) for r in res.streams] == [2, 2]
+    assert res.shapes == [1, 2]  # pow2 buckets, nothing else compiled
+    assert all(c.bytes > 0 for r in res.streams for c in r.chunks)
+    assert len(res.decisions) == 3
+    emit("churn/smoke", res.p90_delay * 1e6,
+         f"chunks={sum(len(r.chunks) for r in res.streams)};"
+         f"shapes={'|'.join(map(str, res.shapes))};ok=yes")
+
+
+def run():
+    mid_stream_rescale()

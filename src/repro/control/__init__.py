@@ -16,8 +16,9 @@ Three parts, consumed by the engines:
   width and server batch depth, with admission control that pads stream
   joins/leaves to already-compiled fleet shapes.
 """
-from repro.control.autoscaler import (AdmissionPlan, FleetAutoscaler,
-                                      ScaleDecision, pad_streams)
+from repro.control.autoscaler import (AdmissionPlan, ChurnEvent,
+                                      FleetAutoscaler, ScaleDecision,
+                                      apply_churn, pad_streams)
 from repro.control.controller import (ChunkObservation, ControlKnobs,
                                       ControlledAccMPEGPolicy,
                                       RateController)
@@ -25,8 +26,8 @@ from repro.control.traces import (NetworkTrace, TRACE_GENRES, drone_trace,
                                   lte_trace, make_trace, wifi_trace)
 
 __all__ = [
-    "AdmissionPlan", "ChunkObservation", "ControlKnobs",
+    "AdmissionPlan", "ChunkObservation", "ChurnEvent", "ControlKnobs",
     "ControlledAccMPEGPolicy", "FleetAutoscaler", "NetworkTrace",
-    "RateController", "ScaleDecision", "TRACE_GENRES", "drone_trace",
-    "lte_trace", "make_trace", "pad_streams", "wifi_trace",
+    "RateController", "ScaleDecision", "TRACE_GENRES", "apply_churn",
+    "drone_trace", "lte_trace", "make_trace", "pad_streams", "wifi_trace",
 ]

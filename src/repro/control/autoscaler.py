@@ -18,16 +18,67 @@ joins/leaves: fleet steps are compiled per (N, T, H, W, C) shape, so
 serving N±1 streams naively would recompile every chunk the fleet churns.
 Instead the active streams are padded up to a bucketed shape (multiples of
 the mesh width, rounded to powers of two) and shapes already compiled are
-reused — churn costs device idle lanes, never a recompile.
+reused while the padding waste stays bounded (``reuse_slack``) — churn
+costs device idle lanes, and at most O(log N) compiles ever.
+
+``ChurnEvent`` / :func:`apply_churn` are the schedule vocabulary the
+closed serving loop (``MultiStreamEngine.serve_loop``) consumes: streams
+join and leave at chunk boundaries, admission re-pads mid-stream, and
+``ScaleDecision``s apply between chunks without tearing the engine down.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Set
+from typing import Dict, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from repro.core.pipeline import FleetTiming
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnEvent:
+    """A stream-membership change at a chunk-interval boundary.
+
+    ``chunk`` names the interval *before* which the event applies: streams
+    in ``join`` start serving at that interval, streams in ``leave`` stop.
+    Stream ids index the fleet's frame array (``serve_loop``'s leading
+    axis), so a camera that leaves and later rejoins keeps its identity —
+    and its per-stream accounting picks up where it left off.
+    """
+
+    chunk: int
+    join: Tuple[int, ...] = ()
+    leave: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "join", tuple(self.join))
+        object.__setattr__(self, "leave", tuple(self.leave))
+        if self.chunk < 0:
+            raise ValueError("churn events happen at chunk >= 0")
+        if set(self.join) & set(self.leave):
+            raise ValueError("a stream cannot join and leave in one event")
+
+
+def apply_churn(active: Sequence[int], events: Sequence[ChurnEvent],
+                ci: int) -> list:
+    """Fold the events scheduled for interval ``ci`` into ``active``
+    (join order preserved — lane assignment stays deterministic)."""
+    ids = list(active)
+    for ev in events:
+        if ev.chunk != ci:
+            continue
+        for sid in ev.leave:
+            if sid not in ids:
+                raise ValueError(f"stream {sid} leaves at chunk {ci} but "
+                                 f"is not active")
+            ids.remove(sid)
+        for sid in ev.join:
+            if sid in ids:
+                raise ValueError(f"stream {sid} joins at chunk {ci} but "
+                                 f"is already active")
+            ids.append(sid)
+    return ids
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,8 +106,15 @@ class AdmissionPlan:
 
 def stage_occupancy(timing: FleetTiming) -> Dict[str, float]:
     """Fraction of the loop's wall clock each stage kept busy. With
-    overlap the fractions can sum past 1 — that is the pipelining."""
-    wall = max(timing.wall_s, 1e-12)
+    overlap the fractions can sum past 1 — that is the pipelining.
+
+    A zero (or unset) makespan — the first chunk of a closed-loop run,
+    before any interval has been measured — reports all-zero occupancy
+    instead of dividing by epsilon: occupancies in the millions would
+    read as a camera-bound fleet and trigger a bogus scale-out."""
+    wall = timing.wall_s
+    if wall <= 0.0:
+        return {"camera": 0.0, "server": 0.0, "host": 0.0}
     return {
         "camera": float(np.sum(timing.camera_s)) / wall,
         "server": float(np.sum(timing.server_s)) / wall,
@@ -78,13 +136,26 @@ class FleetAutoscaler:
     def __init__(self, target_occupancy: float = 0.8,
                  idle_fraction: float = 0.4,
                  min_depth: int = 1, max_depth: int = 4,
-                 pad_pow2: bool = True):
+                 pad_pow2: bool = True, reuse_slack: float = 2.0):
         self.target_occupancy = target_occupancy
         self.idle_fraction = idle_fraction
         self.min_depth = min_depth
         self.max_depth = max_depth
         self.pad_pow2 = pad_pow2
+        #: how much bigger than the tight padded shape an already-compiled
+        #: shape may be and still be reused (2.0 = at most one pow2 bucket
+        #: up, so at most half the lanes idle; 1.0 = always run the tight
+        #: shape, compile-greedy but compute-optimal). Either way the
+        #: shape set stays O(log N): only tight pow2 buckets are ever
+        #: *added*, the slack only governs reuse.
+        self.reuse_slack = reuse_slack
         self._compiled_shapes: Set[int] = set()
+
+    @property
+    def compiled_shapes(self) -> Tuple[int, ...]:
+        """Every padded fleet shape admitted so far (sorted). The churn
+        acceptance bound: stays O(log N_max) per mesh width used."""
+        return tuple(sorted(self._compiled_shapes))
 
     # -- scaling --------------------------------------------------------------
     def decide(self, timing: FleetTiming, n_streams: int,
@@ -97,6 +168,13 @@ class FleetAutoscaler:
             n_devices = len(jax.devices())
         occ = stage_occupancy(timing)
         bottleneck = max(occ, key=occ.get)
+        if occ[bottleneck] <= 0.0:
+            # nothing measured yet (first chunk / zero makespan): hold —
+            # an all-zero occupancy would otherwise read as "idle" and
+            # scale the fleet in before it served a single chunk
+            return ScaleDecision(mesh_width=mesh_width,
+                                 batch_depth=batch_depth,
+                                 reason="no timing yet")
         if occ[bottleneck] < self.idle_fraction:
             # everything idles: scale in one notch (narrower, shallower)
             widths = [d for d in range(1, mesh_width)
@@ -108,6 +186,20 @@ class FleetAutoscaler:
         if bottleneck == "camera" and occ["camera"] >= self.target_occupancy:
             wider = [d for d in range(mesh_width + 1, n_devices + 1)
                      if n_streams % d == 0]
+            if not wider:
+                # no wider width divides the current (padded) stream
+                # count — e.g. 5 padded streams on width 1 with pow2
+                # padding off. Admission re-pads for whatever width is
+                # adopted (``admit`` keeps n_padded a multiple of it), so
+                # divisibility of the *current* count must not veto the
+                # scale-out — but only widths that actually shrink the
+                # per-shard lane count qualify: widening past that just
+                # claims devices for padding lanes (a single camera-bound
+                # stream would otherwise escalate to n_devices, one fresh
+                # compile per notch, with zero speedup).
+                lanes_now = -(-n_streams // mesh_width)
+                wider = [d for d in range(mesh_width + 1, n_devices + 1)
+                         if -(-n_streams // d) < lanes_now]
             if wider:
                 return ScaleDecision(
                     mesh_width=wider[0], batch_depth=batch_depth,
@@ -129,21 +221,37 @@ class FleetAutoscaler:
         The padded count is a multiple of ``mesh_width`` (shard_map
         divisibility), bucketed to powers of two when ``pad_pow2`` so the
         set of shapes ever compiled stays logarithmic under join/leave
-        churn; any already-compiled shape that fits is reused outright."""
-        if n_active < 1:
-            raise ValueError("admit needs at least one active stream")
+        churn; any already-compiled shape that fits is reused outright.
+
+        ``n_active == 0`` (every stream left) returns the empty plan —
+        no lanes, no program, nothing compiled — so a closed-loop serve
+        schedule can idle through all-quiet intervals without special
+        casing; ``reused`` is True because the interval runs no fleet
+        step at all."""
+        if n_active < 0:
+            raise ValueError("admit needs a non-negative stream count")
+        if n_active == 0:
+            return AdmissionPlan(n_active=0, n_padded=0,
+                                 active=np.zeros(0, bool), reused=True)
+        lanes = (n_active + mesh_width - 1) // mesh_width
+        if self.pad_pow2:  # bucket the per-shard lane count, so the
+            # result stays divisible by any mesh width
+            lanes = 1 << (lanes - 1).bit_length()
+        tight = lanes * mesh_width
         fits = [s for s in self._compiled_shapes
                 if s >= n_active and s % mesh_width == 0]
-        if fits:
-            n_padded, reused = min(fits), True
+        best = min(fits) if fits else None
+        if tight in self._compiled_shapes:
+            n_padded, reused = tight, True
+        elif best is not None and best <= self.reuse_slack * tight:
+            # bounded-waste reuse: a compiled shape close enough to the
+            # tight bucket beats a fresh compile — but a fleet that
+            # shrank far past it re-compiles the tight shape rather than
+            # paying oversized camera steps every interval from now on
+            n_padded, reused = best, True
         else:
-            lanes = (n_active + mesh_width - 1) // mesh_width
-            if self.pad_pow2:  # bucket the per-shard lane count, so the
-                # result stays divisible by any mesh width
-                lanes = 1 << (lanes - 1).bit_length()
-            n_padded = lanes * mesh_width
-            self._compiled_shapes.add(n_padded)
-            reused = False
+            n_padded, reused = tight, False
+            self._compiled_shapes.add(tight)
         active = np.zeros(n_padded, bool)
         active[:n_active] = True
         return AdmissionPlan(n_active=n_active, n_padded=n_padded,

@@ -55,13 +55,24 @@ class ControlKnobs:
 
 @dataclasses.dataclass(frozen=True)
 class ChunkObservation:
-    """What the engine feeds back after each chunk."""
+    """What the engine feeds back after each chunk.
+
+    ``n_streams`` is how many *active* streams the observation covers
+    (fleet engines aggregate the batch: total active bytes, tail delay).
+    Under stream churn it varies interval to interval, so history
+    consumers can normalize per stream — padded idle lanes are never
+    counted."""
 
     n_bytes: float
     stream_s: float        # transmit + RTT/2 (per-stream completion)
     queue_s: float = 0.0   # uplink-busy wait before the upload started
     compute_s: float = 0.0  # encode + camera-side model overhead
     extra_rtt_s: float = 0.0
+    n_streams: int = 1
+
+    @property
+    def bytes_per_stream(self) -> float:
+        return self.n_bytes / max(self.n_streams, 1)
 
     @property
     def total_delay_s(self) -> float:

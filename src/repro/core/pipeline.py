@@ -52,6 +52,9 @@ class ChunkResult:
     stream_s: float
     extra_rtt_s: float = 0.0  # server-driven feedback loops (DDS)
     queue_s: float = 0.0   # uplink backlog wait (trace-aware accounting)
+    ci: int = -1           # absolute chunk-interval index; under stream
+    # churn a stream's k-th result is NOT its k-th interval, so fleet
+    # SLO metrics (per-interval batch tails) group results by this
 
     @property
     def total_delay_s(self):

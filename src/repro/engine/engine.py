@@ -153,15 +153,30 @@ class StreamingEngine:
         ctx.decoded = policy.encode_chunk(ctx)
         return ctx
 
-    def run(self, policy, frames, refs: Optional[Sequence] = None) -> RunResult:
+    def run(self, policy, frames, refs: Optional[Sequence] = None,
+            clock: Optional[UplinkClock] = None,
+            start_chunk: int = 0) -> RunResult:
         """Stream ``frames`` through ``policy``; returns the paper's
         accounting. ``refs``: precomputed per-chunk D(H) outputs
-        (``core.pipeline.make_reference``), shared across methods."""
+        (``core.pipeline.make_reference``), shared across methods.
+
+        ``clock`` / ``start_chunk`` serve a *segment* of a longer
+        timeline (trace mode only): pass the previous segment's
+        ``UplinkClock`` so its backlog carries over instead of resetting,
+        and ``start_chunk`` so capture times stay on the camera's wall
+        clock (chunk ``ci`` of this call is captured at
+        ``(start_chunk + ci) * chunk_size / fps``). ``refs`` are indexed
+        on the same absolute timeline (pass the full-timeline reference
+        list, like serve_loop's per-stream refs — segment-local refs
+        would silently score the wrong chunk). This is the single-stream
+        analogue of the fleet engine's closed-loop ``serve_loop``, whose
+        uplink state survives stream churn."""
         policy.reset()
         if self.controller is not None:
             self.controller.reset()
-        clock = None if self.trace is None else \
-            UplinkClock(self.trace, self.chunk_size, self.fps)
+        if clock is None:
+            clock = None if self.trace is None else \
+                UplinkClock(self.trace, self.chunk_size, self.fps)
         results = []
         for ci, chunk in self.chunks(frames):
             if ci == 0:
@@ -178,19 +193,20 @@ class StreamingEngine:
                 stream_s = 0.0
                 ready = ctx.encode_s + ctx.overhead_s
                 for b in ctx.transmissions:
-                    s, q = clock.send(ci, b, ready)
+                    s, q = clock.send(start_chunk + ci, b, ready)
                     stream_s += s
                     queue_s += q
                     # a later transmission of the same chunk (DDS's second
                     # pass) starts after this upload ends — advance its
                     # ready point so the wait is not double-charged as
                     # queue on top of the summed stream_s
-                    ready += q + (s - self.trace.rtt_s / 2.0)
-            ref = refs[ci] if refs is not None else chunk
+                    ready += q + (s - clock.trace.rtt_s / 2.0)
+            ref = refs[start_chunk + ci] if refs is not None else chunk
             acc = chunk_accuracy(self.final_dnn, ctx.decoded, ref)
             results.append(ChunkResult(acc, sum(ctx.transmissions),
                                        ctx.encode_s, ctx.overhead_s,
-                                       stream_s, ctx.extra_rtt_s, queue_s))
+                                       stream_s, ctx.extra_rtt_s, queue_s,
+                                       ci=start_chunk + ci))
             if self.controller is not None:
                 from repro.control.controller import ChunkObservation
 

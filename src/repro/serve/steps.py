@@ -22,7 +22,8 @@ from repro.distributed.sharding import Rules, shard_map
 
 
 def make_camera_fleet_step(accmodel, qcfg, impl: str = "fast",
-                           mesh: Mesh = None, knobs: bool = False):
+                           mesh: Mesh = None, knobs: bool = False,
+                           mask: bool = False):
     """Build the fused per-chunk camera step for N streams.
 
     Returns ``step(chunks)`` with ``chunks (N, T, H, W, C)`` ->
@@ -54,6 +55,16 @@ def make_camera_fleet_step(accmodel, qcfg, impl: str = "fast",
     single-stream ``ControlledAccMPEGPolicy``, vmapped over streams. The
     knob array is replicated across the stream mesh (every camera shares
     the fleet's uplink, so one knob set governs the fleet).
+
+    ``mask=True`` builds the admission-controlled variant ``step(chunks,
+    active[, knob_array])`` taking a traced ``(N,)`` lane mask
+    (``control.autoscaler.AdmissionPlan.active``): padded idle lanes run
+    the identical per-lane program (so every padded fleet shape is ONE
+    compiled program regardless of which lanes are real) but their
+    reported bytes are zeroed *inside* the program — downstream uplink
+    and accuracy accounting can never be polluted by a padding lane. The
+    mask rides as data, so membership churn at a fixed padded shape
+    costs zero recompiles.
     """
     from repro.codec.codec import CHUNK_ENCODERS
     from repro.core.accmodel import accmodel_apply
@@ -65,27 +76,45 @@ def make_camera_fleet_step(accmodel, qcfg, impl: str = "fast",
     params = accmodel.params
     enc = CHUNK_ENCODERS.resolve(impl)
 
-    def _encode(chunks, qmaps, scores):
+    def _encode(chunks, qmaps, scores, active=None):
         decoded, pbytes = jax.vmap(enc)(chunks, qmaps)
+        if active is not None:  # zero padded lanes' wire bytes in-program
+            lane = active.astype(pbytes.dtype)
+            pbytes = pbytes * lane.reshape((-1,) + (1,) * (pbytes.ndim - 1))
         return decoded, pbytes, scores
 
-    def _step(chunks):
+    def _score_qmaps(chunks, knob_arr=None):
         scores = jax.nn.sigmoid(accmodel_apply(params, chunks[:, 0]))
-        qmaps, _ = qp_maps_from_scores_batched(scores, qcfg)
-        return _encode(chunks, qmaps, scores)
-
-    def _step_knobs(chunks, knob_arr):
-        scores = jax.nn.sigmoid(accmodel_apply(params, chunks[:, 0]))
+        if knob_arr is None:
+            qmaps, _ = qp_maps_from_scores_batched(scores, qcfg)
+            return chunks, qmaps, scores
         qmaps, _ = qp_maps_from_knobs_batched(scores, knob_arr, qcfg.gamma)
         chunks = jax.vmap(
             lambda c: soft_drop_previous(c, knob_arr[3])[0])(chunks)
-        return _encode(chunks, qmaps, scores)
+        return chunks, qmaps, scores
 
-    fn = _step_knobs if knobs else _step
+    def _step(chunks):
+        return _encode(*_score_qmaps(chunks))
+
+    def _step_knobs(chunks, knob_arr):
+        return _encode(*_score_qmaps(chunks, knob_arr))
+
+    def _step_mask(chunks, active):
+        return _encode(*_score_qmaps(chunks), active=active)
+
+    def _step_mask_knobs(chunks, active, knob_arr):
+        return _encode(*_score_qmaps(chunks, knob_arr), active=active)
+
+    if mask:
+        fn = _step_mask_knobs if knobs else _step_mask
+    else:
+        fn = _step_knobs if knobs else _step
     if mesh is None:
         return jax.jit(fn)
     spec = P(STREAM_AXIS)
-    in_specs = (spec, P()) if knobs else spec
+    in_specs = (spec,) + ((spec,) if mask else ()) + ((P(),) if knobs else ())
+    if len(in_specs) == 1:
+        in_specs = spec
     sharded = shard_map(fn, mesh, in_specs=in_specs,
                         out_specs=(spec, spec, spec))
     return jax.jit(sharded)

@@ -1,0 +1,248 @@
+"""Closed-loop fleet serving under stream churn (MultiStreamEngine
+.serve_loop): the tentpole contracts.
+
+1. Padding parity — a run whose admission pads 3 streams onto a 4-lane
+   fleet shape must report the same accuracy/bytes/delay as an unpadded
+   run: padded lanes contribute exactly zero to every aggregate.
+2. Zero recompiles across a full churn schedule — joins/leaves re-admit
+   onto already-compiled padded shapes and knob changes ride as traced
+   arrays, so a second schedule grows no jit cache (CompileCounter), and
+   the number of compiled fleet programs stays O(log N_max).
+3. ScaleDecisions apply *between chunks*, without tearing the engine
+   down, and change scheduling only — never results.
+4. All-quiet intervals (every stream left) idle cleanly and the shared
+   uplink clock's backlog survives the lull.
+"""
+import jax
+import numpy as np
+import pytest
+
+from _compile_counter import CompileCounter
+from repro.control import (ChurnEvent, FleetAutoscaler, RateController,
+                           ScaleDecision, apply_churn)
+from repro.control.traces import constant_trace
+from repro.core.accmodel import AccModel, accmodel_init
+from repro.core.pipeline import NetworkConfig
+from repro.engine import MultiStreamEngine
+from repro.vision.dnn import FinalDNN, init_net
+
+H, W = 64, 112
+CS = 10
+
+
+@pytest.fixture(scope="module")
+def dnn():
+    return FinalDNN("detection",
+                    init_net("detection", jax.random.PRNGKey(0), width=8))
+
+
+@pytest.fixture(scope="module")
+def accmodel():
+    return AccModel(accmodel_init(jax.random.PRNGKey(1), 8))
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    from repro.data.video import make_scene
+
+    return np.stack([make_scene("dashcam", seed=20 + i, T=40, H=H,
+                                W=W).frames for i in range(4)])
+
+
+def _chunks_by_stream(res):
+    return dict(zip(res.stream_ids, res.streams))
+
+
+def test_apply_churn_and_event_validation():
+    events = [ChurnEvent(1, join=(2,)), ChurnEvent(2, leave=(0, 2))]
+    assert apply_churn([0, 1], events, 0) == [0, 1]
+    assert apply_churn([0, 1], events, 1) == [0, 1, 2]
+    assert apply_churn([0, 1, 2], events, 2) == [1]
+    with pytest.raises(ValueError):  # leaving without being active
+        apply_churn([1], events, 2)
+    with pytest.raises(ValueError):  # joining twice
+        apply_churn([2], events, 1)
+    with pytest.raises(ValueError):
+        ChurnEvent(0, join=(1,), leave=(1,))
+    with pytest.raises(ValueError):
+        ChurnEvent(-1)
+
+
+def test_padded_lanes_contribute_exactly_zero(dnn, accmodel, fleet):
+    """The acceptance parity: 3 streams served on a padded 4-lane shape
+    vs the same 3 streams unpadded — per-chunk accuracy, bytes, and
+    delay accounting agree, and the padded run reports no fourth
+    stream anywhere."""
+    net = NetworkConfig.shared(2.5e6, 3)
+    runs = {}
+    for name, pad_pow2 in (("padded", True), ("unpadded", False)):
+        eng = MultiStreamEngine(dnn, accmodel, impl="fast", net=net,
+                                autoscaler=FleetAutoscaler(
+                                    pad_pow2=pad_pow2))
+        runs[name] = eng.serve_loop(fleet[:3], rescale=False)
+        # padding really was the only difference between the two runs
+        assert eng.autoscaler.compiled_shapes == ((4,) if pad_pow2
+                                                  else (3,))
+    padded, unpadded = runs["padded"], runs["unpadded"]
+    assert padded.stream_ids == unpadded.stream_ids == [0, 1, 2]
+    for rp, ru in zip(padded.streams, unpadded.streams):
+        assert len(rp.chunks) == len(ru.chunks) == 4
+        for cp, cu in zip(rp.chunks, ru.chunks):
+            assert cp.accuracy == pytest.approx(cu.accuracy, abs=1e-6)
+            assert cp.bytes == pytest.approx(cu.bytes, rel=1e-6)
+            assert cp.bytes > 0
+            # delay: identical bytes through the identical shared uplink
+            assert cp.stream_s == pytest.approx(cu.stream_s, rel=1e-6)
+            assert cp.queue_s == cu.queue_s == 0.0
+    assert padded.accuracy == pytest.approx(unpadded.accuracy, abs=1e-6)
+
+
+def test_padded_lanes_grant_no_phantom_uplink(dnn, accmodel, fleet):
+    """Regression: with a per-stream NetworkConfig (no uplink_bps) the
+    shared-delay fallback sizes the uplink as bandwidth_bps * N — padded
+    lanes must not count as N, or a padded run under-reports delay."""
+    net = NetworkConfig(bandwidth_bps=1e6)  # no uplink_bps: fallback path
+    runs = {}
+    for name, pad_pow2 in (("padded", True), ("unpadded", False)):
+        eng = MultiStreamEngine(dnn, accmodel, impl="fast", net=net,
+                                autoscaler=FleetAutoscaler(
+                                    pad_pow2=pad_pow2))
+        runs[name] = eng.serve_loop(fleet[:3], rescale=False)
+    for rp, ru in zip(runs["padded"].streams, runs["unpadded"].streams):
+        for cp, cu in zip(rp.chunks, ru.chunks):
+            assert cp.stream_s == pytest.approx(cu.stream_s, rel=1e-6)
+
+
+def test_serve_loop_validates_initial_and_events():
+    eng = MultiStreamEngine(final_dnn=None, accmodel=None)
+    frames = np.zeros((2, 10, 16, 16, 3), np.float32)
+    with pytest.raises(ValueError):  # duplicate: would double-serve
+        eng.serve_loop(frames, initial=(0, 0))
+    with pytest.raises(ValueError):  # out of range
+        eng.serve_loop(frames, initial=(2,))
+    with pytest.raises(ValueError):  # negative: silent numpy wraparound
+        eng.serve_loop(frames, initial=(-1,))
+    with pytest.raises(ValueError):  # event past the schedule: would
+        # silently never fire (frames hold exactly one interval)
+        eng.serve_loop(frames, events=[ChurnEvent(1, join=(1,))],
+                       initial=(0,))
+
+
+def test_empty_fleet_result_reports_nan_not_crash(dnn, accmodel, fleet):
+    """A schedule where nobody ever serves is legal (admit(0) idles every
+    interval); aggregates must degrade to nan, not crash."""
+    eng = MultiStreamEngine(dnn, accmodel, impl="fast",
+                            autoscaler=FleetAutoscaler())
+    res = eng.serve_loop(fleet[:2, :20], initial=())
+    assert res.streams == [] and res.stream_ids == []
+    assert res.shapes == []  # nothing compiled either
+    assert np.isnan(res.p90_delay)
+    assert np.isnan(res.summary()["p95_delay_s"])
+
+
+def test_churn_zero_recompiles_and_log_shapes(dnn, accmodel, fleet):
+    """A full churn schedule (1 -> 2 -> 4 -> 1 active streams, controller
+    knobs moving every chunk) compiles one fleet program per padded shape
+    — O(log N_max) — and a second schedule over the same shapes plus a
+    fresh knob path compiles NOTHING new."""
+    ctrl = RateController(delay_budget_s=0.4)
+    eng = MultiStreamEngine(dnn, accmodel, impl="fast",
+                            trace=constant_trace(1e5, rtt_s=0.02),
+                            controller=ctrl,
+                            autoscaler=FleetAutoscaler())
+    first = eng.serve_loop(
+        fleet, initial=(0,),
+        events=[ChurnEvent(1, join=(1,)), ChurnEvent(2, join=(2, 3)),
+                ChurnEvent(3, leave=(1, 2, 3))],
+        rescale=False)
+    assert first.shapes == [1, 2, 4]  # pow2 buckets only: log growth
+    cam_step, server_step, _ = eng._steps[(None, True, True)] + (None,)
+    counter = CompileCounter(camera=cam_step, server=server_step)
+    assert cam_step._cache_size() == len(first.shapes)
+    # different churn order, different knob path, same compiled shapes
+    second = eng.serve_loop(
+        fleet, initial=(0, 1, 2, 3),
+        events=[ChurnEvent(1, leave=(2, 3)), ChurnEvent(2, leave=(1,)),
+                ChurnEvent(3, join=(3,))],
+        rescale=False)
+    counter.assert_no_recompiles("re-admission at compiled shapes")
+    assert second.shapes == [1, 2, 4]
+    # the controller's knobs really moved chunk-to-chunk (saturated link)
+    assert len({k.qp_hi for k, _ in ctrl.history}) >= 2
+    # per-stream accounting: every served interval priced, no phantoms
+    by_stream = _chunks_by_stream(second)
+    assert {sid: len(r.chunks) for sid, r in by_stream.items()} == \
+        {0: 4, 1: 2, 2: 1, 3: 2}
+    assert all(c.bytes > 0 for r in second.streams for c in r.chunks)
+
+
+def test_scale_decisions_apply_mid_loop_without_teardown(dnn, accmodel,
+                                                         fleet):
+    """A ScaleDecision adopted between chunks changes scheduling only:
+    the engine's depth/overlap move mid-run, and per-stream results match
+    a run that never rescaled."""
+
+    class DeepenOnce(FleetAutoscaler):
+        def decide(self, timing, n_streams, mesh_width=1, batch_depth=2,
+                   n_devices=None):
+            return ScaleDecision(mesh_width=1, batch_depth=3,
+                                 reason="forced: deepen")
+
+    net = NetworkConfig.shared(2.5e6, 3)
+    eng = MultiStreamEngine(dnn, accmodel, impl="fast", net=net,
+                            autoscaler=DeepenOnce())
+    rescaled = eng.serve_loop(fleet[:3])
+    assert eng.depth == 3 and eng.overlap  # adopted inside the loop
+    assert eng.last_scale.batch_depth == 3
+    assert [d.batch_depth for d in rescaled.decisions] == [3, 3, 3, 3]
+    baseline = MultiStreamEngine(
+        dnn, accmodel, impl="fast", net=net,
+        autoscaler=FleetAutoscaler()).serve_loop(fleet[:3], rescale=False)
+    for rr, rb in zip(rescaled.streams, baseline.streams):
+        for cr, cb in zip(rr.chunks, rb.chunks):
+            assert cr.accuracy == pytest.approx(cb.accuracy, abs=1e-6)
+            assert cr.bytes == pytest.approx(cb.bytes, rel=1e-6)
+
+    class Serialize(FleetAutoscaler):
+        def decide(self, timing, n_streams, mesh_width=1, batch_depth=2,
+                   n_devices=None):
+            return ScaleDecision(mesh_width=1, batch_depth=1,
+                                 reason="forced: serialize")
+
+    eng2 = MultiStreamEngine(dnn, accmodel, impl="fast", net=net,
+                             autoscaler=Serialize())
+    serial = eng2.serve_loop(fleet[:3])
+    assert not eng2.overlap and eng2.depth == 1
+    assert all(len(r.chunks) == 4 for r in serial.streams)
+
+
+def test_all_quiet_interval_idles_and_resumes(dnn, accmodel, fleet):
+    """Everyone leaves for one interval: admit(0) idles the loop (no
+    chunks, no compile), the shared uplink clock's backlog survives the
+    lull (it is one timeline, not reset per membership change), and the
+    lull genuinely relieves the queue relative to serving through it."""
+    trace = constant_trace(3e4, rtt_s=0.02)  # heavily saturated uplink
+    eng = MultiStreamEngine(dnn, accmodel, impl="fast", trace=trace,
+                            autoscaler=FleetAutoscaler())
+    res = eng.serve_loop(
+        fleet[:2], initial=(0, 1),
+        events=[ChurnEvent(2, leave=(0, 1)),
+                ChurnEvent(3, join=(0, 1))])
+    by_stream = _chunks_by_stream(res)
+    assert {sid: len(r.chunks) for sid, r in by_stream.items()} == \
+        {0: 3, 1: 3}
+    assert len(res.timing.camera_s) == 3  # the quiet interval ran nothing
+    # backlog persisted through the lull: the rejoin still queues behind
+    # the pre-lull chunks (the clock was not reset by churn) ...
+    pre_lull = by_stream[0].chunks[1]
+    post_lull = by_stream[0].chunks[2]
+    assert pre_lull.queue_s > 0.0
+    assert post_lull.queue_s > pre_lull.queue_s
+    # ... but less than if the fleet had served straight through: the
+    # quiet interval put no bytes on the wire
+    straight = MultiStreamEngine(
+        dnn, accmodel, impl="fast", trace=trace,
+        autoscaler=FleetAutoscaler()).serve_loop(fleet[:2])
+    straight_ch3 = _chunks_by_stream(straight)[0].chunks[3]
+    assert post_lull.queue_s < straight_ch3.queue_s
+    assert res.shapes == [2]  # one shape for the whole churny run

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _compile_counter import CompileCounter
 from repro.control import (ControlledAccMPEGPolicy, FleetAutoscaler,
                            NetworkTrace, RateController, TRACE_GENRES,
                            make_trace, pad_streams)
@@ -164,6 +165,36 @@ def test_trace_multi_transmission_no_double_charge(dnn, frames):
         assert c.extra_rtt_s == pytest.approx(rtt)
 
 
+def test_streaming_engine_persistent_clock(dnn, accmodel, frames):
+    """run(clock=, start_chunk=) serves a later segment of one camera's
+    timeline: uplink backlog carries across the call boundary instead of
+    resetting — the single-stream analogue of serve_loop's churn-proof
+    shared clock."""
+    from repro.engine import AccMPEGPolicy
+
+    trace = constant_trace(3e4, rtt_s=0.02)  # saturated: backlog builds
+    engine = StreamingEngine(dnn, chunk_size=10, impl="fast", trace=trace)
+    policy = AccMPEGPolicy(accmodel)
+    clk = UplinkClock(trace, chunk_size=10, fps=30.0)
+    first = engine.run(policy, frames[:20], clock=clk)
+    second = engine.run(policy, frames[20:40], clock=clk, start_chunk=2)
+    # the resumed segment starts already queued behind segment one
+    assert second.chunks[0].queue_s > 0.0
+    assert second.chunks[0].ci == 2  # capture clock continued too
+    # ...and the stitched accounting matches one uninterrupted run
+    # (bytes are deterministic; queue differs only by jitter in the
+    # measured camera-compute ready times, which is milliseconds against
+    # multi-second backlog)
+    full = engine.run(policy, frames[:40])
+    stitched = first.chunks + second.chunks
+    assert [c.ci for c in full.chunks] == [c.ci for c in stitched] \
+        == [0, 1, 2, 3]
+    for cs_, cf in zip(stitched, full.chunks):
+        assert cs_.bytes == pytest.approx(cf.bytes, rel=1e-6)
+        assert cs_.queue_s == pytest.approx(cf.queue_s, abs=0.3)
+        assert cs_.stream_s == pytest.approx(cf.stream_s, rel=0.05)
+
+
 # ---------------------------------------------------------------------------
 # rate controller
 # ---------------------------------------------------------------------------
@@ -236,9 +267,9 @@ def test_controlled_run_zero_recompiles(dnn, accmodel, frames):
                              controller=ctrl)
     policy = ControlledAccMPEGPolicy(accmodel, ctrl)
     engine.run(policy, frames)
-    sizes = (_controlled_prep._cache_size(),
-             _jit_encoder("fast")._cache_size(),
-             accmodel._jit._cache_size())
+    counter = CompileCounter(prep=_controlled_prep,
+                             encode=_jit_encoder("fast"),
+                             accmodel=accmodel._jit)
     # the controller really did move the knobs chunk-to-chunk
     qp_path = [k.qp_hi for k, _ in ctrl.history]
     assert len(set(qp_path)) >= 2, qp_path
@@ -246,9 +277,7 @@ def test_controlled_run_zero_recompiles(dnn, accmodel, frames):
     engine.trace = constant_trace(5e4, rtt_s=0.02)
     engine.run(policy, frames)
     assert len({k.qp_hi for k, _ in ctrl.history}) >= 2
-    assert (_controlled_prep._cache_size(),
-            _jit_encoder("fast")._cache_size(),
-            accmodel._jit._cache_size()) == sizes
+    counter.assert_no_recompiles("second knob sweep")
     # and the controlled results stay well-formed
     res = engine.run(policy, frames)
     assert len(res.chunks) == 4
@@ -281,7 +310,7 @@ def test_fleet_controlled_trace_single_compile(dnn, accmodel, frames):
                                trace=constant_trace(1e5, rtt_s=0.02),
                                controller=ctrl)
     res = engine.run(fleet)
-    cam_step = engine._steps[(None, True)][0]
+    cam_step = engine._steps[(None, True, False)][0]
     assert cam_step._cache_size() == 1
     assert len(ctrl.history) == 2  # one observation per chunk interval
     for stream in res.streams:
@@ -361,9 +390,87 @@ def test_autoscaler_admission_churn():
     p = FleetAutoscaler().admit(4, mesh_width=3)
     assert p.n_padded == 6 and p.n_padded % 3 == 0
     with pytest.raises(ValueError):
-        scaler.admit(0)
+        scaler.admit(-1)
     padded = pad_streams(np.zeros((3, 10, 8, 8, 3)), 4)
     assert padded.shape[0] == 4
     np.testing.assert_array_equal(padded[3], padded[2])
     with pytest.raises(ValueError):
         pad_streams(np.zeros((3, 1, 1, 1, 1)), 2)
+
+
+def test_admit_reuse_slack_bounds_padding_waste():
+    """A fleet that shrinks far below every compiled shape must stop
+    paying oversized camera steps: reuse is bounded by ``reuse_slack``
+    (default: one pow2 bucket up), beyond which the tight shape is
+    compiled — still only pow2 buckets, so still O(log N) shapes."""
+    scaler = FleetAutoscaler()  # reuse_slack = 2.0
+    assert scaler.admit(8).n_padded == 8
+    # one bucket down: reuse (half the lanes idle, tolerated)
+    p4 = scaler.admit(4)
+    assert p4.n_padded == 8 and p4.reused
+    # far below: 8 lanes for 1 stream is past the slack — compile tight
+    p1 = scaler.admit(1)
+    assert p1.n_padded == 1 and not p1.reused
+    assert scaler.compiled_shapes == (1, 8)
+    # compute-optimal admission: always the tight bucket
+    greedy = FleetAutoscaler(reuse_slack=1.0)
+    greedy.admit(8)
+    p = greedy.admit(3)
+    assert p.n_padded == 4 and not p.reused
+    assert greedy.admit(3).reused  # second visit reuses the tight shape
+    # unconditional reuse (a statically provisioned fleet)
+    static = FleetAutoscaler(reuse_slack=float("inf"))
+    static.admit(8)
+    assert static.admit(1).n_padded == 8
+    assert static.compiled_shapes == (8,)
+
+
+def test_admit_zero_streams_is_the_empty_plan():
+    """Regression (closed-loop serving): when every stream leaves, the
+    next interval admits n_active=0 — that must be the empty plan (no
+    lanes, nothing compiled), not a crash, so serve_loop can idle through
+    all-quiet intervals and resume on the next join."""
+    scaler = FleetAutoscaler()
+    before = scaler.compiled_shapes
+    p = scaler.admit(0, mesh_width=4)
+    assert p.n_active == 0 and p.n_padded == 0
+    assert p.active.shape == (0,) and p.reused
+    assert scaler.compiled_shapes == before  # no phantom shape recorded
+    # the fleet comes back afterwards as if the lull never happened
+    assert scaler.admit(3, mesh_width=1).n_padded == 4
+
+
+def test_stage_occupancy_zero_makespan():
+    """Regression: an unmeasured interval (first chunk, wall_s == 0) used
+    to divide by epsilon and report occupancies in the millions — which
+    `decide` read as a camera-bound fleet. It must read as 'no data'."""
+    occ = stage_occupancy(FleetTiming())
+    assert occ == {"camera": 0.0, "server": 0.0, "host": 0.0}
+    occ = stage_occupancy(FleetTiming(camera_s=[0.5], wall_s=0.0))
+    assert max(occ.values()) == 0.0
+    # ...and decide holds the current shape instead of scaling in/out
+    d = FleetAutoscaler().decide(FleetTiming(), n_streams=8, mesh_width=2,
+                                 batch_depth=3, n_devices=4)
+    assert (d.mesh_width, d.batch_depth) == (2, 3)
+    assert "no timing" in d.reason
+
+
+def test_decide_width_on_non_dividing_padded_count():
+    """Regression: a camera-bound fleet whose (padded) stream count has
+    no wider divisor — e.g. 5 streams on width 1 — used to fall through
+    to 'steady'. Admission re-pads for whatever width is adopted, so the
+    scale-out must happen anyway."""
+    cam_bound = FleetTiming(camera_s=[0.9], server_s=[0.1],
+                            host_s=[0.02], wall_s=1.0)
+    d = FleetAutoscaler().decide(cam_bound, n_streams=5, mesh_width=1,
+                                 batch_depth=2, n_devices=4)
+    assert d.mesh_width == 2 and "camera-bound" in d.reason
+    # the re-admission the decision implies keeps divisibility
+    p = FleetAutoscaler().admit(5, mesh_width=d.mesh_width)
+    assert p.n_padded % d.mesh_width == 0 and p.n_padded >= 5
+    # ...but a width that cannot shrink the per-shard lane count is
+    # never proposed: one camera-bound stream must not escalate the mesh
+    # to n_devices (every notch would be a fresh compile for zero gain)
+    d1 = FleetAutoscaler().decide(cam_bound, n_streams=1, mesh_width=1,
+                                  batch_depth=2, n_devices=4)
+    assert d1.mesh_width == 1

@@ -1,0 +1,160 @@
+"""Property-based contracts for the closed-loop control plane.
+
+Two families, run under real hypothesis when installed and the
+deterministic ``_hypothesis_compat`` sample grid otherwise:
+
+1. Admission (`FleetAutoscaler.admit` / `pad_streams`) — the invariants
+   closed-loop serving leans on: padded counts divisible by the mesh
+   width and >= the active count, compiled-shape growth logarithmic under
+   arbitrary join/leave churn, truthful ``reused`` flags, and bit-exact
+   pad -> mask -> unpad round trips.
+2. The `NetworkTrace` transmit solvers — exactness against brute-force
+   numeric integration, monotonicity in payload, and processor-sharing
+   work conservation with padded (zero-byte) lanes contributing nothing.
+"""
+import math
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dev-only dep; fall back to a fixed sample grid
+    from _hypothesis_compat import given, settings, st
+
+from repro.control import FleetAutoscaler, pad_streams
+from repro.control.traces import TRACE_GENRES, constant_trace, make_trace
+
+
+# ---------------------------------------------------------------------------
+# admission
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=1, max_value=500),
+       st.integers(min_value=1, max_value=8))
+def test_admit_shape_invariants(n_active, mesh_width):
+    scaler = FleetAutoscaler()
+    p = scaler.admit(n_active, mesh_width=mesh_width)
+    assert p.n_active == n_active
+    assert p.n_padded >= n_active, "padding may never drop a stream"
+    assert p.n_padded % mesh_width == 0, "shard_map divisibility"
+    assert p.active.shape == (p.n_padded,)
+    assert int(p.active.sum()) == n_active and p.active[:n_active].all()
+    assert not p.active[n_active:].any()
+    assert not p.reused  # a fresh scaler has nothing compiled
+    # re-admitting the same count reuses the shape it just compiled
+    again = scaler.admit(n_active, mesh_width=mesh_width)
+    assert again.reused and again.n_padded == p.n_padded
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.sampled_from([1, 2, 3, 4]))
+def test_admit_shape_set_growth_logarithmic(seed, mesh_width):
+    """200 random join/leave re-admissions with n in [1, 256] must
+    compile O(log N_max) distinct shapes, and every ``reused`` flag must
+    be truthful (True iff the returned shape predates the call)."""
+    rng = np.random.RandomState(seed)
+    scaler = FleetAutoscaler()
+    n_max = 256
+    for _ in range(200):
+        n = int(rng.randint(1, n_max + 1))
+        before = set(scaler.compiled_shapes)
+        p = scaler.admit(n, mesh_width=mesh_width)
+        assert p.reused == (p.n_padded in before), \
+            "reused must report actual shape reuse"
+        assert p.n_padded % mesh_width == 0 and p.n_padded >= n
+    bound = int(math.log2(n_max)) + 2  # one bucket per pow2 lane count
+    assert len(scaler.compiled_shapes) <= bound, scaler.compiled_shapes
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=1, max_value=13),
+       st.integers(min_value=1, max_value=4),
+       st.integers(min_value=0, max_value=1000))
+def test_pad_mask_unpad_roundtrip_bit_exact(n, mesh_width, seed):
+    """pad_streams -> AdmissionPlan.active -> unpad returns the original
+    fleet batch bit for bit (padding repeats real pixels, so this is an
+    equality of float buffers, not an approximation)."""
+    rng = np.random.RandomState(seed)
+    frames = rng.rand(n, 3, 8, 8, 3).astype(np.float32)
+    plan = FleetAutoscaler().admit(n, mesh_width=mesh_width)
+    padded = pad_streams(frames, plan.n_padded)
+    assert padded.shape[0] == plan.n_padded
+    np.testing.assert_array_equal(padded[plan.active], frames)
+    # padded lanes replicate the last real stream — same program, real
+    # pixels, nothing uninitialized
+    for lane in range(n, plan.n_padded):
+        np.testing.assert_array_equal(padded[lane], frames[-1])
+
+
+# ---------------------------------------------------------------------------
+# trace transmit solvers
+# ---------------------------------------------------------------------------
+def _brute_force_transmit(trace, n_bytes, start_s, dt=2e-4):
+    """Numerically integrate rate over the trace until the payload
+    drains; exact solver must agree to within one numeric step."""
+    bits = n_bytes * 8.0
+    t = start_s
+    while bits > 0.0:
+        bits -= trace.bandwidth_at(t) * dt
+        t += dt
+    return t - start_s
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.sampled_from(sorted(TRACE_GENRES)),
+       st.integers(min_value=0, max_value=50),
+       st.floats(min_value=0.0, max_value=40.0))
+def test_transmit_time_matches_numeric_integration(genre, seed, start_s):
+    tr = make_trace(genre, seed=seed, duration_s=20.0)  # wraps past 20 s
+    n_bytes = 0.4 * tr.mean_bps / 8.0  # ~0.4 s of mean-rate payload
+    exact = tr.transmit_time(n_bytes, start_s)
+    brute = _brute_force_transmit(tr, n_bytes, start_s)
+    assert exact == pytest.approx(brute, abs=3e-4)
+    assert tr.transmit_time(0.0, start_s) == 0.0
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.sampled_from(sorted(TRACE_GENRES)),
+       st.integers(min_value=0, max_value=50),
+       st.floats(min_value=0.1, max_value=17.3))
+def test_transmit_time_monotone_in_bytes(genre, seed, start_s):
+    tr = make_trace(genre, seed=seed, duration_s=15.0)
+    unit = tr.mean_bps / 8.0  # one mean-rate second of payload
+    sizes = [0.0, 0.01 * unit, 0.3 * unit, unit, 2.7 * unit, 10.0 * unit]
+    times = [tr.transmit_time(b, start_s) for b in sizes]
+    for smaller, larger in zip(times, times[1:]):
+        assert larger > smaller, "more bytes can never upload faster"
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.sampled_from(sorted(TRACE_GENRES) + ["constant"]),
+       st.integers(min_value=0, max_value=50),
+       st.floats(min_value=0.0, max_value=9.0))
+def test_shared_transmit_conserves_capacity_with_padded_lanes(genre, seed,
+                                                              start_s):
+    """Processor sharing is work-conserving: the last finisher of N
+    simultaneous uploads lands exactly when a single upload of the summed
+    bytes would, and padded (zero-byte) lanes neither take capacity nor
+    report a duration."""
+    tr = constant_trace(2e6) if genre == "constant" else \
+        make_trace(genre, seed=seed, duration_s=12.0)
+    unit = tr.mean_bps / 8.0
+    rng = np.random.RandomState(seed)
+    sizes = [float(s) for s in rng.uniform(0.05, 0.6, size=4) * unit]
+    durs = tr.shared_transmit_times(sizes, start_s)
+    assert max(durs) == pytest.approx(
+        tr.transmit_time(sum(sizes), start_s), rel=1e-6)
+    # admission padding: idle lanes ride along at zero bytes — zero
+    # duration for them, identical durations for every real lane
+    padded_sizes = sizes + [0.0, 0.0, 0.0]
+    padded = tr.shared_transmit_times(padded_sizes, start_s)
+    assert all(d == 0.0 for d in padded[len(sizes):])
+    for real, with_pad in zip(durs, padded):
+        assert with_pad == pytest.approx(real, rel=1e-9)
+    # each lane's completion is no earlier than its fair-share lower
+    # bound (it can only *gain* from others finishing first)
+    for b, d in zip(sizes, durs):
+        solo = tr.transmit_time(b, start_s)
+        assert d >= solo - 1e-9

@@ -88,6 +88,63 @@ def test_sharded_knob_step_matches_vmap():
     """)
 
 
+def test_sharded_masked_step_and_serve_loop():
+    """Closed-loop churn serving on a real 4-way stream mesh, one
+    subprocess, two layers: (a) the admission-masked camera step shards
+    like the plain one — active lanes bit-match the unmasked program,
+    padded lanes report zero wire bytes, and the mask rides as data (no
+    recompile when membership flips at a fixed padded shape); (b)
+    serve_loop's admission pads to multiples of the mesh width and
+    per-stream accounting matches the single-device serve_loop chunk for
+    chunk."""
+    run_sub(_SETUP + """
+        from repro.control import ChurnEvent, FleetAutoscaler
+        from repro.distributed.mesh import make_stream_mesh
+        from repro.engine import MultiStreamEngine
+        from repro.serve.steps import make_camera_fleet_step, stream_sharding
+        mesh = make_stream_mesh(4)
+        batch = jnp.asarray(frames[:, :T])
+        active = np.zeros(N, bool); active[:5] = True
+        d0, p0, s0 = make_camera_fleet_step(am, qcfg, impl="fast")(batch)
+        step_mm = make_camera_fleet_step(am, qcfg, impl="fast", mask=True,
+                                         mesh=mesh)
+        sh = stream_sharding(mesh)
+        dm, pm, sm = step_mm(jax.device_put(batch, sh),
+                             jax.device_put(jnp.asarray(active), sh))
+        np.testing.assert_allclose(np.asarray(dm), np.asarray(d0),
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(pm)[:5], np.asarray(p0)[:5],
+                                   rtol=1e-6)
+        assert np.asarray(pm)[5:].sum() == 0.0  # padded lanes: zero bytes
+        # membership churn at a fixed shape re-enters the same program
+        assert step_mm._cache_size() == 1
+        step_mm(jax.device_put(batch, sh),
+                jax.device_put(jnp.ones(N, bool), sh))
+        assert step_mm._cache_size() == 1
+        print("masked step sharded OK")
+
+        events = [ChurnEvent(1, leave=(0, 5, 6, 7))]
+        results = {}
+        for label, eng_mesh in (("vmap", None), ("sharded", "auto")):
+            eng = MultiStreamEngine(dnn, am, qcfg, impl="fast",
+                                    mesh=eng_mesh,
+                                    autoscaler=FleetAutoscaler(
+                                        reuse_slack=1.0))
+            results[label] = eng.serve_loop(frames, events=events,
+                                            rescale=False)
+            assert results[label].shapes == [4, 8]
+        rv, rm = results["vmap"], results["sharded"]
+        assert rv.stream_ids == rm.stream_ids == list(range(N))
+        for sv, sm in zip(rv.streams, rm.streams):
+            assert len(sv.chunks) == len(sm.chunks)
+            for cv, cm in zip(sv.chunks, sm.chunks):
+                assert abs(cv.accuracy - cm.accuracy) < 1e-6
+                assert abs(cv.bytes - cm.bytes) / max(cv.bytes, 1.0) < 1e-5
+                assert cv.ci == cm.ci
+        print("sharded serve_loop==vmap OK")
+    """)
+
+
 def test_sharded_multistream_engine_matches_vmap():
     """End-to-end MultiStreamEngine on a 4-way stream mesh (mesh="auto",
     double-buffered) reproduces the single-device vmap path's per-stream
