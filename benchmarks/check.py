@@ -1,0 +1,75 @@
+"""Bench-regression guard CLI (the CI bench legs' gate).
+
+Compares freshly generated ``BENCH_<bench>.json`` files against the
+committed baselines and exits nonzero when a headline metric regresses
+more than the threshold (``benchmarks.common.check_bench_regressions``;
+headline metrics are machine-portable ratios — speedups, savings,
+verdict flags — never raw wall clocks). Usage::
+
+    PYTHONPATH=src python -m benchmarks.check \
+        --bench churn --baseline-dir bench-baselines [--threshold 0.25]
+
+The CI workflow copies the committed BENCH_*.json into
+``bench-baselines/`` before re-running the bench (which overwrites the
+repo-root copy), then runs this checker and uploads the fresh JSONs as
+workflow artifacts. A bench with no committed baseline passes with a
+note (the PR that introduces a bench has nothing to regress against).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from benchmarks.common import (HEADLINE_KEYS, REPO_ROOT,
+                               check_bench_regressions)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench", action="append", default=None,
+                    help="bench name(s) to check (default: every bench "
+                         "with headline metrics defined)")
+    ap.add_argument("--baseline-dir", type=Path, required=True,
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--fresh-dir", type=Path, default=REPO_ROOT,
+                    help="directory holding the freshly generated "
+                         "BENCH_*.json (default: repo root)")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="allowed fractional regression (default 0.25)")
+    args = ap.parse_args(argv)
+
+    benches = args.bench or sorted(HEADLINE_KEYS)
+    failures = []
+    for bench in benches:
+        fname = f"BENCH_{bench}.json"
+        base_path = args.baseline_dir / fname
+        fresh_path = args.fresh_dir / fname
+        if not base_path.exists():
+            print(f"[check] {bench}: no committed baseline at "
+                  f"{base_path}, nothing to regress against — skipping")
+            continue
+        if not fresh_path.exists():
+            failures.append(f"{bench}: baseline exists but the fresh "
+                            f"run produced no {fresh_path}")
+            continue
+        fresh = json.loads(fresh_path.read_text())
+        baseline = json.loads(base_path.read_text())
+        bench_failures = check_bench_regressions(fresh, baseline,
+                                                 threshold=args.threshold)
+        if bench_failures:
+            failures.extend(f"{bench}: {f}" for f in bench_failures)
+        else:
+            print(f"[check] {bench}: headline metrics within "
+                  f"{args.threshold:.0%} of baseline")
+    if failures:
+        print("\nBENCH REGRESSIONS:", file=sys.stderr)
+        for f in failures:
+            print(f"  FAIL {f}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

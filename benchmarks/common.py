@@ -52,6 +52,106 @@ def timer():
     return time.perf_counter()
 
 
+# ---------------------------------------------------------------------------
+# bench-regression guard (CI: the bench legs fail when a headline metric
+# regresses against the committed BENCH_*.json baselines)
+# ---------------------------------------------------------------------------
+#: Per-bench headline metrics: (row name -> derived keys that must not
+#: regress). Deliberately *ratio* metrics (speedups, savings) rather than
+#: raw microseconds — ratios of measurements from the same process are
+#: portable across machines (the committed baselines and the CI runners
+#: are different hardware), raw wall clocks are not.
+HEADLINE_KEYS = {
+    "churn": {
+        "churn/verdict": ("tail_p90_speedup",),
+        "churn/camera_compute_saving": ("saving",),
+    },
+    "control": {
+        "control/lte_verdict": ("p90_speedup",),
+        "control/wifi_verdict": ("p90_speedup",),
+        "control/drone_verdict": ("p90_speedup",),
+    },
+    "multistream": {
+        "multistream/fleet_speedup_best": ("speedup",),
+        "multistream/pipeline_overlapped": ("speedup",),
+    },
+}
+
+#: derived keys that are pass/fail verdict flags: a yes in the baseline
+#: that turns no in the fresh run is a regression at any magnitude
+VERDICT_KEYS = ("met", "ok")
+
+
+def parse_derived(derived: str) -> dict:
+    """``"a=1.19x;b=+0.0000;met=yes"`` -> ``{"a": "1.19x", ...}``."""
+    out = {}
+    for part in (derived or "").split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k.strip()] = v.strip()
+    return out
+
+
+def metric_value(s: str):
+    """Numeric value of a derived metric string (``"1.19x"`` -> 1.19,
+    ``"51.86%"`` -> 0.5186, ``"+0.0000"`` -> 0.0); None if non-numeric."""
+    s = s.strip().lstrip("+")
+    scale = 1.0
+    if s.endswith("x"):
+        s = s[:-1]
+    elif s.endswith("%"):
+        s, scale = s[:-1], 0.01
+    try:
+        return float(s) * scale
+    except ValueError:
+        return None
+
+
+def headline_metrics(payload: dict) -> dict:
+    """``{"row::key": value}`` for the bench's headline rows, plus every
+    verdict flag as ``{"row::met": "yes"|"no"}``."""
+    keys = HEADLINE_KEYS.get(payload.get("bench"), {})
+    out = {}
+    for row in payload.get("rows", []):
+        derived = parse_derived(row.get("derived", ""))
+        for key in keys.get(row["name"], ()):
+            if key in derived:
+                v = metric_value(derived[key])
+                if v is not None:
+                    out[f"{row['name']}::{key}"] = v
+        for key in VERDICT_KEYS:
+            if key in derived and derived[key] in ("yes", "no"):
+                out[f"{row['name']}::{key}"] = derived[key]
+    return out
+
+
+def check_bench_regressions(fresh: dict, baseline: dict,
+                            threshold: float = 0.25) -> list:
+    """Compare a fresh bench payload against the committed baseline.
+
+    Returns a list of human-readable failure strings (empty = pass):
+    a headline ratio metric more than ``threshold`` below baseline, a
+    verdict flag flipping yes -> no, or a baseline headline row missing
+    from the fresh run entirely (silent metric loss counts as failure).
+    """
+    fresh_m, base_m = headline_metrics(fresh), headline_metrics(baseline)
+    failures = []
+    for name, base_v in sorted(base_m.items()):
+        if name not in fresh_m:
+            failures.append(f"{name}: present in baseline but missing "
+                            f"from the fresh run")
+            continue
+        fresh_v = fresh_m[name]
+        if isinstance(base_v, str):  # verdict flag
+            if base_v == "yes" and fresh_v == "no":
+                failures.append(f"{name}: verdict regressed yes -> no")
+        elif fresh_v < base_v * (1.0 - threshold):
+            failures.append(
+                f"{name}: {fresh_v:.4g} is more than {threshold:.0%} "
+                f"below the baseline {base_v:.4g}")
+    return failures
+
+
 @functools.lru_cache()
 def final_dnn(task: str = "detection", genre: str = "dashcam",
               steps: int = 600, width: int = 32, name: str | None = None):

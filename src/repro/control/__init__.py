@@ -17,8 +17,9 @@ Three parts, consumed by the engines:
   joins/leaves to already-compiled fleet shapes.
 """
 from repro.control.autoscaler import (AdmissionPlan, ChurnEvent,
-                                      FleetAutoscaler, ScaleDecision,
-                                      apply_churn, pad_streams)
+                                      CrossHostAutoscaler, FleetAutoscaler,
+                                      ScaleDecision, apply_churn,
+                                      pad_streams)
 from repro.control.controller import (ChunkObservation, ControlKnobs,
                                       ControlledAccMPEGPolicy,
                                       RateController)
@@ -27,7 +28,8 @@ from repro.control.traces import (NetworkTrace, TRACE_GENRES, drone_trace,
 
 __all__ = [
     "AdmissionPlan", "ChunkObservation", "ChurnEvent", "ControlKnobs",
-    "ControlledAccMPEGPolicy", "FleetAutoscaler", "NetworkTrace",
+    "ControlledAccMPEGPolicy", "CrossHostAutoscaler",
+    "FleetAutoscaler", "NetworkTrace",
     "RateController", "ScaleDecision", "TRACE_GENRES", "apply_churn",
     "drone_trace", "lte_trace", "make_trace", "pad_streams", "wifi_trace",
 ]

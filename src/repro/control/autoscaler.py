@@ -163,9 +163,13 @@ class FleetAutoscaler:
                n_devices: Optional[int] = None) -> ScaleDecision:
         """Pick the next (mesh_width, batch_depth) from measured timing."""
         if n_devices is None:
-            import jax
+            # the devices a scale-out can actually claim: this host's.
+            # Single-process that is every device; under jax.distributed
+            # multi-process serving, counting other hosts' devices would
+            # propose stream-mesh widths this process cannot build.
+            from repro.distributed.sharding import host_local_devices
 
-            n_devices = len(jax.devices())
+            n_devices = len(host_local_devices())
         occ = stage_occupancy(timing)
         bottleneck = max(occ, key=occ.get)
         if occ[bottleneck] <= 0.0:
@@ -256,6 +260,65 @@ class FleetAutoscaler:
         active[:n_active] = True
         return AdmissionPlan(n_active=n_active, n_padded=n_padded,
                              active=active, reused=reused)
+
+
+class CrossHostAutoscaler(FleetAutoscaler):
+    """Multi-host split of the autoscaler: admission stays *host-local*
+    (each host pads its own active set to pow2 buckets of its own mesh
+    width — the O(log N) compiled-shape guarantee holds per host), while
+    :meth:`decide` becomes a *global* agreement driven by every host's
+    gathered ``FleetTiming`` occupancy.
+
+    ``exchange`` is any object with ``allgather(tag, obj) -> list`` over
+    the fleet's hosts (``repro.distributed.multihost.KVExchange`` in a
+    real ``jax.distributed`` run; a fake in unit tests). Each host
+    publishes its interval window (stage time sums, wall clock, stream
+    count) and every host computes the identical decision from the
+    identical aggregate — no coordinator host, no decision skew.
+
+    Lockstep contract: every host must call :meth:`decide` the same
+    number of times in the same order (the exchange is round-counted).
+    ``serve_loop`` skips its decide on all-quiet intervals, so schedules
+    that quiet one host but not another must serve with
+    ``rescale=False`` (host-local scheduling) or keep every host
+    non-empty; :func:`repro.serve.fleet.serve_fleet` defaults to the
+    former.
+    """
+
+    def __init__(self, exchange, **kwargs):
+        super().__init__(**kwargs)
+        self.exchange = exchange
+
+    def decide(self, timing: FleetTiming, n_streams: int,
+               mesh_width: int = 1, batch_depth: int = 2,
+               n_devices: Optional[int] = None) -> ScaleDecision:
+        if n_devices is None:
+            from repro.distributed.sharding import host_local_devices
+
+            n_devices = len(host_local_devices())
+        local = {
+            "camera_s": [float(x) for x in timing.camera_s],
+            "server_s": [float(x) for x in timing.server_s],
+            "host_s": [float(x) for x in timing.host_s],
+            "wall_s": float(timing.wall_s),
+            "n_streams": int(n_streams),
+            "n_devices": int(n_devices),
+        }
+        gathered = self.exchange.allgather("autoscaler_decide", local)
+        agg = FleetTiming(wall_s=max(g["wall_s"] for g in gathered))
+        for g in gathered:
+            agg.camera_s.extend(g["camera_s"])
+            agg.server_s.extend(g["server_s"])
+            agg.host_s.extend(g["host_s"])
+        total = sum(g["n_streams"] for g in gathered)
+        # mesh_width/batch_depth stay host-local knobs, but the decision
+        # must be identical on every host even when device counts differ
+        # — so the width ceiling is the *gathered minimum* device count
+        # (a width every host can actually build)
+        return super().decide(agg, total, mesh_width=mesh_width,
+                              batch_depth=batch_depth,
+                              n_devices=min(g["n_devices"]
+                                            for g in gathered))
 
 
 def pad_streams(frames: np.ndarray, n_padded: int) -> np.ndarray:

@@ -61,6 +61,19 @@ class ChunkResult:
         return (self.encode_s + self.overhead_s + self.stream_s
                 + self.extra_rtt_s + self.queue_s)
 
+    # -- cross-host wire format ------------------------------------------
+    # Multi-host fleet serving (repro.serve.fleet) assembles the global
+    # FleetResult by gathering each host's per-stream chunk accounting
+    # over the jax.distributed KV store. JSON float round-trips are
+    # exact, so a result that crossed hosts is bit-identical to the one
+    # that stayed local (the parity tests compare the two directly).
+    def to_wire(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_wire(cls, d: dict) -> "ChunkResult":
+        return cls(**d)
+
 
 @dataclasses.dataclass
 class RunResult:
@@ -144,6 +157,22 @@ class FleetTiming:
             "serialized_s": self.serialized_s,
             "overlap_speedup": self.overlap_speedup,
         }
+
+    @staticmethod
+    def merge_concurrent(timings: Sequence["FleetTiming"]) -> "FleetTiming":
+        """Fold per-host timings into one fleet view. Hosts serve in
+        parallel, so ``wall_s`` is the slowest host's (the fleet's
+        makespan) while the stage lists concatenate — their sums then
+        read as total fleet device/host work, and ``serialized_s``
+        becomes the single-host upper bound the multi-host split is
+        measured against."""
+        out = FleetTiming(wall_s=max((t.wall_s for t in timings),
+                                     default=0.0))
+        for t in timings:
+            out.camera_s.extend(t.camera_s)
+            out.server_s.extend(t.server_s)
+            out.host_s.extend(t.host_s)
+        return out
 
 
 def pipeline_makespan(camera_s: Sequence[float],

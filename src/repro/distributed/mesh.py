@@ -73,16 +73,33 @@ def make_local_mesh() -> Mesh:
 STREAM_AXIS = "stream"
 
 
+def _fleet_devices():
+    """Devices fleet meshes build over: this *host's* devices.
+
+    Single-process, that is every device (unchanged behavior). Under
+    ``jax.distributed`` multi-process serving each host owns its local
+    streams and runs the camera fleet step on its own devices — the
+    stream axis has no cross-stream collectives, so a process-spanning
+    mesh would buy nothing and cost global-array plumbing; cross-host
+    aggregation rides the control plane instead
+    (``repro.serve.fleet``)."""
+    from repro.distributed.sharding import host_local_devices
+
+    return host_local_devices()
+
+
 def make_stream_mesh(n_shards: int = None) -> Mesh:
     """1-D mesh over the ``"stream"`` axis for sharded fleet serving.
 
     Camera streams are embarrassingly parallel (no cross-stream collectives
     in the camera step), so the fleet axis shards over a flat device list:
     each device runs the identical per-shard camera program on N/n_shards
-    streams. Defaults to every available device; works on host-platform
-    devices (``--xla_force_host_platform_device_count``) for tests.
+    streams. Defaults to every device *this process addresses* (all
+    devices single-process; ``jax.local_devices()`` under multi-process
+    serving — see :func:`_fleet_devices`); works on host-platform devices
+    (``--xla_force_host_platform_device_count``) for tests.
     """
-    devices = jax.devices()
+    devices = _fleet_devices()
     n = n_shards or len(devices)
     if len(devices) < n:
         raise RuntimeError(f"need {n} devices for a {n}-way stream mesh, "
@@ -92,17 +109,19 @@ def make_stream_mesh(n_shards: int = None) -> Mesh:
 
 def make_local_stream_mesh() -> Mesh:
     """Single-device stream mesh (the make_local_mesh-style fallback)."""
-    return Mesh(np.asarray(jax.devices()[:1]), (STREAM_AXIS,))
+    return Mesh(np.asarray(_fleet_devices()[:1]), (STREAM_AXIS,))
 
 
 def stream_mesh_for(n_streams: int) -> Mesh:
     """Largest stream mesh that divides ``n_streams`` evenly.
 
     shard_map needs the stream axis to divide the mesh; this picks the
-    widest usable mesh on whatever devices exist (1 device -> the local
-    fallback), so callers can say ``mesh="auto"`` and run anywhere.
+    widest usable mesh on whatever devices this process addresses
+    (1 device -> the local fallback), so callers can say ``mesh="auto"``
+    and run anywhere — including inside one host of a multi-process
+    fleet, where ``n_streams`` is the host-local stream count.
     """
-    n_dev = len(jax.devices())
+    n_dev = len(_fleet_devices())
     width = max(d for d in range(1, min(n_dev, n_streams) + 1)
                 if n_streams % d == 0)
     return make_stream_mesh(width)

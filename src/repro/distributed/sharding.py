@@ -26,6 +26,53 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+def process_count() -> int:
+    """Version-tolerant ``jax.process_count()`` (1 on ancient jax or a
+    backend that is not yet initialized)."""
+    try:
+        return int(jax.process_count())
+    except Exception:
+        return 1
+
+
+def process_index() -> int:
+    try:
+        return int(jax.process_index())
+    except Exception:
+        return 0
+
+
+def host_local_devices():
+    """The devices fleet-serving meshes may use in this process.
+
+    Under ``jax.distributed`` multi-process serving each host runs its
+    *own* camera fleet programs on its *own* devices (the stream axis has
+    no cross-stream collectives, so a global SPMD mesh would only force
+    global-array plumbing for zero win) — so fleet meshes are built over
+    ``jax.local_devices()``. Single-process, local == global and nothing
+    changes for existing callers.
+    """
+    return jax.local_devices() if process_count() > 1 else jax.devices()
+
+
+def assert_addressable_mesh(mesh: Mesh, what: str) -> None:
+    """Loud error when a fleet mesh names devices this process cannot
+    address (another host's). Fleet camera/server steps are host-local
+    by design; silently lowering over a global mesh would hang or
+    mis-shard. Multi-host serving goes through
+    ``repro.serve.fleet.serve_fleet`` instead."""
+    pid = process_index()
+    remote = [d for d in np.asarray(mesh.devices).flat
+              if getattr(d, "process_index", pid) != pid]
+    if remote:
+        raise ValueError(
+            f"{what} is host-local but the mesh names "
+            f"{len(remote)} device(s) owned by other processes "
+            f"(process {pid} of {process_count()}); build fleet meshes "
+            f"over jax.local_devices() (distributed.mesh helpers do) and "
+            f"use repro.serve.fleet.serve_fleet for multi-host serving")
+
+
 def shard_map(f, mesh: Mesh, in_specs, out_specs):
     """Version-spanning shard_map with replication checking off.
 

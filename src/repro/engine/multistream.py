@@ -84,6 +84,8 @@ class FleetResult:
     stream_ids: Optional[List[int]] = None   # serve_loop: lane ids
     decisions: Optional[List] = None         # serve_loop: ScaleDecisions
     shapes: Optional[List[int]] = None       # serve_loop: padded shapes
+    hosts: Optional[List[int]] = None  # multi-host (serve_fleet): the
+    # ingestion host that served each entry of ``streams``
 
     @property
     def n_streams(self):
@@ -169,6 +171,14 @@ class MultiStreamEngine:
                ``ScaleDecision`` (``self.last_scale``); ``apply_scale()``
                adopts it for the next run.
 
+    ``sim_encode_s`` replaces the *accounted* per-chunk camera time (the
+               ``ChunkResult.encode_s`` charge and the uplink clock's
+               ready time) with a fixed constant, making trace-driven
+               delay accounting fully deterministic — multi-host parity
+               tests and simulation replays depend on it. ``FleetTiming``
+               keeps the measured wall clocks either way, so autoscaler
+               occupancy still sees real hardware.
+
     ``run()`` serves a fixed fleet; :meth:`serve_loop` is the closed-loop
     variant — stream membership churns via ``control.ChurnEvent``s,
     admission re-pads the fleet shape mid-stream, and ``ScaleDecision``s
@@ -181,7 +191,8 @@ class MultiStreamEngine:
                  chunk_size: int = 10, impl: str = "fast",
                  mesh: Union[Mesh, str, None] = None,
                  overlap: bool = True, depth: int = 2, trace=None,
-                 controller=None, autoscaler=None, fps: float = 30.0):
+                 controller=None, autoscaler=None, fps: float = 30.0,
+                 sim_encode_s: Optional[float] = None):
         self.final_dnn = final_dnn
         self.accmodel = accmodel
         self.qcfg = qcfg
@@ -195,6 +206,7 @@ class MultiStreamEngine:
         self.controller = controller
         self.autoscaler = autoscaler
         self.fps = fps
+        self.sim_encode_s = sim_encode_s
         self.last_scale = None  # autoscaler's most recent ScaleDecision
         self._steps = {}  # resolved mesh (or None) -> (camera, server)
         self._warm = {}   # (shape, mesh, refs is None) -> steady-state times
@@ -442,11 +454,15 @@ class MultiStreamEngine:
             cam_dt = cam_steady_s if self.overlap \
                 else time.perf_counter() - t0
             timing.camera_s.append(cam_dt)
+            # accounting charge: the measured step time, or the fixed
+            # simulation constant (deterministic delay replay / parity)
+            acct_dt = cam_dt if self.sim_encode_s is None \
+                else self.sim_encode_s
             t1 = time.perf_counter()
             outs = server_step(decoded)           # batched server DNN
             ref_outs = server_step(batch) if refs is None else None
             pending.append(dict(ci=ci, outs=outs, ref_outs=ref_outs,
-                                pbytes=pbytes, cam_dt=cam_dt,
+                                pbytes=pbytes, cam_dt=acct_dt,
                                 server_steady_s=server_steady_s,
                                 knobs=knobs_used))
             if not self.overlap:
@@ -473,7 +489,8 @@ class MultiStreamEngine:
     # -- the closed-loop churn serving loop ------------------------------------
     def serve_loop(self, frames, events=(), refs=None, initial=None,
                    net: Optional[NetworkConfig] = None, rescale: bool = True,
-                   decide_every: int = 1) -> FleetResult:
+                   decide_every: int = 1,
+                   owned: Optional[Sequence[int]] = None) -> FleetResult:
         """Closed-loop fleet serving under stream churn: scaling happens
         *inside* the loop, not between runs.
 
@@ -510,6 +527,13 @@ class MultiStreamEngine:
         ``decide_every`` spaces out scale decisions (1 = every interval,
         AIMD-style one notch each).
 
+        ``owned`` declares this engine's stream ownership (multi-host
+        serving: the host's shard of the fleet,
+        ``repro.serve.fleet.FleetTopology``). Whenever the admitted
+        active set reaches past it the loop raises a loud ``ValueError``
+        instead of silently serving — and mis-accounting — another
+        host's streams.
+
         Returns a :class:`FleetResult` whose ``streams`` hold one
         ``RunResult`` per stream id that ever served (``stream_ids`` maps
         them back), plus the ``decisions`` and compiled-``shapes``
@@ -540,8 +564,9 @@ class MultiStreamEngine:
             # compose with admit's pow2 lane buckets: any padded shape
             # stays divisible)
             from repro.distributed.mesh import make_stream_mesh
+            from repro.distributed.sharding import host_local_devices
 
-            n_dev = len(jax.devices())
+            n_dev = len(host_local_devices())
             width = 1 << (n_dev.bit_length() - 1)
             self.mesh = make_stream_mesh(width) if width > 1 else None
         active_ids = list(range(N_total)) if initial is None \
@@ -553,6 +578,7 @@ class MultiStreamEngine:
             if not 0 <= sid < N_total:
                 raise ValueError(f"initial names stream {sid}; fleet "
                                  f"has {N_total}")
+        owned_set = None if owned is None else frozenset(owned)
         net = net or self.net or NetworkConfig.shared(2.5e6,
                                                       max(N_total, 1))
         controlled = self.controller is not None
@@ -570,6 +596,17 @@ class MultiStreamEngine:
         t_run = time.perf_counter()
         for ci, s in enumerate(starts):
             active_ids = apply_churn(active_ids, events, ci)
+            if owned_set is not None:
+                stray = sorted(sid for sid in active_ids
+                               if sid not in owned_set)
+                if stray:
+                    raise ValueError(
+                        f"admitted active set at chunk {ci} includes "
+                        f"streams {stray} outside this engine's declared "
+                        f"ownership {sorted(owned_set)}; route the "
+                        f"schedule through repro.serve.fleet (or fix the "
+                        f"FleetTopology) instead of silently mis-"
+                        f"sharding another host's streams")
             plan = scaler.admit(len(active_ids),
                                 mesh_width=self._mesh_width())
             if plan.n_padded == 0:
@@ -619,12 +656,14 @@ class MultiStreamEngine:
             cam_dt = cam_steady_s if self.overlap \
                 else time.perf_counter() - t0
             timing.camera_s.append(cam_dt)
+            acct_dt = cam_dt if self.sim_encode_s is None \
+                else self.sim_encode_s
             t1 = time.perf_counter()
             outs = server_step(decoded)           # batched server DNN
             ref_outs = server_step(batch) if refs is None else None
             pending.append(dict(ci=ci, ids=ids, outs=outs,
                                 ref_outs=ref_outs, pbytes=pbytes,
-                                cam_dt=cam_dt,
+                                cam_dt=acct_dt,
                                 server_steady_s=server_steady_s,
                                 knobs=knobs_used))
             if not self.overlap:

@@ -1,0 +1,221 @@
+"""Multi-process fleet launcher: N worker processes joined over
+``jax.distributed`` with a CPU coordinator on ``127.0.0.1``.
+
+The ``tests/_subproc.py`` pattern (fresh interpreters so the JAX backend
+view is per-process), promoted into the package so CI's multihost-smoke
+job, the test suite, and local experiments share one launcher. Each
+worker gets the ``repro.distributed.multihost`` env contract
+(``FLEET_COORD`` / ``FLEET_NPROCS`` / ``FLEET_PROC_ID``) and a prelude
+that joins the distributed service *before* the first backend touch —
+exactly what a real per-host deployment (k8s pod, systemd unit) would
+do, minus the machines.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.launch.fleet --smoke
+
+runs the 2-process parity check end to end on CPU: a churned two-host
+fleet served once in-process (single-process local fallback) and once as
+two ``jax.distributed`` workers, asserting the global ``FleetResult``s
+are bit-identical — accuracy, wire bytes, and (under the deterministic
+``sim_encode_s`` accounting) every delay component.
+"""
+from __future__ import annotations
+
+import json
+import os
+import socket
+import subprocess
+import sys
+import textwrap
+import time
+from pathlib import Path
+from typing import List, Optional
+
+SRC = str(Path(__file__).resolve().parents[2])
+
+
+def find_free_port(host: str = "127.0.0.1") -> int:
+    s = socket.socket()
+    s.bind((host, 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def worker_prelude(devices_per_proc: int = 1) -> str:
+    """Python source every worker runs first: CPU platform, optional
+    host-forced device fan-out, src on sys.path, and the
+    ``jax.distributed`` join from the launcher env."""
+    force = ""
+    if devices_per_proc > 1:
+        force = (f'os.environ["XLA_FLAGS"] = '
+                 f'"--xla_force_host_platform_device_count='
+                 f'{devices_per_proc}"\n        ')
+    return textwrap.dedent(f"""
+        import os
+        {force}os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import sys
+        sys.path.insert(0, {SRC!r})
+        import jax, jax.numpy as jnp, numpy as np
+        jax.config.update("jax_enable_x64", False)
+        from repro.distributed import multihost
+        assert multihost.init_from_env(), "launcher env missing"
+    """)
+
+
+def launch_fleet(body: str, num_processes: int = 2,
+                 devices_per_proc: int = 1, timeout: int = 900,
+                 env: Optional[dict] = None) -> List[str]:
+    """Run ``body`` (dedented python source, after the prelude) in
+    ``num_processes`` workers joined via ``jax.distributed``; returns
+    each worker's stdout in process order.
+
+    Failure is loud and collective: any nonzero exit (or a hang past
+    ``timeout`` — e.g. a worker waiting at a barrier its dead sibling
+    never reaches) kills the whole gang and raises with the offending
+    worker's output."""
+    import threading
+
+    from repro.distributed.multihost import (ENV_COORD, ENV_NPROCS,
+                                             ENV_PROC_ID)
+
+    port = find_free_port()
+    script = worker_prelude(devices_per_proc) + textwrap.dedent(body)
+    procs = []
+    for i in range(num_processes):
+        e = dict(os.environ)
+        e.update(env or {})
+        e[ENV_COORD] = f"127.0.0.1:{port}"
+        e[ENV_NPROCS] = str(num_processes)
+        e[ENV_PROC_ID] = str(i)
+        procs.append(subprocess.Popen(
+            [sys.executable, "-c", script], env=e,
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True))
+    # drain every worker's pipes concurrently: a sequential communicate()
+    # on worker 0 would leave a chatty sibling blocked on a full OS pipe
+    # buffer, unable to reach its next barrier — deadlocking the gang
+    results = [None] * num_processes
+
+    def _drain(i, p):
+        results[i] = p.communicate()
+
+    threads = [threading.Thread(target=_drain, args=(i, p), daemon=True)
+               for i, p in enumerate(procs)]
+    deadline = time.monotonic() + timeout
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(max(0.0, deadline - time.monotonic()))
+    if any(t.is_alive() for t in threads):
+        for p in procs:
+            p.kill()
+        for t in threads:
+            t.join(10.0)
+        raise RuntimeError(
+            f"fleet worker hung past {timeout}s (a dead sibling leaves "
+            f"survivors blocked at the next allgather); gang killed")
+    outs, failures = [], []
+    for i, (p, res) in enumerate(zip(procs, results)):
+        out, err = res
+        outs.append(out)
+        if p.returncode != 0:
+            failures.append(f"worker {i} rc={p.returncode}\n"
+                            f"stdout:\n{out}\nstderr:\n{err[-4000:]}")
+    if failures:
+        raise RuntimeError("fleet launch failed:\n" + "\n".join(failures))
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# the 2-process parity smoke (CI: multihost-smoke job)
+# ---------------------------------------------------------------------------
+def _smoke_digest() -> dict:
+    """Serve a small churned two-host fleet and digest the global result.
+
+    Deterministic by construction — seeded scenes, seeded model inits,
+    ``sim_encode_s`` accounting, per-host constant traces — so the same
+    digest must come out of the single-process fallback and of every
+    ``jax.distributed`` worker, bit for bit. Workers import and call
+    this very function: one source of truth for what "the same run"
+    means."""
+    import jax
+    import numpy as np
+
+    from repro.control import ChurnEvent, FleetAutoscaler
+    from repro.control.traces import constant_trace
+    from repro.core.accmodel import AccModel, accmodel_init
+    from repro.data.video import make_scene
+    from repro.engine import MultiStreamEngine
+    from repro.serve.fleet import FleetTopology, serve_fleet
+    from repro.vision.dnn import FinalDNN, init_net
+
+    h, w, cs = 48, 64, 10
+    dnn = FinalDNN("detection",
+                   init_net("detection", jax.random.PRNGKey(0), width=8))
+    am = AccModel(accmodel_init(jax.random.PRNGKey(1), 8))
+    frames = np.stack([
+        make_scene("dashcam", seed=40 + i, T=3 * cs, H=h, W=w).frames
+        for i in range(4)])
+    topology = FleetTopology(((0, 1), (2, 3)))
+
+    def make_engine(host):
+        # per-host uplink: each ingestion host carries its own trace
+        return MultiStreamEngine(
+            dnn, am, impl="fast", chunk_size=cs,
+            trace=constant_trace(1.5e5 * (host + 1), rtt_s=0.02),
+            autoscaler=FleetAutoscaler(), sim_encode_s=0.05)
+
+    res = serve_fleet(
+        make_engine, frames, topology,
+        events=[ChurnEvent(1, leave=(1,)), ChurnEvent(2, join=(1,),
+                                                      leave=(3,))])
+    return {
+        "stream_ids": res.stream_ids,
+        "hosts": res.hosts,
+        "shapes": res.shapes,
+        "chunks": [[c.ci, c.accuracy, c.bytes, c.encode_s, c.stream_s,
+                    c.queue_s]
+                   for run in res.streams for c in run.chunks],
+    }
+
+
+_SMOKE_BODY = """
+    import json
+    from repro.launch.fleet import _smoke_digest
+    print("DIGEST " + json.dumps(_smoke_digest(), sort_keys=True))
+"""
+
+
+def smoke() -> None:
+    """The CI multihost-smoke: 2-process ``jax.distributed`` serve run
+    must match the single-process fallback bit-exactly."""
+    reference = json.loads(json.dumps(_smoke_digest(), sort_keys=True))
+    outs = launch_fleet(_SMOKE_BODY, num_processes=2, timeout=600)
+    digests = []
+    for i, out in enumerate(outs):
+        lines = [ln for ln in out.splitlines() if ln.startswith("DIGEST ")]
+        assert lines, f"worker {i} printed no digest:\n{out}"
+        digests.append(json.loads(lines[-1][len("DIGEST "):]))
+    for i, d in enumerate(digests):
+        assert d == reference, (
+            f"worker {i} global FleetResult diverged from the "
+            f"single-process run:\n{d}\n!=\n{reference}")
+    n_chunks = len(reference["chunks"])
+    print(f"multihost-smoke OK: 2-process jax.distributed serve == "
+          f"single-process fallback, bit-exact "
+          f"({n_chunks} stream-chunks, streams={reference['stream_ids']}, "
+          f"hosts={reference['hosts']}, shapes={reference['shapes']})")
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    args = list(sys.argv[1:] if argv is None else argv)
+    if args == ["--smoke"]:
+        smoke()
+        return
+    raise SystemExit(f"usage: python -m repro.launch.fleet --smoke "
+                     f"(got {args})")
+
+
+if __name__ == "__main__":
+    main()

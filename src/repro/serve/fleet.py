@@ -1,0 +1,308 @@
+"""True multi-host fleet serving: per-host camera ingestion over
+``jax.distributed``, assembled into one global :class:`FleetResult`.
+
+The stream mesh (PR 2) shards one process's devices; this module is the
+deployment shape above it — the SiEVE/AccMPEG setting of many ingestion
+hosts with *independent uplinks* feeding shared server capacity:
+
+- :class:`FleetTopology` declares which host owns which global stream
+  ids, with loud validation: a schedule that names a stream no host
+  owns, or an admitted active set reaching past a host's declared
+  ownership, raises ``ValueError`` instead of silently mis-sharding.
+- :func:`serve_fleet` runs the closed-loop
+  ``MultiStreamEngine.serve_loop`` once per host — each host's engine
+  carries its *own* ``UplinkClock``/``NetworkTrace`` and shards over its
+  *own* local devices — then gathers every host's per-stream chunk
+  accounting over the ``jax.distributed`` KV store
+  (``distributed.multihost``) and assembles the identical global
+  :class:`FleetResult` on every host. Padded admission lanes already
+  contribute exactly zero on their home host (PR 4's guarantee), so the
+  cross-host reduction preserves it by construction: the wire carries
+  only *served* chunks.
+- Single-process (no ``jax.distributed``), the same call simulates the
+  whole topology locally, host by host, through the same merge path —
+  the default, so existing callers never change; the 2-process parity
+  suite pins local-vs-distributed bit-identity (accuracy, wire bytes,
+  delays under ``sim_encode_s``).
+
+Churn routing: ``ChurnEvent``s name global stream ids; ``split_events``
+routes each join/leave to the owning host's schedule (local lane ids),
+so a camera joining host 1 never perturbs host 0's compiled shapes.
+
+Scale decisions: admission is host-local (pow2-padded shapes per host —
+O(log N) compiled programs per host). Global ``decide`` goes through
+``control.CrossHostAutoscaler`` (gathered-occupancy agreement); because
+its exchange rounds must stay in lockstep across hosts while all-quiet
+intervals skip deciding, ``serve_fleet`` defaults to ``rescale=False``
+and callers opt in when every host's schedule keeps deciding.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.control.autoscaler import ChurnEvent, ScaleDecision
+from repro.core.pipeline import ChunkResult, FleetTiming, RunResult
+from repro.engine.multistream import FleetResult
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetTopology:
+    """Declared per-host stream ownership.
+
+    ``ownership[h]`` is the tuple of *global* stream ids host ``h``
+    ingests. Hosts are disjoint (one camera uplinks to one host); the
+    union need not cover every index of the frame array — but any stream
+    a schedule names must be owned (validated loudly, see
+    :meth:`validate_covers`).
+    """
+
+    ownership: Tuple[Tuple[int, ...], ...]
+
+    def __post_init__(self):
+        own = tuple(tuple(int(s) for s in host) for host in self.ownership)
+        object.__setattr__(self, "ownership", own)
+        if not own:
+            raise ValueError("a fleet topology needs at least one host")
+        seen = {}
+        for h, ids in enumerate(own):
+            if len(set(ids)) != len(ids):
+                raise ValueError(f"host {h} lists a stream twice: {ids}")
+            for sid in ids:
+                if sid < 0:
+                    raise ValueError(f"negative stream id {sid} on "
+                                     f"host {h}")
+                if sid in seen:
+                    raise ValueError(f"stream {sid} owned by both host "
+                                     f"{seen[sid]} and host {h}")
+                seen[sid] = h
+        object.__setattr__(self, "_owner", seen)
+
+    @property
+    def n_hosts(self) -> int:
+        return len(self.ownership)
+
+    @property
+    def all_streams(self) -> Tuple[int, ...]:
+        return tuple(sorted(self._owner))
+
+    def owner_of(self, sid: int) -> int:
+        try:
+            return self._owner[sid]
+        except KeyError:
+            raise ValueError(
+                f"stream {sid} is not owned by any host in this "
+                f"topology (ownership={self.ownership}); every stream a "
+                f"schedule names must have a declared ingestion host")
+
+    def validate_covers(self, ids: Sequence[int], what: str = "schedule"):
+        """Loud ``ValueError`` when the declared ownership does not cover
+        every stream the ``what`` names — the multi-host analogue of an
+        out-of-range stream id, caught before any host mis-shards."""
+        stray = sorted(set(int(s) for s in ids) - set(self._owner))
+        if stray:
+            raise ValueError(
+                f"declared per-host stream ownership does not cover the "
+                f"{what}: streams {stray} have no ingestion host "
+                f"(ownership={self.ownership})")
+
+    @classmethod
+    def contiguous(cls, n_streams: int, n_hosts: int) -> "FleetTopology":
+        """Even contiguous split (host 0 gets the first block, ...)."""
+        if n_hosts < 1 or n_streams < n_hosts:
+            raise ValueError(f"cannot split {n_streams} streams over "
+                             f"{n_hosts} hosts")
+        bounds = np.linspace(0, n_streams, n_hosts + 1).astype(int)
+        return cls(tuple(tuple(range(a, b))
+                         for a, b in zip(bounds, bounds[1:])))
+
+
+def split_events(topology: FleetTopology,
+                 events: Sequence[ChurnEvent]) -> List[List[ChurnEvent]]:
+    """Route a global churn schedule to the owning hosts.
+
+    Each event's joins/leaves partition by owner; a host receives an
+    event only when it names at least one of its streams (still in
+    *global* ids — :func:`serve_fleet` remaps to local lanes). A stream
+    no host owns raises the topology's loud ``ValueError``.
+    """
+    per_host: List[List[ChurnEvent]] = [[] for _ in topology.ownership]
+    for ev in events:
+        for sid in ev.join + ev.leave:
+            topology.owner_of(sid)  # loud on unowned streams
+        for h in range(topology.n_hosts):
+            join = tuple(s for s in ev.join if topology.owner_of(s) == h)
+            leave = tuple(s for s in ev.leave
+                          if topology.owner_of(s) == h)
+            if join or leave:
+                per_host[h].append(ChurnEvent(ev.chunk, join=join,
+                                              leave=leave))
+    return per_host
+
+
+# ---------------------------------------------------------------------------
+# cross-host wire format + reduction
+# ---------------------------------------------------------------------------
+def host_payload(host: int, owned: Sequence[int], res: FleetResult) -> dict:
+    """One host's serve_loop result as a JSON-serializable payload. Lane
+    ids are translated back to global stream ids here, so the merge only
+    ever sees the global namespace."""
+    owned = list(owned)
+    # which absolute chunk interval each camera_s entry belongs to: the
+    # serve loop appends one entry per *served* interval (all-quiet
+    # intervals append nothing), and every served interval produced at
+    # least one chunk carrying its ci — so the sorted served-ci set
+    # aligns 1:1 with camera_s. The merge needs this to max-combine
+    # hosts by interval, not by list position (hosts idle differently).
+    cis = sorted({c.ci for run in res.streams for c in run.chunks})
+    if len(cis) != len(res.camera_s):  # run(): ci == position
+        cis = list(range(len(res.camera_s)))
+    return {
+        "host": int(host),
+        "streams": [
+            {"sid": int(owned[lane]),
+             "chunks": [c.to_wire() for c in run.chunks]}
+            for lane, run in zip(res.stream_ids, res.streams)],
+        "camera_s": [float(x) for x in res.camera_s],
+        "camera_ci": [int(ci) for ci in cis],
+        "timing": {
+            "camera_s": [float(x) for x in res.timing.camera_s],
+            "server_s": [float(x) for x in res.timing.server_s],
+            "host_s": [float(x) for x in res.timing.host_s],
+            "wall_s": float(res.timing.wall_s),
+        },
+        "decisions": [
+            {"mesh_width": d.mesh_width, "batch_depth": d.batch_depth,
+             "reason": d.reason} for d in (res.decisions or [])],
+        "shapes": [int(s) for s in (res.shapes or [])],
+    }
+
+
+def merge_host_results(payloads: Sequence[dict]) -> FleetResult:
+    """Assemble the global :class:`FleetResult` from every host's
+    payload (the cross-host reduction, run identically on all hosts).
+
+    Streams order by global id; ``hosts`` records each stream's
+    ingestion host. Hosts serve concurrently, so the merged timing is
+    ``FleetTiming.merge_concurrent`` (wall = slowest host) and
+    ``camera_s`` max-combines host entries *by absolute chunk interval*
+    (``camera_ci`` — hosts idle through different quiet intervals, so
+    list position would pair different intervals) — a fleet interval
+    completes when its slowest host's fused step does. Padded lanes
+    never reach the wire (each host ships served chunks only), so the
+    zero-cost-padding guarantee survives the merge by construction.
+    """
+    payloads = sorted(payloads, key=lambda p: p["host"])
+    entries = []  # (sid, host, RunResult)
+    for p in payloads:
+        for s in p["streams"]:
+            entries.append((s["sid"], p["host"], RunResult(
+                f"accmpeg_fleet_host{p['host']}[{s['sid']}]",
+                [ChunkResult.from_wire(c) for c in s["chunks"]])))
+    counts = collections.Counter(sid for sid, _, _ in entries)
+    dupes = sorted(sid for sid, n in counts.items() if n > 1)
+    if dupes:
+        raise ValueError(f"two hosts reported the same stream id: "
+                         f"{dupes}")
+    entries.sort(key=lambda e: e[0])
+    by_ci: dict = {}
+    for p in payloads:
+        for ci, cam in zip(p["camera_ci"], p["camera_s"]):
+            by_ci[ci] = max(by_ci.get(ci, 0.0), cam)
+    camera_s = [by_ci[ci] for ci in sorted(by_ci)]
+    timing = FleetTiming.merge_concurrent([
+        FleetTiming(camera_s=p["timing"]["camera_s"],
+                    server_s=p["timing"]["server_s"],
+                    host_s=p["timing"]["host_s"],
+                    wall_s=p["timing"]["wall_s"]) for p in payloads])
+    decisions = [ScaleDecision(**d) for p in payloads
+                 for d in p["decisions"]]
+    shapes = sorted({s for p in payloads for s in p["shapes"]})
+    return FleetResult(
+        streams=[run for _, _, run in entries],
+        camera_s=camera_s, timing=timing,
+        stream_ids=[sid for sid, _, _ in entries],
+        decisions=decisions, shapes=shapes,
+        hosts=[host for _, host, _ in entries])
+
+
+# ---------------------------------------------------------------------------
+# the multi-host serving entry point
+# ---------------------------------------------------------------------------
+def serve_fleet(make_engine: Callable[[int], "object"], frames,
+                topology: FleetTopology, events: Sequence[ChurnEvent] = (),
+                initial: Optional[Sequence[int]] = None, refs=None,
+                net=None, rescale: bool = False, decide_every: int = 1,
+                exchange=None) -> FleetResult:
+    """Serve a churned fleet across the topology's ingestion hosts.
+
+    ``make_engine(host)`` builds the host's ``MultiStreamEngine`` — this
+    is where per-host uplinks live (each host its own ``trace=``, its
+    own controller/autoscaler, its own ``mesh="auto"`` over its local
+    devices). ``frames`` is the global ``(N_total, T, H, W, C)`` union;
+    ``events``/``initial``/``refs`` all speak global stream ids.
+
+    Under ``jax.distributed`` (launched via ``repro.launch.fleet``), the
+    calling process serves exactly its own host shard
+    (``ownership[jax.process_index()]``) and the per-host results meet
+    in a KV-store allgather; every process returns the identical global
+    :class:`FleetResult`. Without it, the same call simulates every
+    host sequentially in-process through the same merge — the local
+    fallback existing callers get by default.
+    """
+    from repro.distributed import multihost
+
+    frames = np.asarray(frames)
+    n_total = frames.shape[0]
+    events = tuple(events)
+    topology.validate_covers(
+        range(n_total) if initial is None else initial,
+        what="initial active set")
+    named = [sid for ev in events for sid in ev.join + ev.leave]
+    topology.validate_covers(named, what="churn schedule")
+    for host_ids in topology.ownership:
+        for sid in host_ids:
+            if sid >= n_total:
+                raise ValueError(f"topology owns stream {sid} but the "
+                                 f"fleet array has {n_total}")
+
+    ex = exchange if exchange is not None else multihost.exchange()
+    if ex.n_hosts > 1 and ex.n_hosts != topology.n_hosts:
+        raise ValueError(f"{ex.n_hosts} processes joined the fleet but "
+                         f"the topology declares {topology.n_hosts} "
+                         f"hosts")
+    my_hosts = [ex.host] if ex.n_hosts > 1 \
+        else list(range(topology.n_hosts))
+
+    per_host_events = split_events(topology, events)
+    payloads = []
+    for h in my_hosts:
+        owned = list(topology.ownership[h])
+        g2l = {g: lane for lane, g in enumerate(owned)}
+        local_frames = frames[owned]
+        local_events = [
+            ChurnEvent(ev.chunk,
+                       join=tuple(g2l[s] for s in ev.join),
+                       leave=tuple(g2l[s] for s in ev.leave))
+            for ev in per_host_events[h]]
+        if initial is None:
+            local_initial = None  # all owned streams start active
+        else:
+            local_initial = tuple(g2l[s] for s in initial if s in g2l)
+        local_refs = None if refs is None else [refs[g] for g in owned]
+        engine = make_engine(h)
+        res = engine.serve_loop(local_frames, events=local_events,
+                                initial=local_initial, refs=local_refs,
+                                net=net, rescale=rescale,
+                                decide_every=decide_every,
+                                owned=tuple(range(len(owned))))
+        payloads.append(host_payload(h, owned, res))
+
+    # cross-host reduction: every host contributes its payload list and
+    # every host assembles the identical global result
+    gathered = ex.allgather("fleet_result", payloads)
+    flat = [p for host_list in gathered for p in host_list]
+    return merge_host_results(flat)

@@ -71,7 +71,11 @@ def make_camera_fleet_step(accmodel, qcfg, impl: str = "fast",
     from repro.core.quality import (qp_maps_from_knobs_batched,
                                     qp_maps_from_scores_batched)
     from repro.distributed.mesh import STREAM_AXIS
+    from repro.distributed.sharding import assert_addressable_mesh
     from repro.engine.policies import soft_drop_previous
+
+    if mesh is not None:  # loud, not a hang: fleet steps are host-local
+        assert_addressable_mesh(mesh, "make_camera_fleet_step")
 
     params = accmodel.params
     enc = CHUNK_ENCODERS.resolve(impl)
@@ -143,7 +147,11 @@ def make_server_fleet_step(final_dnn, mesh: Mesh = None):
     fleet axis stays embarrassingly parallel).
     """
     from repro.distributed.mesh import STREAM_AXIS
+    from repro.distributed.sharding import assert_addressable_mesh
     from repro.vision.dnn import apply_net, detection_keep_heat
+
+    if mesh is not None:
+        assert_addressable_mesh(mesh, "make_server_fleet_step")
 
     task, params = final_dnn.task, final_dnn.params
 

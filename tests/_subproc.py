@@ -11,6 +11,22 @@ from pathlib import Path
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 
+def run_fleet(body: str, num_processes: int = 2, devices: int = 1,
+              timeout: int = 900):
+    """Multi-process variant: ``num_processes`` fresh interpreters joined
+    over ``jax.distributed`` (CPU coordinator on 127.0.0.1), each running
+    the launcher prelude + ``body``. Thin wrapper over
+    ``repro.launch.fleet.launch_fleet`` so tests and CI share one
+    launcher; returns each worker's stdout in process order."""
+    import sys as _sys
+    if SRC not in _sys.path:
+        _sys.path.insert(0, SRC)
+    from repro.launch.fleet import launch_fleet
+
+    return launch_fleet(body, num_processes=num_processes,
+                        devices_per_proc=devices, timeout=timeout)
+
+
 def run_sub(body: str, devices: int = 8, timeout: int = 900):
     script = textwrap.dedent(f"""
         import os

@@ -88,6 +88,44 @@ def test_pad_mask_unpad_roundtrip_bit_exact(n, mesh_width, seed):
         np.testing.assert_array_equal(padded[lane], frames[-1])
 
 
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=64),
+       st.integers(min_value=1, max_value=4),
+       st.integers(min_value=1, max_value=4),
+       st.integers(min_value=0, max_value=1000))
+def test_host_local_admission_invariants(n_active, n_hosts, mesh_width,
+                                         seed):
+    """Multi-host serving splits admission per host (each ingestion host
+    pads its own active set on its own scaler): every per-host plan must
+    satisfy the single-host invariants independently, the fleet-wide
+    padding waste stays bounded, and host-local admission is genuinely
+    local — the plan for a host's count is identical whether or not any
+    other host admitted anything."""
+    rng = np.random.RandomState(seed)
+    owner = rng.randint(0, n_hosts, size=n_active)
+    counts = [int(np.sum(owner == h)) for h in range(n_hosts)]
+    scalers = [FleetAutoscaler() for _ in range(n_hosts)]
+    total_padded = 0
+    for h, (n_h, scaler) in enumerate(zip(counts, scalers)):
+        p = scaler.admit(n_h, mesh_width=mesh_width)
+        assert p.n_active == n_h
+        assert p.n_padded >= n_h and p.n_padded % mesh_width == 0
+        assert int(p.active.sum()) == n_h and p.active[:n_h].all()
+        if n_h == 0:  # a host whose streams all left idles, compiles
+            assert p.n_padded == 0 and p.reused  # nothing
+            assert scaler.compiled_shapes == ()
+        total_padded += p.n_padded
+        # locality: a fresh scaler given only this host's count builds
+        # the identical plan — no cross-host coupling in admission
+        q = FleetAutoscaler().admit(n_h, mesh_width=mesh_width)
+        assert (q.n_padded, q.n_active) == (p.n_padded, p.n_active)
+        np.testing.assert_array_equal(q.active, p.active)
+    # fleet-wide waste bound: pow2 buckets at most double each host's
+    # lane count, plus at most one bucket of divisibility slack per host
+    assert total_padded <= 2 * (n_active + n_hosts * (mesh_width - 1)) \
+        + n_hosts * mesh_width
+
+
 # ---------------------------------------------------------------------------
 # trace transmit solvers
 # ---------------------------------------------------------------------------

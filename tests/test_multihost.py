@@ -1,0 +1,317 @@
+"""True multi-host fleet serving (repro.serve.fleet over
+jax.distributed): the tentpole contracts.
+
+1. Cross-host parity — a 2-process ``jax.distributed`` serve run over a
+   fixed churned fleet is bit-identical (accuracy, wire bytes, and the
+   deterministic ``sim_encode_s`` delay accounting) to the
+   single-process fallback, and the padded admission lanes contribute
+   exactly zero either way (pad_pow2 on vs off agree bit for bit).
+2. Ownership is loud — a schedule naming a stream no host owns, or an
+   admitted active set reaching past an engine's declared ownership,
+   raises ``ValueError`` instead of silently mis-sharding.
+3. The cross-host reduction (``merge_host_results``) and the
+   split-admission/global-decide autoscaler
+   (``control.CrossHostAutoscaler``) hold up as pure units.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from _subproc import run_fleet
+from repro.control import ChurnEvent, CrossHostAutoscaler, FleetAutoscaler
+from repro.control.traces import constant_trace
+from repro.core.accmodel import AccModel, accmodel_init
+from repro.core.pipeline import FleetTiming
+from repro.engine import MultiStreamEngine
+from repro.serve.fleet import (FleetTopology, host_payload,
+                               merge_host_results, serve_fleet,
+                               split_events)
+from repro.vision.dnn import FinalDNN, init_net
+
+
+# ---------------------------------------------------------------------------
+# topology + event routing (pure)
+# ---------------------------------------------------------------------------
+def test_topology_validation_is_loud():
+    with pytest.raises(ValueError):  # a camera uplinks to one host
+        FleetTopology(((0, 1), (1, 2)))
+    with pytest.raises(ValueError):
+        FleetTopology(((0, 0),))
+    with pytest.raises(ValueError):
+        FleetTopology(())
+    with pytest.raises(ValueError):
+        FleetTopology(((-1,),))
+    topo = FleetTopology(((0, 2), (1,)))
+    assert topo.owner_of(2) == 0 and topo.owner_of(1) == 1
+    assert topo.all_streams == (0, 1, 2)
+    with pytest.raises(ValueError, match="not owned by any host"):
+        topo.owner_of(3)
+    with pytest.raises(ValueError, match="does not cover"):
+        topo.validate_covers([0, 3, 4])
+    assert FleetTopology.contiguous(5, 2).ownership == ((0, 1),
+                                                        (2, 3, 4))
+
+
+def test_split_events_routes_to_owner():
+    topo = FleetTopology(((0, 1), (2, 3)))
+    events = [ChurnEvent(1, join=(3,), leave=(0,)),
+              ChurnEvent(2, leave=(1, 2))]
+    per_host = split_events(topo, events)
+    assert per_host[0] == [ChurnEvent(1, leave=(0,)),
+                           ChurnEvent(2, leave=(1,))]
+    assert per_host[1] == [ChurnEvent(1, join=(3,)),
+                           ChurnEvent(2, leave=(2,))]
+    with pytest.raises(ValueError, match="not owned by any host"):
+        split_events(topo, [ChurnEvent(0, join=(9,))])
+
+
+# ---------------------------------------------------------------------------
+# the cross-host reduction (pure)
+# ---------------------------------------------------------------------------
+def _fake_payload(host, sids, ci0=0, wall=1.0, shapes=(2,),
+                  camera_ci=(0, 1)):
+    chunks = lambda sid: [  # noqa: E731
+        {"accuracy": 0.5 + 0.01 * sid, "bytes": 100.0 * (sid + 1),
+         "encode_s": 0.05, "overhead_s": 0.0, "stream_s": 0.2,
+         "extra_rtt_s": 0.0, "queue_s": 0.0, "ci": ci0}]
+    return {"host": host,
+            "streams": [{"sid": sid, "chunks": chunks(sid)}
+                        for sid in sids],
+            "camera_s": [0.1 * (host + 1), 0.2],
+            "camera_ci": list(camera_ci),
+            "timing": {"camera_s": [0.1], "server_s": [0.2],
+                       "host_s": [0.01], "wall_s": wall},
+            "decisions": [], "shapes": list(shapes)}
+
+
+def test_merge_host_results_global_order_and_timing():
+    merged = merge_host_results([
+        _fake_payload(1, [1, 3], wall=2.0, shapes=(4,)),
+        _fake_payload(0, [0, 2], wall=1.0, shapes=(2, 4))])
+    assert merged.stream_ids == [0, 1, 2, 3]
+    assert merged.hosts == [0, 1, 0, 1]
+    assert merged.shapes == [2, 4]  # union, deduped
+    assert merged.timing.wall_s == 2.0  # slowest host = fleet makespan
+    # camera_s max-combines hosts per interval
+    assert merged.camera_s == [0.2, 0.2]
+    assert merged.streams[3].chunks[0].bytes == 400.0
+    with pytest.raises(ValueError, match="same stream id"):
+        merge_host_results([_fake_payload(0, [0]), _fake_payload(1, [0])])
+
+
+def test_merge_aligns_camera_by_interval_not_position():
+    """A host that idled through interval 0 (all-quiet) reports its
+    first camera entry for interval 1 — the merge must pair it with the
+    other host's interval 1, not its interval 0."""
+    merged = merge_host_results([
+        _fake_payload(0, [0], camera_ci=(0, 1)),   # 0.1, 0.2
+        _fake_payload(1, [1], camera_ci=(1, 2))])  # 0.2, 0.2
+    assert merged.camera_s == [0.1, 0.2, 0.2]  # ci 0, 1, 2
+
+
+def test_fleet_timing_merge_concurrent():
+    merged = FleetTiming.merge_concurrent([
+        FleetTiming(camera_s=[0.1], server_s=[0.2], host_s=[0.3],
+                    wall_s=1.0),
+        FleetTiming(camera_s=[0.4], server_s=[0.5], host_s=[0.6],
+                    wall_s=3.0)])
+    assert merged.wall_s == 3.0
+    assert merged.camera_s == [0.1, 0.4]
+    assert merged.serialized_s == pytest.approx(2.1)
+
+
+# ---------------------------------------------------------------------------
+# host-local admission + global decide (CrossHostAutoscaler)
+# ---------------------------------------------------------------------------
+class _FakeExchange:
+    """Scripted 2-host exchange: this host plus a fixed peer."""
+
+    n_hosts = 2
+    host = 0
+
+    def __init__(self, peer):
+        self.peer = peer
+        self.rounds = 0
+
+    def allgather(self, tag, obj):
+        self.rounds += 1
+        return [json.loads(json.dumps(obj)), self.peer]
+
+
+def test_cross_host_decide_aggregates_occupancy():
+    """A host that looks idle locally must not scale in when its peer is
+    camera-bound: the decision comes from the *gathered* occupancy."""
+    idle = FleetTiming(camera_s=[0.01], server_s=[0.01], host_s=[0.01],
+                       wall_s=1.0)
+    busy_peer = {"camera_s": [0.95], "server_s": [0.05],
+                 "host_s": [0.01], "wall_s": 1.0, "n_streams": 4,
+                 "n_devices": 8}
+    ex = _FakeExchange(busy_peer)
+    scaler = CrossHostAutoscaler(ex)
+    d = scaler.decide(idle, 4, mesh_width=1, batch_depth=2, n_devices=4)
+    assert ex.rounds == 1
+    assert d.mesh_width == 2 and "camera-bound" in d.reason
+    # admission stays host-local: same invariants as the base class
+    plan = scaler.admit(3, mesh_width=2)
+    assert plan.n_padded == 4 and not plan.reused
+    # an idle peer too -> the fleet genuinely idles, scale in applies
+    idle_peer = {"camera_s": [0.01], "server_s": [0.01],
+                 "host_s": [0.01], "wall_s": 1.0, "n_streams": 4,
+                 "n_devices": 4}
+    d2 = CrossHostAutoscaler(_FakeExchange(idle_peer)).decide(
+        idle, 4, mesh_width=1, batch_depth=2, n_devices=4)
+    assert d2.batch_depth == 1 and "idle" in d2.reason
+    # heterogeneous fleets agree: the width ceiling is the gathered
+    # *minimum* device count, so a 1-device peer vetoes the widen and
+    # every host lands on the same decision
+    single_dev_peer = dict(busy_peer, n_devices=1)
+    busy = FleetTiming(camera_s=[0.95], server_s=[0.05], host_s=[0.01],
+                       wall_s=1.0)
+    d3 = CrossHostAutoscaler(_FakeExchange(single_dev_peer)).decide(
+        busy, 4, mesh_width=1, batch_depth=2, n_devices=4)
+    assert d3.mesh_width == 1
+
+
+# ---------------------------------------------------------------------------
+# ownership guards on the serving path
+# ---------------------------------------------------------------------------
+def _tiny_models():
+    dnn = FinalDNN("detection",
+                   init_net("detection", jax.random.PRNGKey(0), width=8))
+    am = AccModel(accmodel_init(jax.random.PRNGKey(1), 8))
+    return dnn, am
+
+
+def _tiny_fleet(n, T=20, h=32, w=48):
+    from repro.data.video import make_scene
+
+    return np.stack([make_scene("dashcam", seed=60 + i, T=T, H=h,
+                                W=w).frames for i in range(n)])
+
+
+def test_serve_fleet_rejects_uncovered_schedule():
+    """The bugfix: declared ownership must cover everything the schedule
+    admits — loud ValueError before any host serves a chunk."""
+    frames = np.zeros((3, 10, 16, 16, 3), np.float32)
+    topo = FleetTopology(((0,), (1,)))  # stream 2 unowned
+    with pytest.raises(ValueError, match="does not cover"):
+        serve_fleet(lambda h: None, frames, topo)  # initial=all streams
+    with pytest.raises(ValueError, match="does not cover"):
+        serve_fleet(lambda h: None, frames, topo, initial=(0,),
+                    events=[ChurnEvent(0, join=(2,))])
+    # a topology that owns streams past the fleet array is loud too
+    with pytest.raises(ValueError, match="fleet array has"):
+        serve_fleet(lambda h: None, frames[:1],
+                    FleetTopology(((0, 2),)))
+    # process/topology mismatch is loud
+    class TwoHostExchange:
+        n_hosts, host = 2, 0
+    with pytest.raises(ValueError, match="declares"):
+        serve_fleet(lambda h: None, frames, FleetTopology(((0, 1, 2),)),
+                    exchange=TwoHostExchange())
+
+
+def test_serve_loop_owned_guard_raises_on_stray_join():
+    """Regression: an engine declared to own streams (0,) that admits a
+    churn-join of stream 1 must raise, not silently serve another
+    host's stream."""
+    dnn, am = _tiny_models()
+    frames = _tiny_fleet(2)
+    eng = MultiStreamEngine(dnn, am, impl="fast",
+                            autoscaler=FleetAutoscaler())
+    with pytest.raises(ValueError, match="declared\\s+ownership"):
+        eng.serve_loop(frames, initial=(0,),
+                       events=[ChurnEvent(1, join=(1,))], owned=(0,))
+    # the same schedule with matching ownership serves fine
+    res = MultiStreamEngine(dnn, am, impl="fast",
+                            autoscaler=FleetAutoscaler()).serve_loop(
+        frames, initial=(0,), events=[ChurnEvent(1, join=(1,))],
+        owned=(0, 1))
+    assert res.stream_ids == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# parity: padded lanes zero + 2-process == single-process
+# ---------------------------------------------------------------------------
+def _serve_digest(res):
+    return {
+        "stream_ids": res.stream_ids, "hosts": res.hosts,
+        "chunks": [[c.ci, c.accuracy, c.bytes, c.encode_s, c.stream_s,
+                    c.queue_s]
+                   for run in res.streams for c in run.chunks],
+    }
+
+
+def test_fallback_padding_parity_bit_exact():
+    """Single-process serve_fleet: pow2-padded admission vs unpadded
+    admission agree bit for bit on accuracy, bytes, and trace-driven
+    delays — padded lanes contribute exactly zero through the
+    multi-host merge as well."""
+    dnn, am = _tiny_models()
+    frames = _tiny_fleet(4, T=20)
+    topo = FleetTopology(((0, 2, 3), (1,)))
+    events = [ChurnEvent(1, join=(1, 3))]
+
+    def engines(pad_pow2):
+        def make_engine(host):
+            return MultiStreamEngine(
+                dnn, am, impl="fast",
+                trace=constant_trace(2e5 * (host + 1), rtt_s=0.02),
+                autoscaler=FleetAutoscaler(pad_pow2=pad_pow2,
+                                           reuse_slack=1.0),
+                sim_encode_s=0.04)
+        return make_engine
+
+    padded = serve_fleet(engines(True), frames, topo, initial=(0, 2),
+                         events=events)
+    unpadded = serve_fleet(engines(False), frames, topo, initial=(0, 2),
+                           events=events)
+    assert _serve_digest(padded) == _serve_digest(unpadded)
+    assert padded.stream_ids == [0, 1, 2, 3]
+    assert padded.hosts == [0, 1, 0, 0]
+    assert all(c.bytes > 0 for r in padded.streams for c in r.chunks)
+    # host 0 really padded: 3 actives on the pow2 4-lane shape (the
+    # unpadded run compiled the tight 3) — and still agreed bit for bit
+    assert padded.shapes == [1, 2, 4]
+    assert unpadded.shapes == [1, 2, 3]
+
+
+def test_kv_exchange_rounds_are_process_global():
+    """Regression: coordinator KV keys are single-use, so two
+    KVExchange instances in one process (two back-to-back serve_fleet
+    calls) must draw from one shared round namespace — per-instance
+    counters would reuse keys and crash (or read stale rounds)."""
+    outs = run_fleet("""
+        from repro.distributed.multihost import KVExchange, exchange
+        a, b = exchange(), exchange()
+        assert type(a).__name__ == "KVExchange"
+        pid = int(jax.process_index())
+        r1 = a.allgather("t", pid)
+        r2 = b.allgather("t", 10 + pid)   # same tag, fresh instance
+        assert r1 == [0, 1] and r2 == [10, 11], (r1, r2)
+        a.barrier(); b.barrier()
+        print("EXCH OK")
+    """, num_processes=2, timeout=300)
+    assert all("EXCH OK" in out for out in outs)
+
+
+def test_two_process_parity_bit_exact():
+    """The acceptance criterion: a 2-process jax.distributed serve run
+    over a fixed churned fleet matches the single-process fallback
+    bit-exactly — accuracy, wire bytes, and every delay component under
+    the deterministic sim_encode_s accounting."""
+    from repro.launch.fleet import _SMOKE_BODY, _smoke_digest
+
+    reference = json.loads(json.dumps(_smoke_digest(), sort_keys=True))
+    outs = run_fleet(_SMOKE_BODY, num_processes=2, timeout=600)
+    for i, out in enumerate(outs):
+        lines = [ln for ln in out.splitlines()
+                 if ln.startswith("DIGEST ")]
+        assert lines, f"worker {i} printed no digest:\n{out}"
+        assert json.loads(lines[-1][len("DIGEST "):]) == reference, \
+            f"worker {i} diverged from the single-process run"
+    # the digest really carried served work from both hosts
+    assert reference["hosts"] == [0, 0, 1, 1]
+    assert all(b > 0 for _, _, b, *_ in reference["chunks"])
