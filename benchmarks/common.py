@@ -75,6 +75,9 @@ HEADLINE_KEYS = {
         "multistream/fleet_speedup_best": ("speedup",),
         "multistream/pipeline_overlapped": ("speedup",),
     },
+    "kernels": {
+        "kernels/fused_vs_fast": ("ratio",),
+    },
 }
 
 #: derived keys that are pass/fail verdict flags: a yes in the baseline

@@ -5,18 +5,69 @@ writes experiments/roofline.md. The roofline fraction reported is
 MODEL_FLOPS / (devices * peak * step_lower_bound): the share of the
 machine's peak that useful model math would achieve if the step ran exactly
 at its dominant-term bound.
+
+The peak term is derived from the *detected* device (``device_peak_flops``)
+rather than a hard-coded constant — a v5e table read on a v4 host used to
+silently inflate every fraction by 1.4x. ``--peak`` (or the ``peak=``
+keyword) overrides the detection for cross-machine what-ifs.
 """
 from __future__ import annotations
 
+import argparse
+import functools
 import json
+import os
 from pathlib import Path
+
+import jax
 
 from benchmarks.common import emit
 
 DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
 OUT_MD = Path(__file__).resolve().parents[1] / "experiments" / "roofline.md"
 
-PEAK = 197e12
+#: per-chip bf16 peak FLOP/s by TPU generation (matched as a substring of
+#: jax's ``device_kind``, lowercased — "TPU v5 lite" etc.)
+KNOWN_PEAKS = (
+    ("v6e", 918e12),  # Trillium
+    ("v5p", 459e12),
+    ("v5e", 197e12),  # == "v5 lite"
+    ("v5 lite", 197e12),
+    ("v4", 275e12),
+    ("v3", 123e12),
+    ("v2", 45e12),
+)
+#: conservative per-core CPU estimate: ~3 GHz x 16 f32 lanes (AVX-512 FMA)
+CPU_FLOPS_PER_CORE = 3.0e9 * 16
+
+
+@functools.lru_cache()
+def device_peak_flops(override: float = None) -> float:
+    """Per-device peak FLOP/s, derived from the detected accelerator.
+
+    TPU generations come from ``KNOWN_PEAKS`` (device_kind substring
+    match); CPU hosts get a cores x 3GHz x 16-lane FMA estimate so the
+    fractions stay meaningful (roughly) off-TPU. Unknown accelerators
+    fall back to the v5e figure the table previously hard-coded, loudly.
+    ``override`` (the CLI's ``--peak``) wins over everything.
+    """
+    if override is not None:
+        return float(override)
+    dev = jax.devices()[0]
+    kind = dev.device_kind.lower()
+    if dev.platform == "tpu":
+        for key, peak in KNOWN_PEAKS:
+            if key in kind:
+                return peak
+        print(f"roofline: unknown TPU kind {dev.device_kind!r}; "
+              f"assuming v5e peak 197e12 (override with --peak)")
+        return 197e12
+    if dev.platform == "cpu":
+        return os.cpu_count() * CPU_FLOPS_PER_CORE
+    print(f"roofline: unknown platform {dev.platform!r}; "
+          f"assuming 197e12 (override with --peak)")
+    return 197e12
+
 
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 
@@ -33,13 +84,13 @@ def load_records(mesh="single", variant="base"):
     return recs
 
 
-def fraction(rec):
+def fraction(rec, peak: float = None):
     rl = rec["roofline"]
     lb = rl["step_time_lower_bound_s"]
     if lb <= 0:
         return 0.0
     mf = rec["model_flops_global"]
-    return mf / (rec["n_devices"] * PEAK * lb)
+    return mf / (rec["n_devices"] * device_peak_flops(peak) * lb)
 
 
 def next_lever(rec) -> str:
@@ -72,10 +123,12 @@ def next_lever(rec) -> str:
     return "raise arithmetic intensity: larger microbatch or fused kernels"
 
 
-def roofline_table(mesh="single", variant="base", emit_csv=True):
+def roofline_table(mesh="single", variant="base", emit_csv=True,
+                   peak: float = None):
     recs = load_records(mesh, variant)
     lines = [
-        f"### Roofline ({mesh}-pod, variant={variant})",
+        f"### Roofline ({mesh}-pod, variant={variant}, "
+        f"peak={device_peak_flops(peak) / 1e12:.1f} TFLOP/s/device)",
         "",
         "| arch | shape | compute s | memory s | collective s | bottleneck |"
         " peak GiB/dev | MODEL/HLO flops | roofline frac | what moves the dominant term |",
@@ -91,7 +144,7 @@ def roofline_table(mesh="single", variant="base", emit_csv=True):
                          f"{r['status']} | — | — | — | — |")
             continue
         rl = r["roofline"]
-        frac = fraction(r)
+        frac = fraction(r, peak)
         ratio = r.get("model_to_hlo_flops")
         ratio_s = f"{ratio:.3f}" if ratio else "n/a"
         lines.append(
@@ -107,15 +160,35 @@ def roofline_table(mesh="single", variant="base", emit_csv=True):
     return "\n".join(lines)
 
 
-def run(write_md: bool = True):
+def run(write_md: bool = True, peak: float = None):
+    peak_flops = device_peak_flops(peak)
+    emit("roofline/peak_flops", peak_flops / 1e9,  # GFLOP/s (CPU-legible)
+         f"device={jax.devices()[0].device_kind};"
+         f"source={'override' if peak is not None else 'detected'}")
     parts = []
     for mesh in ("single", "multi"):
         recs = load_records(mesh)
         if recs:
-            parts.append(roofline_table(mesh, emit_csv=(mesh == "single")))
+            parts.append(roofline_table(mesh, emit_csv=(mesh == "single"),
+                                        peak=peak))
             n_ok = sum(r["status"] == "ok" for r in recs)
             n_skip = sum(r["status"] == "skipped" for r in recs)
             emit(f"roofline/{mesh}_cells", 0.0,
                  f"ok={n_ok};skipped={n_skip};total={len(recs)}")
     if write_md and parts:
         OUT_MD.write_text("\n\n".join(parts) + "\n")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--peak", type=float, default=None,
+                    help="per-device peak FLOP/s override (e.g. 275e12); "
+                         "default: derive from the detected device")
+    ap.add_argument("--no-md", action="store_true",
+                    help="skip rewriting experiments/roofline.md")
+    args = ap.parse_args(argv)
+    run(write_md=not args.no_md, peak=args.peak)
+
+
+if __name__ == "__main__":
+    main()

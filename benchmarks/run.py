@@ -14,7 +14,7 @@ import traceback
 
 #: benches whose rows are also persisted as BENCH_<name>.json at the repo
 #: root (machine-readable perf trajectory across PRs)
-JSON_BENCHES = ("control", "multistream", "churn")
+JSON_BENCHES = ("control", "multistream", "churn", "kernels")
 
 
 def main() -> None:
@@ -37,7 +37,7 @@ def main() -> None:
         "table2": paper_figs.table2_training_time,
         "fig12": paper_figs.fig12_fp_tolerance,
         "appxc": paper_figs.appxc_size_growth,
-        "kernels": kernel_bench.kernel_microbench,
+        "kernels": kernel_bench.run,
         "roofline": roofline.run,
     }
     from benchmarks import common

@@ -239,9 +239,12 @@ class ChunkEncoderRegistry:
         try:
             return self._backends[name]["fn"]
         except KeyError:
-            raise KeyError(
-                f"unknown chunk encoder {name!r}; registered: "
-                f"{sorted(self._backends)}") from None
+            # ValueError, not KeyError: every engine/fleet-step impl= knob
+            # funnels through here, and a typo'd backend name should read
+            # as "bad argument", not as a mapping miss swallowed upstream
+            raise ValueError(
+                f"unknown chunk encoder {name!r}; registered backends: "
+                f"{', '.join(sorted(self._backends))}") from None
 
     def describe(self, name: str) -> dict:
         e = self._backends[name]
@@ -293,11 +296,57 @@ def encode_chunk_pallas(frames: jnp.ndarray, qp_maps: jnp.ndarray):
     :func:`encode_chunk` (same :func:`_scan_chunk` scaffold), so output is
     bit-comparable to ``impl="exact"``.
     """
-    from repro.kernels.mbcodec.ops import encode_frame_fused
+    from repro.kernels.mbcodec.ops import encode_frame_fused, on_tpu, \
+        warn_fallback
 
+    if not on_tpu():
+        warn_fallback("pallas", "the jnp reference tile (mbcodec_ref), "
+                      "scanned per frame")
     return _scan_chunk(
         lambda f, q, ref: encode_frame_fused(f, q, reference=ref),
         frames, qp_maps)
+
+
+@CHUNK_ENCODERS.register("fused", preferred_backend="tpu",
+                         doc="chunk-fused VMEM scan (TPU); shared-map "
+                             "coefficient XLA scan off-TPU")
+def encode_chunk_fused_backend(frames: jnp.ndarray, qp_maps: jnp.ndarray):
+    """The fused camera fast-path (``kernels/mbcodec`` chunk kernel).
+
+    One ``mbcodec_chunk_pallas`` call encodes the whole chunk: grid
+    ``(n_tiles, T)`` with the frame axis innermost, the decoded P-frame
+    reference carried in VMEM scratch across the scan, and the per-frame
+    block DMA double-buffered against compute — quantize, entropy bits,
+    and reconstruction never leave VMEM between frames. Clip semantics
+    match ``fast`` (one decode-time clip); use ``fused_exact`` for the
+    per-step reference clip. Off-TPU this lowers to the shared-map
+    coefficient-space XLA scan (one-time RuntimeWarning names the
+    substitution).
+    """
+    from repro.kernels.mbcodec.ops import encode_chunk_fused
+
+    return encode_chunk_fused(frames, qp_maps)
+
+
+@CHUNK_ENCODERS.register("fused_exact", preferred_backend="tpu",
+                         doc="chunk-fused VMEM scan + per-step reference "
+                             "clip (bit-comparable to exact)")
+def encode_chunk_fused_exact_backend(frames: jnp.ndarray,
+                                     qp_maps: jnp.ndarray):
+    """``fused`` with the exact encoder's reference semantics.
+
+    The VMEM-carried reference tile is clipped to [0, 1] every scan step
+    (clip is elementwise, so the per-tile clip equals the exact
+    encoder's full-frame clip), making output bit-comparable to
+    ``impl="exact"`` — the chunk-kernel analogue of ``fast_exact``'s
+    clip-correction trick, but structural instead of cond-gated: the
+    reference lives in pixel-adjacent block space already, so exactness
+    costs nothing extra on the kernel path. Off-TPU it lowers to
+    ``fast_exact`` itself.
+    """
+    from repro.kernels.mbcodec.ops import encode_chunk_fused
+
+    return encode_chunk_fused(frames, qp_maps, clip_refs=True)
 
 
 # ---------------------------------------------------------------------------

@@ -34,6 +34,30 @@ def dilate(mask: jnp.ndarray, gamma: int = DEFAULT_GAMMA):
     return out[0] if squeeze else out
 
 
+def dilate_scores(scores: jnp.ndarray, gamma: int = DEFAULT_GAMMA):
+    """Max-pool raw scores over the dilation window (gamma each way).
+
+    Because max-pooling commutes with monotone thresholding,
+    ``dilate_scores(s, gamma) >= alpha`` equals
+    ``dilate(select_blocks(s, alpha), gamma)`` for *every* alpha — the
+    window max reaches alpha iff some window element does. The fused
+    camera fast-path relies on this: the kernel takes the pooled score
+    map plus a traced (alpha, qp_hi, qp_lo) knob triple and assigns the
+    two-level QP in-register, so alpha can move per chunk without the
+    QP map ever materializing in HBM. scores (..., mb_h, mb_w).
+    """
+    if gamma <= 0:
+        return scores
+    s = scores
+    squeeze = s.ndim == 2
+    if squeeze:
+        s = s[None]
+    k = 2 * gamma + 1
+    out = jax.lax.reduce_window(s, -jnp.inf, jax.lax.max,
+                                (1, k, k), (1, 1, 1), "SAME")
+    return out[0] if squeeze else out
+
+
 @dataclasses.dataclass(frozen=True)
 class QualityConfig:
     alpha: float = DEFAULT_ALPHA

@@ -40,7 +40,8 @@ def jit_encode(impl: str = "exact"):
     ``codec.CHUNK_ENCODERS`` backend; replaces the old
     ``core.pipeline._ENC_CACHE`` dict). Default stays the bit-stable
     "exact" backend so Fig. 7/8/10 accounting is unchanged; pass the
-    engine's ``impl`` to select "fast" / "fast_exact" / "pallas".
+    engine's ``impl`` to select "fast" / "fast_exact" / "pallas" /
+    "fused" / "fused_exact".
     (The cache lives behind the default-applied signature so
     ``jit_encode()`` and ``jit_encode("exact")`` share one entry.)"""
     return _jit_encoder(impl)
@@ -113,7 +114,11 @@ class StreamingEngine:
     ``impl`` selects the RoI chunk-encoder backend from the
     ``codec.CHUNK_ENCODERS`` registry for every ``ctx.encode`` call —
     "exact" (default, bit-stable paper accounting), "fast", "fast_exact",
-    or "pallas" (fused mbcodec tile on TPU; jnp tile elsewhere).
+    "pallas" (fused mbcodec tile on TPU; jnp tile elsewhere), or "fused" /
+    "fused_exact" (chunk-fused VMEM scan on TPU — the whole P-frame chunk
+    encodes per tile without leaving VMEM; "fused_exact" is
+    bit-comparable to "exact". See engine/README.md "Backend registry &
+    fused fast-path").
 
     ``trace`` switches streaming-delay accounting from the constant
     ``net`` model to a time-varying bandwidth trace

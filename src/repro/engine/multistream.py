@@ -143,7 +143,10 @@ class MultiStreamEngine:
     """Batched AccMPEG serving for N cameras sharing one uplink.
 
     ``impl``   chunk-encoder backend from the ``codec.CHUNK_ENCODERS``
-               registry ("fast" | "exact" | "fast_exact" | "pallas").
+               registry ("fast" | "exact" | "fast_exact" | "pallas" |
+               "fused" | "fused_exact" — the fused pair takes the
+               scores fast-path in ``serve.steps``, skipping the
+               materialized QP map).
     ``mesh``   None (single-device vmap), a 1-D ``"stream"`` Mesh, or
                "auto" (widest stream mesh dividing N on the available
                devices — ``distributed.mesh.stream_mesh_for``).

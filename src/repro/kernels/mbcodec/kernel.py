@@ -1,13 +1,31 @@
-"""Fused macroblock codec Pallas kernel (TPU target).
+"""Fused macroblock codec Pallas kernels (TPU target).
 
-One VMEM round-trip does blockify-DCT-quant-dequant-IDCT + the entropy-bit
-estimate, with the per-macroblock QP prefetched alongside the tile. TPU
-adaptation (DESIGN.md §5): macroblocks are batched along the leading dim so
-the two 16x16 transform matmuls run as (TILE*16, 16) x (16, 16) GEMMs —
-the 16-contraction is the only small dim the MXU sees.
+Two kernel generations live here:
 
-Validated against ref.mbcodec_ref in interpret mode (tests/test_kernels.py);
-on CPU hosts ops.py always selects interpret or the jnp path.
+* ``mbcodec_pallas`` — the original per-frame tile: one VMEM round-trip
+  does blockify-DCT-quant-dequant-IDCT + the entropy-bit estimate, with
+  the per-macroblock QP prefetched alongside the tile. TPU adaptation
+  (DESIGN.md §5): macroblocks are batched along the leading dim so the
+  two 16x16 transform matmuls run as (TILE*16, 16) x (16, 16) GEMMs —
+  the 16-contraction is the only small dim the MXU sees.
+
+* ``mbcodec_chunk_pallas`` / ``mbcodec_chunk_scores_pallas`` — the fused
+  camera fast-path (the registry's ``fused`` / ``fused_exact`` backends).
+  Grid ``(n_tiles, T)`` with the frame axis innermost and sequential (the
+  ``wkv6`` grid-carry idiom): each tile's decoded P-frame reference lives
+  in VMEM scratch across the whole chunk scan, so quantize → bits →
+  reconstruct for frame t+1 reads frame t's reference without an HBM
+  round-trip. Pallas pipelines the per-step block DMA against compute
+  automatically, which double-buffers the frame fetch across the scan —
+  while frame t's tile is in the MXU, frame t+1's tile is in flight.
+  The ``scores`` variant additionally takes the dilated AccModel score
+  map plus the (alpha, qp_hi, qp_lo) knob triple and assigns the
+  two-level QP *inside* the kernel, so no QP map ever materializes in
+  HBM between scoring and encode.
+
+Validated against ref.mbcodec_ref / codec.encode_chunk in interpret mode
+(tests/test_kernels.py); on CPU hosts ops.py always selects interpret or
+the jnp path.
 """
 from __future__ import annotations
 
@@ -17,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.codec.codec import BITS_PER_MAG, BLOCK_OVERHEAD, RUN_BITS
 from repro.codec.dct import dct_matrix, freq_weight
@@ -48,6 +67,141 @@ def _kernel(blocks_ref, qp_ref, d_ref, w_ref, rec_ref, bits_ref):
     r = jax.lax.dot_general(r, dt, (((1,), (1,)), ((), ()))).transpose(0, 2, 1)
     rec_ref[...] = r
     bits_ref[...] = bits
+
+
+def _encode_tile_step(x, ref, qp, d, w, clip_refs: bool):
+    """One P-frame encode step for a (TILE, 16, 16) tile, VMEM-resident.
+
+    ``ref`` is the tile's decoded reference from the previous frame
+    (zeros at the chunk head -> I-frame). Returns the new decoded tile
+    and per-block entropy bits. ``clip_refs`` statically selects the
+    exact encoder's per-step [0, 1] reference clip (``fused_exact``)
+    versus the fast path's decode-time-only clip (``fused``).
+    """
+    dt = d.T
+    src = x - ref
+    c = jax.lax.dot_general(src, d, (((2,), (1,)), ((), ())))
+    c = jax.lax.dot_general(c, d, (((1,), (1,)), ((), ()))).transpose(0, 2, 1)
+    step = (0.625 * jnp.exp2((qp - 4.0) / 6.0) / 255.0)[:, None, None] * w
+    q = jnp.round(c / step)
+    aq = jnp.abs(q)
+    bits = (BITS_PER_MAG * jnp.log2(1.0 + aq)
+            + RUN_BITS * (aq > 0.5).astype(jnp.float32)).sum(axis=(1, 2)) \
+        + BLOCK_OVERHEAD
+    deq = q * step
+    r = jax.lax.dot_general(deq, dt, (((2,), (1,)), ((), ())))
+    r = jax.lax.dot_general(r, dt, (((1,), (1,)), ((), ()))).transpose(0, 2, 1)
+    rec = ref + r
+    if clip_refs:
+        rec = jnp.clip(rec, 0.0, 1.0)
+    return rec, bits
+
+
+def _chunk_kernel(clip_refs, blocks_ref, qp_ref, d_ref, w_ref,
+                  rec_ref, bits_ref, ref_scr):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():  # chunk head: I-frame against a zero reference
+        ref_scr[...] = jnp.zeros_like(ref_scr)
+
+    rec, bits = _encode_tile_step(blocks_ref[0], ref_scr[...], qp_ref[0],
+                                  d_ref[...], w_ref[...], clip_refs)
+    ref_scr[...] = rec
+    rec_ref[0] = rec
+    bits_ref[0] = bits
+
+
+def _chunk_scores_kernel(clip_refs, blocks_ref, pooled_ref, knobs_ref,
+                         d_ref, w_ref, rec_ref, bits_ref, ref_scr):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        ref_scr[...] = jnp.zeros_like(ref_scr)
+
+    kn = knobs_ref[...]  # (3,): alpha, qp_hi, qp_lo (traced controller knobs)
+    qp = jnp.where(pooled_ref[...] >= kn[0], kn[1], kn[2])
+    rec, bits = _encode_tile_step(blocks_ref[0], ref_scr[...], qp,
+                                  d_ref[...], w_ref[...], clip_refs)
+    ref_scr[...] = rec
+    rec_ref[0] = rec
+    bits_ref[0] = bits
+
+
+@functools.partial(jax.jit, static_argnames=("clip_refs", "interpret"))
+def mbcodec_chunk_pallas(blocks: jnp.ndarray, qp: jnp.ndarray,
+                         clip_refs: bool = False, interpret: bool = False):
+    """Chunk-fused codec: blocks (T, N, 16, 16) f32, qp (T, N) f32 ->
+    (rec (T, N, 16, 16), bits (T, N)). N % TILE == 0 (ops.py pads).
+
+    Grid (N/TILE, T), T innermost: the decoded reference tile is carried
+    in VMEM scratch across the frame axis, so the whole P-frame chunk
+    scan for a tile runs without leaving VMEM; Pallas double-buffers the
+    (1, TILE, 16, 16) frame-block DMA against the encode of the previous
+    grid step.
+    """
+    T, n = blocks.shape[:2]
+    d = jnp.asarray(dct_matrix())
+    w = jnp.asarray(freq_weight())
+    return pl.pallas_call(
+        functools.partial(_chunk_kernel, clip_refs),
+        grid=(n // TILE, T),
+        in_specs=[
+            pl.BlockSpec((1, TILE, 16, 16), lambda i, t: (t, i, 0, 0)),
+            pl.BlockSpec((1, TILE), lambda i, t: (t, i)),
+            pl.BlockSpec((16, 16), lambda i, t: (0, 0)),
+            pl.BlockSpec((16, 16), lambda i, t: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, TILE, 16, 16), lambda i, t: (t, i, 0, 0)),
+            pl.BlockSpec((1, TILE), lambda i, t: (t, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, n, 16, 16), jnp.float32),
+            jax.ShapeDtypeStruct((T, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((TILE, 16, 16), jnp.float32)],
+        interpret=interpret,
+    )(blocks, qp, d, w)
+
+
+@functools.partial(jax.jit, static_argnames=("clip_refs", "interpret"))
+def mbcodec_chunk_scores_pallas(blocks: jnp.ndarray, pooled: jnp.ndarray,
+                                knobs: jnp.ndarray, clip_refs: bool = False,
+                                interpret: bool = False):
+    """Scores-fused variant: pooled (N,) dilated AccModel scores and
+    knobs (3,) = (alpha, qp_hi, qp_lo) replace the explicit QP array —
+    the two-level threshold assignment happens in-register per tile
+    (``dilate_scores(s) >= alpha`` == dilate-then-select, see
+    quality.dilate_scores), so the QP map never exists in HBM. The knob
+    triple is traced: the rate controller moves it per chunk with zero
+    recompiles.
+    """
+    T, n = blocks.shape[:2]
+    d = jnp.asarray(dct_matrix())
+    w = jnp.asarray(freq_weight())
+    return pl.pallas_call(
+        functools.partial(_chunk_scores_kernel, clip_refs),
+        grid=(n // TILE, T),
+        in_specs=[
+            pl.BlockSpec((1, TILE, 16, 16), lambda i, t: (t, i, 0, 0)),
+            pl.BlockSpec((TILE,), lambda i, t: (i,)),
+            pl.BlockSpec((3,), lambda i, t: (0,)),
+            pl.BlockSpec((16, 16), lambda i, t: (0, 0)),
+            pl.BlockSpec((16, 16), lambda i, t: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, TILE, 16, 16), lambda i, t: (t, i, 0, 0)),
+            pl.BlockSpec((1, TILE), lambda i, t: (t, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, n, 16, 16), jnp.float32),
+            jax.ShapeDtypeStruct((T, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((TILE, 16, 16), jnp.float32)],
+        interpret=interpret,
+    )(blocks, pooled, knobs, d, w)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -1,23 +1,54 @@
-"""Public entry point for the fused macroblock codec.
+"""Public entry points for the fused macroblock codec.
 
 Selects the Pallas kernel on TPU, interpret-mode Pallas for validation, or
 the jnp reference elsewhere. The frame-level wrapper handles blockify /
-padding / per-channel layout so callers never see kernel tiling.
+padding / per-channel layout so callers never see kernel tiling; the
+chunk-level wrappers (``encode_chunk_fused`` / ``encode_chunk_fused_scores``,
+the registry's ``fused`` / ``fused_exact`` backends) additionally own the
+off-TPU substitution: the kernel's VMEM-carried chunk scan lowers to the
+shared-map coefficient-space XLA scan on CPU hosts, announced by a one-time
+``RuntimeWarning`` naming the substituted backend.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 
-from repro.codec.dct import MB, blockify, unblockify
-from repro.kernels.mbcodec.kernel import TILE, mbcodec_pallas
+from repro.codec.codec import (BLOCK_OVERHEAD, block_bits, encode_chunk_fast)
+from repro.codec.dct import (MB, blockify, dct2, freq_weight, idct2, qstep,
+                             unblockify)
+from repro.kernels.mbcodec.kernel import (TILE, mbcodec_chunk_pallas,
+                                          mbcodec_chunk_scores_pallas,
+                                          mbcodec_pallas)
 from repro.kernels.mbcodec.ref import mbcodec_ref
+
+#: backends that already warned about their off-TPU substitution this
+#: process (tests clear this to re-arm the warning)
+_FALLBACK_WARNED: set = set()
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def warn_fallback(name: str, substitute: str) -> None:
+    """One-time (per backend, per process) off-TPU substitution notice.
+
+    The registry's TPU-preferred backends (``pallas``/``fused``/
+    ``fused_exact``) silently resolving to a different lowering made CPU
+    benchmark numbers easy to misread — say which backend actually ran.
+    """
+    if name in _FALLBACK_WARNED:
+        return
+    _FALLBACK_WARNED.add(name)
+    warnings.warn(
+        f"CHUNK_ENCODERS[{name!r}]: no TPU detected "
+        f"(jax.default_backend()={jax.default_backend()!r}); substituting "
+        f"{substitute}. Timings measure the fallback, not the Pallas "
+        f"kernel.", RuntimeWarning, stacklevel=3)
 
 
 def mbcodec(blocks: jnp.ndarray, qp: jnp.ndarray, impl: str = "auto"):
@@ -54,8 +85,148 @@ def encode_frame_fused(frame: jnp.ndarray, qp_map: jnp.ndarray,
     if reference is not None:
         rec = rec + reference
     # one per-macroblock header, not one per channel (match codec.block_bits)
-    from repro.codec.codec import BLOCK_OVERHEAD
-
     bits_map = (bits.reshape(-1, C).sum(-1) - (C - 1) * BLOCK_OVERHEAD)
     bits_map = bits_map.reshape(H // MB, W // MB)
     return jnp.clip(rec, 0.0, 1.0), bits_map
+
+
+# ---------------------------------------------------------------------------
+# chunk-fused fast-path (registry backends "fused" / "fused_exact")
+# ---------------------------------------------------------------------------
+def _chunk_blocks(frames):
+    """frames (T, H, W, C) -> flat per-channel blocks (T, n_mb*C, 16, 16),
+    padded to a TILE multiple. Returns (blocks, n_real, n_mb, pad)."""
+    T = frames.shape[0]
+    blocks = jax.vmap(blockify)(frames)          # (T, n_mb, C, 16, 16)
+    n_mb = blocks.shape[1]
+    C = blocks.shape[2]
+    blocks = blocks.reshape(T, n_mb * C, MB, MB)
+    n = n_mb * C
+    pad = (-n) % TILE
+    if pad:
+        blocks = jnp.concatenate(
+            [blocks, jnp.zeros((T, pad, MB, MB), blocks.dtype)], axis=1)
+    return blocks, n, n_mb, pad
+
+
+def _chunk_finish(rec, bits, n, n_mb, H, W, clip_refs):
+    """Kernel outputs (T, n+pad, ...) -> (decoded (T, H, W, C), bytes (T,)).
+
+    Channel bits re-merge to one header per macroblock (codec.block_bits
+    charges BLOCK_OVERHEAD once per block, the kernel once per channel
+    tile)."""
+    T = rec.shape[0]
+    C = n // n_mb
+    rec = rec[:, :n].reshape(T, n_mb, C, MB, MB)
+    bits_mb = bits[:, :n].reshape(T, n_mb, C).sum(-1) \
+        - (C - 1) * BLOCK_OVERHEAD
+    pbytes = bits_mb.sum(-1) / 8.0
+    decoded = jax.vmap(lambda r: unblockify(r, H, W))(rec)
+    if not clip_refs:  # exact path already clipped every reference in-VMEM
+        decoded = jnp.clip(decoded, 0.0, 1.0)
+    return decoded, pbytes
+
+
+def _encode_chunk_fused_xla(frames, qp_maps, clip_refs):
+    """Off-TPU lowering of the chunk-fused schedule.
+
+    Shared-map chunks (the serving path's k = chunk_size frame sampling)
+    run the scaled coefficient-space recursion: with one step per block
+    for the whole chunk, the carried state is the reconstruction in
+    *step units*, the scan body collapses to ``r += round(e_t - r)``, and
+    the per-frame quantized updates are recovered outside the scan as
+    exact integer diffs — no per-step dequantize multiply and no
+    rescale before the entropy bits. Per-frame maps and the
+    clip-corrected exact variant share ``encode_chunk_fast``'s scan
+    (the clip correction needs pixel-space state anyway).
+    """
+    T, H, W, _ = frames.shape
+    if clip_refs or qp_maps.shape[0] != 1:
+        return encode_chunk_fast(frames, qp_maps, clip_correct=clip_refs)
+    w = jnp.asarray(freq_weight())
+    step = qstep(qp_maps.reshape(-1))[:, None, None, None] * w
+    coefs = dct2(jax.vmap(blockify)(frames))     # (T, n_mb, C, 16, 16)
+    e = coefs * (1.0 / step)
+
+    def body(r, e_t):
+        r = r + jnp.round(e_t - r)
+        return r, r
+
+    _, recs = jax.lax.scan(body, jnp.zeros_like(e[0]), e, unroll=T)
+    qs = jnp.diff(recs, axis=0, prepend=jnp.zeros_like(recs[:1]))
+    pbytes = jax.vmap(lambda q: block_bits(q).sum() / 8.0)(qs)
+    decoded = jax.vmap(lambda c: unblockify(idct2(c * step), H, W))(recs)
+    return jnp.clip(decoded, 0.0, 1.0), pbytes
+
+
+def encode_chunk_fused(frames: jnp.ndarray, qp_maps: jnp.ndarray,
+                       clip_refs: bool = False, impl: str = "auto"):
+    """Chunk-fused equivalent of ``codec.encode_chunk`` / ``_fast``.
+
+    frames (T, H, W, C); qp_maps (T or 1, H/16, W/16) ->
+    (decoded (T, H, W, C), per_frame_bytes (T,)).
+
+    On TPU this is one ``mbcodec_chunk_pallas`` call: the whole P-frame
+    scan runs per VMEM tile with the decoded reference in scratch
+    (``clip_refs=True`` clips that reference every step — structurally
+    the exact encoder's semantics, the ``fused_exact`` backend).
+    Off-TPU it lowers to the shared-map coefficient-space XLA scan
+    (``warn_fallback`` announces the substitution once).
+    """
+    T = frames.shape[0]
+    H, W = frames.shape[1], frames.shape[2]
+    if impl == "auto":
+        impl = "pallas" if on_tpu() else "xla"
+    if impl == "xla":
+        warn_fallback(
+            "fused_exact" if clip_refs else "fused",
+            "the clip-corrected XLA scan (fast_exact)" if clip_refs
+            else "the shared-map coefficient-space XLA scan (fast family)")
+        return _encode_chunk_fused_xla(frames, qp_maps, clip_refs)
+    blocks, n, n_mb, _ = _chunk_blocks(frames)
+    C = n // n_mb
+    qp = jnp.broadcast_to(qp_maps.reshape(qp_maps.shape[0], -1), (T, n_mb))
+    qp = jnp.repeat(qp, C, axis=1)               # blockify is (mb, C) flat
+    pad = blocks.shape[1] - n
+    if pad:
+        qp = jnp.concatenate(
+            [qp, jnp.full((T, pad), 30.0, qp.dtype)], axis=1)
+    rec, bits = mbcodec_chunk_pallas(blocks, qp, clip_refs=clip_refs,
+                                     interpret=(impl == "interpret"))
+    return _chunk_finish(rec, bits, n, n_mb, H, W, clip_refs)
+
+
+def encode_chunk_fused_scores(frames: jnp.ndarray, pooled: jnp.ndarray,
+                              knobs: jnp.ndarray, clip_refs: bool = False,
+                              impl: str = "auto"):
+    """Scores-path chunk encode: QP assignment fused into the kernel.
+
+    ``pooled`` (H/16, W/16) is the *dilated* AccModel score map
+    (``quality.dilate_scores``); ``knobs`` (3,) = (alpha, qp_hi, qp_lo)
+    rides as a traced array so the rate controller can move it per chunk
+    with zero recompiles. Because max-pooling commutes with monotone
+    thresholding, ``pooled >= alpha`` inside the kernel reproduces the
+    dilate-then-select QP map exactly — but the map itself never
+    materializes in HBM. Used by ``serve.steps.make_camera_fleet_step``
+    for the ``fused``/``fused_exact`` backends.
+    """
+    H, W = frames.shape[1], frames.shape[2]
+    if impl == "auto":
+        impl = "pallas" if on_tpu() else "xla"
+    if impl == "xla":
+        warn_fallback(
+            "fused_exact" if clip_refs else "fused",
+            "the clip-corrected XLA scan (fast_exact)" if clip_refs
+            else "the shared-map coefficient-space XLA scan (fast family)")
+        qp_map = jnp.where(pooled >= knobs[0], knobs[1], knobs[2])[None]
+        return _encode_chunk_fused_xla(frames, qp_map, clip_refs)
+    blocks, n, n_mb, _ = _chunk_blocks(frames)
+    C = n // n_mb
+    p = jnp.repeat(pooled.reshape(-1), C)
+    pad = blocks.shape[1] - n
+    if pad:  # padded lanes score -inf: always the low-quality level
+        p = jnp.concatenate([p, jnp.full((pad,), -jnp.inf, p.dtype)])
+    rec, bits = mbcodec_chunk_scores_pallas(
+        blocks, p, knobs[:3].astype(jnp.float32), clip_refs=clip_refs,
+        interpret=(impl == "interpret"))
+    return _chunk_finish(rec, bits, n, n_mb, H, W, clip_refs)

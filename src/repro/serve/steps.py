@@ -13,6 +13,8 @@ leading, so one dispatch serves a fleet of cameras per chunk interval.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -34,8 +36,12 @@ def make_camera_fleet_step(accmodel, qcfg, impl: str = "fast",
     for the whole chunk. ``impl`` selects the chunk encoder from the
     ``codec.CHUNK_ENCODERS`` registry — "fast" (coefficient-space scan, the
     serving default), "exact" (bit-stable reference), "fast_exact"
-    (clip-corrected fast scan), or "pallas" (fused mbcodec tile on TPU,
-    jnp tile elsewhere).
+    (clip-corrected fast scan), "pallas" (fused mbcodec tile on TPU, jnp
+    tile elsewhere), or "fused" / "fused_exact" (the chunk-fused camera
+    fast-path: on TPU the step skips the materialized QP map entirely and
+    hands the dilated score map + (alpha, qp_hi, qp_lo) knob triple to the
+    VMEM-resident chunk kernel; "fused_exact" is bit-comparable to
+    "exact").
 
     ``mesh``: a 1-D ``"stream"`` mesh (``distributed.mesh.make_stream_mesh``)
     shards the fleet axis via shard_map — each device traces the identical
@@ -68,7 +74,8 @@ def make_camera_fleet_step(accmodel, qcfg, impl: str = "fast",
     """
     from repro.codec.codec import CHUNK_ENCODERS
     from repro.core.accmodel import accmodel_apply
-    from repro.core.quality import (qp_maps_from_knobs_batched,
+    from repro.core.quality import (dilate_scores,
+                                    qp_maps_from_knobs_batched,
                                     qp_maps_from_scores_batched)
     from repro.distributed.mesh import STREAM_AXIS
     from repro.distributed.sharding import assert_addressable_mesh
@@ -78,10 +85,25 @@ def make_camera_fleet_step(accmodel, qcfg, impl: str = "fast",
         assert_addressable_mesh(mesh, "make_camera_fleet_step")
 
     params = accmodel.params
-    enc = CHUNK_ENCODERS.resolve(impl)
+    enc = CHUNK_ENCODERS.resolve(impl)  # also validates impl early (loud)
+    # fused backends take the scores path: the dilated score map + the
+    # (alpha, qp_hi, qp_lo) triple go straight into the chunk kernel,
+    # which assigns the two-level QP in-register (dilate_scores >= alpha
+    # == dilate-then-select) — scoring, QP assignment, and the RoI
+    # encode fuse into one program with no HBM-resident QP map
+    fused_scores = impl in ("fused", "fused_exact")
+    if fused_scores:
+        from repro.kernels.mbcodec.ops import encode_chunk_fused_scores
+        enc_scores = functools.partial(encode_chunk_fused_scores,
+                                       clip_refs=(impl == "fused_exact"))
 
     def _encode(chunks, qmaps, scores, active=None):
-        decoded, pbytes = jax.vmap(enc)(chunks, qmaps)
+        if fused_scores:
+            pooled, ktriple = qmaps  # scores path: no materialized QP map
+            decoded, pbytes = jax.vmap(
+                lambda c, p: enc_scores(c, p, ktriple))(chunks, pooled)
+        else:
+            decoded, pbytes = jax.vmap(enc)(chunks, qmaps)
         if active is not None:  # zero padded lanes' wire bytes in-program
             lane = active.astype(pbytes.dtype)
             pbytes = pbytes * lane.reshape((-1,) + (1,) * (pbytes.ndim - 1))
@@ -89,12 +111,19 @@ def make_camera_fleet_step(accmodel, qcfg, impl: str = "fast",
 
     def _score_qmaps(chunks, knob_arr=None):
         scores = jax.nn.sigmoid(accmodel_apply(params, chunks[:, 0]))
+        if knob_arr is not None:
+            chunks = jax.vmap(
+                lambda c: soft_drop_previous(c, knob_arr[3])[0])(chunks)
+        if fused_scores:
+            pooled = dilate_scores(scores, qcfg.gamma)
+            ktriple = knob_arr[:3] if knob_arr is not None else jnp.array(
+                [qcfg.alpha, float(qcfg.qp_hi), float(qcfg.qp_lo)],
+                jnp.float32)
+            return chunks, (pooled, ktriple), scores
         if knob_arr is None:
             qmaps, _ = qp_maps_from_scores_batched(scores, qcfg)
             return chunks, qmaps, scores
         qmaps, _ = qp_maps_from_knobs_batched(scores, knob_arr, qcfg.gamma)
-        chunks = jax.vmap(
-            lambda c: soft_drop_previous(c, knob_arr[3])[0])(chunks)
         return chunks, qmaps, scores
 
     def _step(chunks):

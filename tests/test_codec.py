@@ -123,11 +123,14 @@ def _saturating_chunk(T=6, H=64, W=96, seed=11):
 
 def test_registry_backends_and_errors():
     assert set(CHUNK_ENCODERS.names()) >= {"exact", "fast", "fast_exact",
-                                           "pallas"}
-    assert "exact" in CHUNK_ENCODERS and len(CHUNK_ENCODERS) >= 4
+                                           "pallas", "fused", "fused_exact"}
+    assert "exact" in CHUNK_ENCODERS and len(CHUNK_ENCODERS) >= 6
     assert CHUNK_ENCODERS["exact"] is encode_chunk  # dict-style resolve
-    with pytest.raises(KeyError, match="unknown chunk encoder"):
+    # unknown impl must fail loudly, naming every registered backend
+    with pytest.raises(ValueError, match="unknown chunk encoder") as ei:
         CHUNK_ENCODERS.resolve("h264")
+    for name in CHUNK_ENCODERS.names():
+        assert name in str(ei.value)
 
 
 def test_registry_pallas_describe_reports_fallback():

@@ -39,7 +39,7 @@ def test_sharded_camera_step_matches_vmap():
         assert len(jax.devices()) == 4
         mesh = make_stream_mesh(4)
         batch = jnp.asarray(frames[:, :T])
-        for impl in ("fast", "exact"):
+        for impl in ("fast", "exact", "fused"):
             step_v = make_camera_fleet_step(am, qcfg, impl=impl)
             step_m = make_camera_fleet_step(am, qcfg, impl=impl, mesh=mesh)
             dv, pv, sv = step_v(batch)

@@ -13,11 +13,13 @@ from repro.kernels.accgrad_reduce.ops import accgrad_reduce
 from repro.kernels.accgrad_reduce.ref import accgrad_reduce_ref
 from repro.kernels.decode_attn.ops import decode_attn
 from repro.kernels.decode_attn.ref import decode_attn_ref
-from repro.kernels.mbcodec.ops import encode_frame_fused, mbcodec
+from repro.kernels.mbcodec.ops import (encode_chunk_fused,
+                                       encode_chunk_fused_scores,
+                                       encode_frame_fused, mbcodec)
 from repro.kernels.mbcodec.ref import mbcodec_ref
 from repro.kernels.wkv6.ops import wkv6
 from repro.kernels.wkv6.ref import wkv6_ref
-from repro.codec.codec import encode_frame
+from repro.codec.codec import encode_chunk, encode_chunk_fast, encode_frame
 
 
 # ---------------------------------------------------------------------------
@@ -75,6 +77,137 @@ def test_frame_fused_pframe_reference(hw=(64, 96)):
                                 reference=ref_dec)
     np.testing.assert_allclose(np.asarray(d2), np.asarray(d1), atol=1e-5)
     np.testing.assert_allclose(np.asarray(b2), np.asarray(b1), rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# chunk-fused mbcodec (the "fused" / "fused_exact" registry backends):
+# interpret-mode Pallas vs the exact/fast chunk encoders, CPU-runnable
+# ---------------------------------------------------------------------------
+def _chunk(T=4, H=32, W=48, seed=3, drift=0.04):
+    """Drifting scene: consecutive frames differ enough that the P-frame
+    reference chain is load-bearing (a wrong carried reference shows up
+    as a growing per-frame error, not a one-frame blip)."""
+    rng = np.random.RandomState(seed)
+    base = rng.rand(H, W, 3)
+    frames = np.stack([
+        np.clip(base + 0.02 * t + drift * rng.randn(H, W, 3), 0, 1)
+        for t in range(T)])
+    return jnp.asarray(frames.astype(np.float32))
+
+
+def _two_level_map(H, W, qp_hi=30.0, qp_lo=42.0):
+    mb = np.indices((H // 16, W // 16)).sum(0) % 2
+    return jnp.asarray(np.where(mb, qp_hi, qp_lo).astype(np.float32))
+
+
+@pytest.mark.parametrize("qp", [5.0, 30.0, 50.0])
+def test_chunk_fused_exact_parity_qp_extremes(qp):
+    """fused_exact (interpret) is bit-comparable to the exact encoder
+    across the QP range — including QP 5 (near-lossless, large coefficient
+    magnitudes) and QP 50 (coarse steps, heavy clipping pressure). At QP 5
+    the quant step is ~3e-3: f32 op-ordering differences between the
+    kernel's batched GEMM transforms and the reference dct2 can flip a
+    round() boundary, moving one coefficient by exactly one step — the
+    decoded tolerance admits that single-step flip (well under a pixel
+    LSB), nothing larger."""
+    frames = _chunk()
+    qmap = jnp.full((1, 2, 3), qp)
+    d_e, b_e = encode_chunk(frames, qmap)
+    d_f, b_f = encode_chunk_fused(frames, qmap, clip_refs=True,
+                                  impl="interpret")
+    atol = 1e-3 if qp <= 5.0 else 1e-5
+    np.testing.assert_allclose(np.asarray(d_f), np.asarray(d_e), atol=atol)
+    np.testing.assert_allclose(np.asarray(b_f), np.asarray(b_e), rtol=1e-3)
+
+
+def test_chunk_fused_pframe_reference_chain():
+    """Per-frame QP maps exercise the carried VMEM reference under a QP
+    that changes every frame; both the exact and fast semantics hold."""
+    frames = _chunk(T=5)
+    qmaps = jnp.stack([jnp.full((2, 3), q)
+                       for q in (30.0, 42.0, 26.0, 50.0, 34.0)])
+    d_e, b_e = encode_chunk(frames, qmaps)
+    d_f, b_f = encode_chunk_fused(frames, qmaps, clip_refs=True,
+                                  impl="interpret")
+    np.testing.assert_allclose(np.asarray(d_f), np.asarray(d_e), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(b_f), np.asarray(b_e), rtol=1e-3)
+    d_fa, b_fa = encode_chunk_fast(frames, qmaps)
+    d_fu, b_fu = encode_chunk_fused(frames, qmaps, impl="interpret")
+    np.testing.assert_allclose(np.asarray(d_fu), np.asarray(d_fa), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(b_fu), np.asarray(b_fa), rtol=1e-3)
+
+
+def test_chunk_fused_matches_fast_shared_map():
+    """The serving shape (one shared QP map per chunk): fused vs fast."""
+    frames = _chunk(T=6, H=48, W=64)
+    qmap = _two_level_map(48, 64)[None]
+    d_fa, b_fa = encode_chunk_fast(frames, qmap)
+    d_fu, b_fu = encode_chunk_fused(frames, qmap, impl="interpret")
+    np.testing.assert_allclose(np.asarray(d_fu), np.asarray(d_fa), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(b_fu), np.asarray(b_fa), rtol=1e-3)
+
+
+def test_chunk_fused_scores_path_identity():
+    """The in-kernel QP assignment (pooled >= alpha) must reproduce the
+    materialized dilate-then-select map exactly, including the traced
+    knob triple — the fused fleet step's correctness contract."""
+    from repro.core.quality import (QualityConfig, dilate_scores,
+                                    qp_maps_from_scores_batched)
+
+    frames = _chunk(T=4, H=48, W=64)
+    qcfg = QualityConfig(alpha=0.4, gamma=1, qp_hi=30, qp_lo=42)
+    scores = jax.random.uniform(jax.random.PRNGKey(5), (3, 4))
+    pooled = dilate_scores(scores, qcfg.gamma)
+    knobs = jnp.array([qcfg.alpha, 30.0, 42.0], jnp.float32)
+    qmaps, _ = qp_maps_from_scores_batched(scores[None], qcfg)
+    for clip_refs in (False, True):
+        d_s, b_s = encode_chunk_fused_scores(frames, pooled, knobs,
+                                             clip_refs=clip_refs,
+                                             impl="interpret")
+        d_m, b_m = encode_chunk_fused(frames, qmaps[0], clip_refs=clip_refs,
+                                      impl="interpret")
+        np.testing.assert_array_equal(np.asarray(d_s), np.asarray(d_m))
+        np.testing.assert_array_equal(np.asarray(b_s), np.asarray(b_m))
+
+
+def test_chunk_fused_all_dropped_frames():
+    """All-dropped-frame knob setting: every frame after the chunk head is
+    identical (the soft-drop replaced them with the previous kept frame),
+    so the P-frames carry only the reference's residual quantization error
+    — per-frame bytes collapse to a few percent of the I-frame, and parity
+    with exact still holds."""
+    one = _chunk(T=1)
+    frames = jnp.broadcast_to(one, (4,) + one.shape[1:])
+    qmap = jnp.full((1, 2, 3), 35.0)
+    d_e, b_e = encode_chunk(frames, qmap)
+    d_f, b_f = encode_chunk_fused(frames, qmap, clip_refs=True,
+                                  impl="interpret")
+    np.testing.assert_allclose(np.asarray(d_f), np.asarray(d_e), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(b_f), np.asarray(b_e), rtol=1e-3)
+    assert np.all(np.asarray(b_f[1:]) <= 0.05 * float(b_f[0]))
+
+
+def test_chunk_fused_xla_fallback_warns_and_matches_fast():
+    """Off-TPU the fused backend substitutes the shared-map XLA scan: it
+    must announce the substitution once (RuntimeWarning naming the
+    substitute) and match the fast encoder."""
+    from repro.kernels.mbcodec import ops
+
+    if ops.on_tpu():
+        pytest.skip("fallback path only exists off-TPU")
+    frames = _chunk()
+    qmap = _two_level_map(32, 48)[None]
+    ops._FALLBACK_WARNED.clear()
+    with pytest.warns(RuntimeWarning, match="substituting"):
+        d_x, b_x = encode_chunk_fused(frames, qmap, impl="auto")
+    # one-time: a second call must not warn again
+    import warnings as _warnings
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error", RuntimeWarning)
+        encode_chunk_fused(frames, qmap, impl="auto")
+    d_fa, b_fa = encode_chunk_fast(frames, qmap)
+    np.testing.assert_allclose(np.asarray(d_x), np.asarray(d_fa), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(b_x), np.asarray(b_fa), rtol=1e-3)
 
 
 # ---------------------------------------------------------------------------
