@@ -78,6 +78,10 @@ HEADLINE_KEYS = {
     "kernels": {
         "kernels/fused_vs_fast": ("ratio",),
     },
+    "loadtest": {
+        "loadtest/agg_speedup": ("speedup",),
+        "loadtest/wire_compression": ("ratio",),
+    },
 }
 
 #: derived keys that are pass/fail verdict flags: a yes in the baseline

@@ -14,16 +14,17 @@ import traceback
 
 #: benches whose rows are also persisted as BENCH_<name>.json at the repo
 #: root (machine-readable perf trajectory across PRs)
-JSON_BENCHES = ("control", "multistream", "churn", "kernels")
+JSON_BENCHES = ("control", "multistream", "churn", "kernels", "loadtest")
 
 
 def main() -> None:
-    from benchmarks import (churn, control, kernel_bench, multistream,
-                            multitask, paper_figs, roofline)
+    from benchmarks import (churn, control, kernel_bench, loadtest,
+                            multistream, multitask, paper_figs, roofline)
 
     benches = {
         "control": control.run,
         "churn": churn.run,
+        "loadtest": loadtest.run,
         "multistream": multistream.run,
         "fig6": paper_figs.fig6_stability,
         "fig7": paper_figs.fig7_tradeoff,

@@ -25,11 +25,13 @@ from repro.control.controller import (ChunkObservation, ControlKnobs,
                                       RateController)
 from repro.control.traces import (NetworkTrace, TRACE_GENRES, drone_trace,
                                   lte_trace, make_trace, wifi_trace)
+from repro.control.workload import Workload, make_workload
 
 __all__ = [
     "AdmissionPlan", "ChunkObservation", "ChurnEvent", "ControlKnobs",
     "ControlledAccMPEGPolicy", "CrossHostAutoscaler",
     "FleetAutoscaler", "NetworkTrace",
-    "RateController", "ScaleDecision", "TRACE_GENRES", "apply_churn",
-    "drone_trace", "lte_trace", "make_trace", "pad_streams", "wifi_trace",
+    "RateController", "ScaleDecision", "TRACE_GENRES", "Workload",
+    "apply_churn", "drone_trace", "lte_trace", "make_trace",
+    "make_workload", "pad_streams", "wifi_trace",
 ]

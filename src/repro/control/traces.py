@@ -111,18 +111,22 @@ class NetworkTrace:
         upload *duration* in input order (the trace analogue of
         ``core.pipeline.shared_stream_delays``, without the RTT term)."""
         n = len(stream_bytes)
-        remaining = [float(b) * 8.0 for b in stream_bytes]
-        done = [0.0] * n
-        active = [i for i in range(n) if remaining[i] > 0.0]
+        remaining = np.asarray(stream_bytes, np.float64) * 8.0
+        done = np.zeros(n, np.float64)
+        active = remaining > 0.0
+        n_active = int(active.sum())
         K, dt = self.bw_bps.size, self.dt_s
         t = float(start_s)
-        # integer segment walk, same float-rounding guard as transmit_time
+        # integer segment walk, same float-rounding guard as transmit_time;
+        # the per-event bookkeeping is vectorized over lanes (masked numpy
+        # ops) — the old per-lane Python inner loop made each event O(N)
+        # interpreter work, O(N^2) per chunk at fleet scale
         k = int(math.floor(t / dt))
-        while active:
+        while n_active:
             rate = float(self.bw_bps[k % K])
             seg_end = (k + 1) * dt
-            share = rate / len(active)  # per-stream service rate
-            min_rem = min(remaining[i] for i in active)
+            share = rate / n_active  # per-stream service rate
+            min_rem = float(remaining[active].min())
             if min_rem / share <= seg_end - t:
                 # at least one stream drains inside this segment
                 t += min_rem / share
@@ -131,15 +135,12 @@ class NetworkTrace:
                 served = max(share * (seg_end - t), 0.0)
                 t = seg_end
                 k += 1
-            still = []
-            for i in active:
-                remaining[i] -= served
-                if remaining[i] <= 1e-9:
-                    done[i] = t - start_s
-                else:
-                    still.append(i)
-            active = still
-        return done
+            remaining[active] -= served
+            finished = active & (remaining <= 1e-9)
+            done[finished] = t - start_s
+            active &= ~finished
+            n_active = int(active.sum())
+        return done.tolist()
 
 
 def _ar1(rng: np.random.RandomState, n: int, rho: float,

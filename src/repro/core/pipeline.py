@@ -202,16 +202,21 @@ def shared_stream_delays(stream_bytes: Sequence[float],
     ``uplink_bps`` (no stream is ever slower than the fixed equal split;
     smaller streams finish earlier and donate their share)."""
     n = len(stream_bytes)
+    if n == 0:
+        return []
     uplink = net.uplink_bps or net.bandwidth_bps * n
-    order = sorted(range(n), key=lambda i: stream_bytes[i])
-    delays = [0.0] * n
-    t, sent = 0.0, 0.0
-    for k, i in enumerate(order):
-        bits = stream_bytes[i] * 8.0
-        t += (bits - sent) * (n - k) / uplink
-        sent = bits
-        delays[i] = t + net.rtt_s / 2.0
-    return delays
+    # vectorized processor sharing: stable argsort matches sorted()'s tie
+    # order, and cumsum accumulates the per-finish increments in the same
+    # sequence the old Python loop did, so results are bit-identical
+    b = np.asarray(stream_bytes, np.float64)
+    order = np.argsort(b, kind="stable")
+    bits = b[order] * 8.0
+    prev = np.concatenate(([0.0], bits[:-1]))
+    inc = (bits - prev) * (n - np.arange(n, dtype=np.float64)) / uplink
+    t = np.cumsum(inc)
+    delays = np.empty(n, np.float64)
+    delays[order] = t + net.rtt_s / 2.0
+    return delays.tolist()
 
 
 class UplinkClock:
@@ -260,9 +265,11 @@ class UplinkClock:
         streams' chunks at once)."""
         ready = self.capture_s(ci) + ready_s
         start = max(ready, self.free_at_s)
-        durs = self.trace.shared_transmit_times(stream_bytes, start)
-        self.free_at_s = start + (max(durs) if durs else 0.0)
-        return [d + self.trace.rtt_s / 2.0 for d in durs], start - ready
+        durs = np.asarray(
+            self.trace.shared_transmit_times(stream_bytes, start),
+            np.float64)
+        self.free_at_s = start + (float(durs.max()) if durs.size else 0.0)
+        return (durs + self.trace.rtt_s / 2.0).tolist(), start - ready
 
 
 def make_reference(frames: np.ndarray, final_dnn, qp_hi: int = 30,

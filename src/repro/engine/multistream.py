@@ -51,11 +51,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.core.aggregate import AggregateConfig, AggregateResult
 from repro.core.pipeline import (ChunkResult, FleetTiming, NetworkConfig,
                                  RunResult, UplinkClock,
                                  shared_stream_delays)
 from repro.core.quality import QualityConfig
-from repro.serve.steps import (make_camera_fleet_step, make_server_fleet_step,
+from repro.serve.steps import (make_accuracy_reduce_step,
+                               make_camera_fleet_step, make_server_fleet_step,
                                stream_sharding)
 
 
@@ -86,13 +88,19 @@ class FleetResult:
     shapes: Optional[List[int]] = None       # serve_loop: padded shapes
     hosts: Optional[List[int]] = None  # multi-host (serve_fleet): the
     # ingestion host that served each entry of ``streams``
+    aggregate: Optional[AggregateResult] = None  # detail="windowed":
+    # O(window) summaries replace ``streams`` at fleet scale
 
     @property
     def n_streams(self):
+        if not self.streams and self.aggregate is not None:
+            return self.aggregate.n_streams
         return len(self.streams)
 
     @property
     def accuracy(self):
+        if not self.streams and self.aggregate is not None:
+            return self.aggregate.accuracy
         return float(np.mean([r.accuracy for r in self.streams]))
 
     @property
@@ -105,6 +113,8 @@ class FleetResult:
         return self.n_streams / max(self.mean_camera_s, 1e-12)
 
     def _delay_percentile(self, q: float) -> float:
+        if not self.streams and self.aggregate is not None:
+            return self.aggregate.delay_percentile(q)
         delays = [c.total_delay_s for r in self.streams for c in r.chunks]
         # a serve_loop schedule where no stream ever served is legal
         # (admit(0) idles every interval) — report nan, not a crash
@@ -136,6 +146,8 @@ class FleetResult:
                 1 for a, b in zip(self.decisions, self.decisions[1:])
                 if (a.mesh_width, a.batch_depth)
                 != (b.mesh_width, b.batch_depth))
+        if self.aggregate is not None:
+            s.update(self.aggregate.summary())
         return s
 
 
@@ -195,7 +207,13 @@ class MultiStreamEngine:
                  mesh: Union[Mesh, str, None] = None,
                  overlap: bool = True, depth: int = 2, trace=None,
                  controller=None, autoscaler=None, fps: float = 30.0,
-                 sim_encode_s: Optional[float] = None):
+                 sim_encode_s: Optional[float] = None,
+                 detail: str = "chunks",
+                 aggregate: Optional[AggregateConfig] = None,
+                 device_reduce: bool = True):
+        if detail not in ("chunks", "legacy", "windowed"):
+            raise ValueError(f"detail must be 'chunks', 'legacy', or "
+                             f"'windowed', got {detail!r}")
         self.final_dnn = final_dnn
         self.accmodel = accmodel
         self.qcfg = qcfg
@@ -210,10 +228,23 @@ class MultiStreamEngine:
         self.autoscaler = autoscaler
         self.fps = fps
         self.sim_encode_s = sim_encode_s
+        # host accounting mode: "chunks" keeps full per-chunk ChunkResult
+        # lists but scores all lanes in one vectorized pass (bit-identical
+        # to "legacy", the preserved per-lane loop / parity oracle);
+        # "windowed" streams chunk batches into a FleetAggregator so the
+        # result carries O(window) summaries — the fleet-scale mode
+        self.detail = detail
+        self.aggregate = aggregate  # AggregateConfig for detail="windowed"
+        # with detail="windowed" and no precomputed refs, reduce per-lane
+        # accuracy on device (segmentation/keypoint) so dense output trees
+        # never cross to host — only (N,) scalars do
+        self.device_reduce = device_reduce
         self.last_scale = None  # autoscaler's most recent ScaleDecision
         self._steps = {}  # resolved mesh (or None) -> (camera, server)
+        self._acc_steps = {}  # resolved mesh -> device accuracy reduce
         self._warm = {}   # (shape, mesh, refs is None) -> steady-state times
         self._refs_prepared = None  # (refs object, prepared copy)
+        self._agg = None  # live FleetAggregator during a windowed run
 
     # -- step construction ---------------------------------------------------
     def _resolve_mesh(self, n_streams: int) -> Optional[Mesh]:
@@ -240,6 +271,21 @@ class MultiStreamEngine:
             )
         return self._steps[key] + (mesh,)
 
+    def _use_device_reduce(self, refs) -> bool:
+        """Device accuracy reduction applies only when the run is windowed
+        (no per-chunk results wanted), references are computed in-loop
+        (precomputed refs live on host), and the task has a jnp-reducible
+        metric."""
+        return (self.detail == "windowed" and self.device_reduce
+                and refs is None
+                and self.final_dnn.supports_device_accuracy)
+
+    def _acc_step_for(self, mesh):
+        if mesh not in self._acc_steps:
+            self._acc_steps[mesh] = make_accuracy_reduce_step(
+                self.final_dnn, mesh=mesh)
+        return self._acc_steps[mesh]
+
     def _mesh_width(self) -> int:
         """Current stream-mesh width (1 = single-device vmap)."""
         return int(self.mesh.devices.size) \
@@ -251,7 +297,7 @@ class MultiStreamEngine:
         return jax.device_put(x, sharding) if sharding is not None else x
 
     def _steady_times(self, camera, server_step, warm, refs_none: bool,
-                      overlap: bool, key):
+                      overlap: bool, key, acc_step=None):
         """Compile the camera + server programs for this batch shape
         outside the timed loop, then (overlap mode) time one hot step of
         each — the steady-state estimates per-stream ``encode_s`` and
@@ -263,7 +309,10 @@ class MultiStreamEngine:
             return self._warm[key]
         d0, _, _ = camera(warm)
         jax.block_until_ready(d0)
-        jax.block_until_ready(jax.tree_util.tree_leaves(server_step(d0)))
+        so = server_step(d0)
+        jax.block_until_ready(jax.tree_util.tree_leaves(so))
+        if acc_step is not None:  # compile the device accuracy reduce too
+            jax.block_until_ready(acc_step(so, so))
         cam_steady_s = server_steady_s = 0.0
         if overlap:  # serialized mode measures stages per chunk instead
             t0 = time.perf_counter()
@@ -337,21 +386,43 @@ class MultiStreamEngine:
         whose wire bytes the masked camera step already zeroed — they ride
         through the shared-uplink solvers at zero cost and are never
         scored, so padding contributes exactly nothing to accuracy, bytes,
-        or delay aggregates."""
-        # bulk-fetch device results to host once, then keep the per-stream
-        # scoring in numpy — per-stream device slicing would enqueue tiny
-        # computations behind the (already dispatched) next camera step
-        outs = {k: np.asarray(v) for k, v in p["outs"].items()}
-        ref_outs = None if p["ref_outs"] is None else {
-            k: np.asarray(v) for k, v in p["ref_outs"].items()}
+        or delay aggregates.
+
+        Scoring dispatches on ``self.detail``: "chunks" (default) scores
+        every active lane in one vectorized numpy pass and still builds
+        the full ChunkResult lists, bit-identical to "legacy" — the
+        original per-lane Python loop, preserved as the parity oracle and
+        as the bench's O(streams x chunks) baseline; "windowed" folds the
+        lane batch into the run's FleetAggregator (O(window) state) and
+        appends nothing. When the chunk carries a device-reduced accuracy
+        vector (``p["acc_dev"]``) the dense output trees were never
+        fetched at all."""
+        acc_dev = p.get("acc_dev")
+        if acc_dev is None:
+            # bulk-fetch device results to host once, then keep the
+            # scoring in numpy — per-stream device slicing would enqueue
+            # tiny computations behind the (already dispatched) next
+            # camera step
+            outs = {k: np.asarray(v) for k, v in p["outs"].items()}
+            ref_outs = None if p["ref_outs"] is None else {
+                k: np.asarray(v) for k, v in p["ref_outs"].items()}
+        else:
+            # materialize the device-reduced (N,) accuracies up front,
+            # beside the bulk fetch above: blocking on the device here
+            # would charge server compute to the host_s accounting
+            acc_dev = np.asarray(acc_dev)
         if overlap:
             timing.server_s.append(p["server_steady_s"])
         t0 = time.perf_counter()
+        ci = p["ci"]
         ids = p.get("ids")  # serve_loop: active lane i -> stream ids[i]
         pbytes = np.asarray(p["pbytes"])
         n_lanes = pbytes.shape[0]
-        rows = range(n_lanes) if ids is None else range(len(ids))
-        lane_bytes = [float(pbytes[i].sum()) for i in range(n_lanes)]
+        n_active = n_lanes if ids is None else len(ids)
+        # one vectorized row-sum; .tolist() keeps the downstream delay
+        # solvers / controller sums fed with the same Python floats the
+        # old per-lane loop produced
+        lane_bytes = pbytes.reshape(n_lanes, -1).sum(axis=1).tolist()
         if clock is None:
             # price the uplink over *active* lanes only: the constant-net
             # fallback sizes the shared uplink as bandwidth_bps * N when
@@ -359,39 +430,69 @@ class MultiStreamEngine:
             # cameras — counting them would grant the fleet phantom
             # capacity (active lanes occupy the leading rows, so this is
             # a prefix slice)
-            delays = shared_stream_delays([lane_bytes[i] for i in rows],
-                                          net)
+            delays = shared_stream_delays(lane_bytes[:n_active], net)
             delays += [0.0] * (n_lanes - len(delays))
             queue_s = 0.0
         else:
             # the trace's capacity is absolute (bw(t)), so zero-byte
             # padded lanes already ride along at zero cost
-            delays, queue_s = clock.send_shared(p["ci"], lane_bytes,
+            delays, queue_s = clock.send_shared(ci, lane_bytes,
                                                 p["cam_dt"])
-        for i in rows:
-            sid = i if ids is None else ids[i]
-            out_i = {k: v[i] for k, v in outs.items()}
-            if refs is not None:
-                ref = refs[sid][p["ci"]]
+        if n_active and self.detail == "legacy":
+            for i in range(n_active):
+                sid = i if ids is None else ids[i]
+                out_i = {k: v[i] for k, v in outs.items()}
+                if refs is not None:
+                    ref = refs[sid][ci]
+                else:
+                    ref = {k: v[i] for k, v in ref_outs.items()}
+                acc = self.final_dnn.accuracy(out_i, ref)
+                per_stream[sid].append(ChunkResult(
+                    acc, lane_bytes[i], encode_s=p["cam_dt"],
+                    overhead_s=0.0, stream_s=delays[i], queue_s=queue_s,
+                    ci=ci))
+        elif n_active:
+            sids = list(range(n_active)) if ids is None else list(ids)
+            if acc_dev is not None:
+                accs = np.asarray(acc_dev, np.float64)[:n_active]
             else:
-                ref = {k: v[i] for k, v in ref_outs.items()}
-            acc = self.final_dnn.accuracy(out_i, ref)
-            per_stream[sid].append(ChunkResult(
-                acc, lane_bytes[i], encode_s=p["cam_dt"], overhead_s=0.0,
-                stream_s=delays[i], queue_s=queue_s, ci=p["ci"]))
-        if self.controller is not None:
+                outs_a = {k: v[:n_active] for k, v in outs.items()}
+                if refs is not None:
+                    keys = refs[sids[0]][ci].keys()
+                    ref_a = {k: np.stack([np.asarray(refs[sid][ci][k])
+                                          for sid in sids]) for k in keys}
+                else:
+                    ref_a = {k: v[:n_active] for k, v in ref_outs.items()}
+                accs = self.final_dnn.accuracy_batched(outs_a, ref_a)
+            if self.detail == "windowed":
+                total = (np.asarray(delays[:n_active], np.float64)
+                         + p["cam_dt"] + queue_s)
+                self._agg.observe(ci, sids, accs,
+                                  np.asarray(lane_bytes[:n_active],
+                                             np.float64), total)
+            else:
+                for i in range(n_active):
+                    per_stream[sids[i]].append(ChunkResult(
+                        float(accs[i]), lane_bytes[i],
+                        encode_s=p["cam_dt"], overhead_s=0.0,
+                        stream_s=delays[i], queue_s=queue_s, ci=ci))
+        if self.controller is not None and n_active:
             from repro.control.controller import ChunkObservation
 
             # the fleet shares one uplink, so the controller tracks the
             # batch tail: the slowest *active* stream's completion is what
             # a fade turns into backlog for the next chunk interval;
             # used_knobs is what this chunk was dispatched with (under
-            # overlap the level has moved since)
+            # overlap the level has moved since). An all-quiet interval
+            # (n_active == 0) that still reaches scoring — a drained
+            # pending chunk after everyone left — yields no observation:
+            # there is no batch tail to measure, and the old
+            # ``max(delays[i] for i in rows)`` raised on it
             self.controller.observe(ChunkObservation(
-                n_bytes=float(sum(lane_bytes[i] for i in rows)),
-                stream_s=max(delays[i] for i in rows),
+                n_bytes=float(sum(lane_bytes[:n_active])),
+                stream_s=max(delays[:n_active]),
                 queue_s=queue_s, compute_s=p["cam_dt"],
-                n_streams=len(rows)),
+                n_streams=n_active),
                 used_knobs=p.get("knobs"))
         timing.host_s.append(time.perf_counter() - t0)
 
@@ -410,6 +511,11 @@ class MultiStreamEngine:
         timing = FleetTiming()
         starts = list(range(0, T - T % cs, cs))
         refs = self._prepare_refs(refs)
+        windowed = self.detail == "windowed"
+        if windowed:
+            self._agg = (self.aggregate or AggregateConfig()).build()
+        use_dev = self._use_device_reduce(refs)
+        acc_step = self._acc_step_for(mesh) if use_dev else None
         controlled = self.controller is not None
         if controlled:
             self.controller.reset()
@@ -428,13 +534,13 @@ class MultiStreamEngine:
         # then time one hot step of each — wall_s stays the measured
         # ground truth for the whole loop (see _steady_times).
         warm_key = (frames.shape, mesh, refs is None, self.overlap,
-                    controlled)
+                    controlled, use_dev)
         if warm_key in self._warm:  # repeat run: skip the warm put
             cam_steady_s, server_steady_s = self._warm[warm_key]
         else:
             cam_steady_s, server_steady_s = self._steady_times(
                 camera, server_step, put(frames[:, : cs]), refs is None,
-                self.overlap, warm_key)
+                self.overlap, warm_key, acc_step=acc_step)
 
         # ``depth`` chunks stay in flight (2 = the classic double buffer):
         # at iteration ci the host scores chunk ci-depth, whose server
@@ -464,15 +570,28 @@ class MultiStreamEngine:
             t1 = time.perf_counter()
             outs = server_step(decoded)           # batched server DNN
             ref_outs = server_step(batch) if refs is None else None
-            pending.append(dict(ci=ci, outs=outs, ref_outs=ref_outs,
-                                pbytes=pbytes, cam_dt=acct_dt,
-                                server_steady_s=server_steady_s,
-                                knobs=knobs_used))
+            if use_dev:
+                # reduce accuracy on device and let the dense output
+                # trees die in the device queue — only (N,) scalars and
+                # the byte matrix ever reach the host
+                acc_dev = acc_step(outs, ref_outs)
+                entry = dict(ci=ci, outs=None, ref_outs=None,
+                             acc_dev=acc_dev)
+            else:
+                acc_dev = None
+                entry = dict(ci=ci, outs=outs, ref_outs=ref_outs)
+            entry.update(pbytes=pbytes, cam_dt=acct_dt,
+                         server_steady_s=server_steady_s,
+                         knobs=knobs_used)
+            pending.append(entry)
             if not self.overlap:
-                jax.block_until_ready(jax.tree_util.tree_leaves(outs))
-                if ref_outs is not None:  # attribute the ref pass to server
-                    jax.block_until_ready(
-                        jax.tree_util.tree_leaves(ref_outs))
+                if use_dev:
+                    jax.block_until_ready(acc_dev)
+                else:
+                    jax.block_until_ready(jax.tree_util.tree_leaves(outs))
+                    if ref_outs is not None:  # ref pass bills to server
+                        jax.block_until_ready(
+                            jax.tree_util.tree_leaves(ref_outs))
                 timing.server_s.append(time.perf_counter() - t1)
                 self._finish(pending.pop(0), per_stream, net, refs,
                              timing, False, clock)
@@ -485,6 +604,10 @@ class MultiStreamEngine:
             self.last_scale = self.autoscaler.decide(
                 timing, N, mesh_width=width,
                 batch_depth=self.depth if self.overlap else 1)
+        if windowed:
+            agg, self._agg = self._agg.result(), None
+            return FleetResult([], timing.camera_s, timing=timing,
+                               aggregate=agg)
         streams = [RunResult(f"accmpeg_fleet[{i}]", per_stream[i])
                    for i in range(N)]
         return FleetResult(streams, timing.camera_s, timing=timing)
@@ -590,6 +713,10 @@ class MultiStreamEngine:
         clock = None if self.trace is None else \
             UplinkClock(self.trace, cs, self.fps)
         refs = self._prepare_refs(refs)
+        windowed = self.detail == "windowed"
+        if windowed:
+            self._agg = (self.aggregate or AggregateConfig()).build()
+        use_dev = self._use_device_reduce(refs)
         per_stream: dict = {sid: [] for sid in range(N_total)}
         timing = FleetTiming()
         decisions: List = []
@@ -635,15 +762,17 @@ class MultiStreamEngine:
                                 self.controller.knob_array())
                 return _cam(batch, _mask)
 
+            acc_step = self._acc_step_for(mesh) if use_dev else None
             warm_key = (batch_np.shape, mesh, refs is None, self.overlap,
-                        controlled, "masked")
+                        controlled, use_dev, "masked")
             if warm_key in self._warm:  # hot shape: skip the warm put
                 cam_steady_s, server_steady_s = self._warm[warm_key]
             else:
                 t_warm = time.perf_counter()
                 cam_steady_s, server_steady_s = self._steady_times(
                     camera, server_step, self._put(batch_np, sharding),
-                    refs is None, self.overlap, warm_key)
+                    refs is None, self.overlap, warm_key,
+                    acc_step=acc_step)
                 warm_s += time.perf_counter() - t_warm
 
             host_before = len(timing.host_s)
@@ -664,16 +793,26 @@ class MultiStreamEngine:
             t1 = time.perf_counter()
             outs = server_step(decoded)           # batched server DNN
             ref_outs = server_step(batch) if refs is None else None
-            pending.append(dict(ci=ci, ids=ids, outs=outs,
-                                ref_outs=ref_outs, pbytes=pbytes,
-                                cam_dt=acct_dt,
-                                server_steady_s=server_steady_s,
-                                knobs=knobs_used))
+            if use_dev:
+                acc_dev = acc_step(outs, ref_outs)
+                entry = dict(ci=ci, ids=ids, outs=None, ref_outs=None,
+                             acc_dev=acc_dev)
+            else:
+                acc_dev = None
+                entry = dict(ci=ci, ids=ids, outs=outs,
+                             ref_outs=ref_outs)
+            entry.update(pbytes=pbytes, cam_dt=acct_dt,
+                         server_steady_s=server_steady_s,
+                         knobs=knobs_used)
+            pending.append(entry)
             if not self.overlap:
-                jax.block_until_ready(jax.tree_util.tree_leaves(outs))
-                if ref_outs is not None:
-                    jax.block_until_ready(
-                        jax.tree_util.tree_leaves(ref_outs))
+                if use_dev:
+                    jax.block_until_ready(acc_dev)
+                else:
+                    jax.block_until_ready(jax.tree_util.tree_leaves(outs))
+                    if ref_outs is not None:
+                        jax.block_until_ready(
+                            jax.tree_util.tree_leaves(ref_outs))
                 timing.server_s.append(time.perf_counter() - t1)
                 self._finish(pending.pop(0), per_stream, net, refs,
                              timing, False, clock)
@@ -705,6 +844,13 @@ class MultiStreamEngine:
             self._finish(pending.pop(0), per_stream, net, refs, timing,
                          self.overlap, clock)
         timing.wall_s = time.perf_counter() - t_run - warm_s
+        if windowed:
+            agg, self._agg = self._agg.result(), None
+            return FleetResult([], timing.camera_s, timing=timing,
+                               stream_ids=list(agg.stream_ids),
+                               decisions=decisions,
+                               shapes=list(scaler.compiled_shapes),
+                               aggregate=agg)
         served = [sid for sid in sorted(per_stream) if per_stream[sid]]
         streams = [RunResult(f"accmpeg_churn[{sid}]", per_stream[sid])
                    for sid in served]

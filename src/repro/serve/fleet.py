@@ -45,6 +45,7 @@ from typing import Callable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.control.autoscaler import ChurnEvent, ScaleDecision
+from repro.core.aggregate import AggregateResult
 from repro.core.pipeline import ChunkResult, FleetTiming, RunResult
 from repro.engine.multistream import FleetResult
 
@@ -149,7 +150,13 @@ def split_events(topology: FleetTopology,
 def host_payload(host: int, owned: Sequence[int], res: FleetResult) -> dict:
     """One host's serve_loop result as a JSON-serializable payload. Lane
     ids are translated back to global stream ids here, so the merge only
-    ever sees the global namespace."""
+    ever sees the global namespace.
+
+    A windowed result (``res.aggregate`` set) ships the compact
+    O(window) wire format — the relabeled ``AggregateResult`` — instead
+    of per-chunk JSON: the payload size no longer grows with
+    streams x chunks, which is what lets the KV allgather survive
+    thousand-stream fleets."""
     owned = list(owned)
     # which absolute chunk interval each camera_s entry belongs to: the
     # serve loop appends one entry per *served* interval (all-quiet
@@ -157,10 +164,17 @@ def host_payload(host: int, owned: Sequence[int], res: FleetResult) -> dict:
     # least one chunk carrying its ci — so the sorted served-ci set
     # aligns 1:1 with camera_s. The merge needs this to max-combine
     # hosts by interval, not by list position (hosts idle differently).
-    cis = sorted({c.ci for run in res.streams for c in run.chunks})
+    aggregate = None
+    if res.aggregate is not None:
+        aggregate = res.aggregate.relabel(
+            {lane: owned[lane] for lane in res.aggregate.stream_ids})
+        cis = sorted(set(aggregate.cis))
+    else:
+        cis = sorted({c.ci for run in res.streams for c in run.chunks})
     if len(cis) != len(res.camera_s):  # run(): ci == position
         cis = list(range(len(res.camera_s)))
     return {
+        "aggregate": None if aggregate is None else aggregate.to_wire(),
         "host": int(host),
         "streams": [
             {"sid": int(owned[lane]),
@@ -194,8 +208,24 @@ def merge_host_results(payloads: Sequence[dict]) -> FleetResult:
     completes when its slowest host's fused step does. Padded lanes
     never reach the wire (each host ships served chunks only), so the
     zero-cost-padding guarantee survives the merge by construction.
+
+    Windowed payloads (``"aggregate"`` set) merge through
+    :meth:`AggregateResult.merge` instead — exact counter/window/tier
+    addition plus pooled quantile sketches — and the assembled result
+    carries the merged aggregate with ``streams=[]``. Mixing windowed
+    and per-chunk payloads in one gather is a configuration error
+    (hosts must agree on ``detail=``) and raises ``ValueError``.
     """
     payloads = sorted(payloads, key=lambda p: p["host"])
+    with_agg = [p for p in payloads if p.get("aggregate") is not None]
+    if with_agg and len(with_agg) != len(payloads):
+        raise ValueError(
+            "hosts disagree on the fleet wire format: "
+            f"{sorted(p['host'] for p in with_agg)} shipped windowed "
+            "aggregates while "
+            f"{sorted(p['host'] for p in payloads if p.get('aggregate') is None)} "
+            "shipped per-chunk streams; every host's engine must use "
+            "the same detail= setting")
     entries = []  # (sid, host, RunResult)
     for p in payloads:
         for s in p["streams"]:
@@ -221,6 +251,19 @@ def merge_host_results(payloads: Sequence[dict]) -> FleetResult:
     decisions = [ScaleDecision(**d) for p in payloads
                  for d in p["decisions"]]
     shapes = sorted({s for p in payloads for s in p["shapes"]})
+    if with_agg:
+        parts = [AggregateResult.from_wire(p["aggregate"])
+                 for p in payloads]
+        host_of = {sid: p["host"]
+                   for p, part in zip(payloads, parts)
+                   for sid in part.stream_ids}
+        merged = AggregateResult.merge(parts)  # loud on dupe sids
+        return FleetResult(
+            streams=[], camera_s=camera_s, timing=timing,
+            stream_ids=list(merged.stream_ids),
+            decisions=decisions, shapes=shapes,
+            hosts=[host_of[sid] for sid in merged.stream_ids],
+            aggregate=merged)
     return FleetResult(
         streams=[run for _, _, run in entries],
         camera_s=camera_s, timing=timing,

@@ -203,6 +203,41 @@ def make_server_fleet_step(final_dnn, mesh: Mesh = None):
     return jax.jit(sharded)
 
 
+def make_accuracy_reduce_step(final_dnn, mesh: Mesh = None):
+    """Device-side per-lane accuracy reduction for windowed aggregation.
+
+    Returns ``acc(outs, ref_outs) -> (N,)`` where both arguments are the
+    (N, T, ...) output trees of :func:`make_server_fleet_step`. With this
+    step in the pipeline only O(N) accuracy scalars (plus the (N, T) byte
+    matrix) ever cross to host per chunk — the full dense output trees
+    stay on device, which is what makes ``detail="windowed"`` serving
+    O(window) on the host instead of O(streams x chunks).
+
+    Only built for tasks :func:`repro.vision.dnn.device_lane_accuracy`
+    supports (segmentation, keypoint); the engine falls back to the
+    batched host scorer for detection. Sharded over the stream mesh like
+    the server step when ``mesh`` is given (the reduction is per-lane, so
+    the fleet axis stays embarrassingly parallel).
+    """
+    from repro.distributed.mesh import STREAM_AXIS
+    from repro.distributed.sharding import assert_addressable_mesh
+    from repro.vision.dnn import device_lane_accuracy
+
+    if mesh is not None:
+        assert_addressable_mesh(mesh, "make_accuracy_reduce_step")
+
+    task = final_dnn.task
+
+    def _acc(outs, ref_outs):
+        return device_lane_accuracy(task, outs, ref_outs)
+
+    if mesh is None:
+        return jax.jit(_acc)
+    spec = P(STREAM_AXIS)
+    sharded = shard_map(_acc, mesh, in_specs=(spec, spec), out_specs=spec)
+    return jax.jit(sharded)
+
+
 def make_prefill_step(model, cfg: ArchConfig, rules: Rules):
     def prefill(params, batch):
         extras = {k: batch[k] for k in ("context", "frames") if k in batch}

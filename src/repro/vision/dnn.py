@@ -284,6 +284,150 @@ def keypoint_accuracy(out, ref_out, radius=2.0):
 
 
 # ---------------------------------------------------------------------------
+# batched (per-lane) accuracy — the vectorized host scoring path
+# ---------------------------------------------------------------------------
+# The fleet engine's server step emits one output tree whose leaves carry a
+# leading lane axis: (N, T, hs, ws, C). The legacy host path sliced lane i
+# out of that tree and called ``FinalDNN.accuracy`` N times per chunk — an
+# O(streams) Python loop. These `_batched` variants score every lane in one
+# numpy pass and are engineered to match the sliced per-lane calls
+# *bit-for-bit* (same reductions in the same order per lane), which the
+# aggregation parity tests pin.
+
+def _decode_detection_frames(keep_np, wh, thresh=0.3, topk=50):
+    """Decode a flat (F, hs, ws) stack of suppressed heatmaps into F
+    per-frame detection lists. One global ``np.where`` + searchsorted
+    frame grouping replaces F per-frame ``np.where`` calls; row-major
+    ordering makes each frame's candidate order — and therefore its
+    argsort tiebreaks and final boxes — identical to
+    :func:`decode_detections` on that frame alone."""
+    fs, ys_all, xs_all = np.where(keep_np >= thresh)
+    bounds = np.searchsorted(fs, np.arange(keep_np.shape[0] + 1))
+    results = []
+    for b in range(keep_np.shape[0]):
+        lo, hi = bounds[b], bounds[b + 1]
+        ys, xs = ys_all[lo:hi], xs_all[lo:hi]
+        scores = keep_np[b][ys, xs]
+        order = np.argsort(-scores)[:topk]
+        dets = []
+        for i in order:
+            y, x = ys[i], xs[i]
+            w, h = np.maximum(wh[b, y, x], 0.5)
+            cx, cy = (x + 0.5) * STRIDE, (y + 0.5) * STRIDE
+            dets.append((cx - w * STRIDE / 2, cy - h * STRIDE / 2,
+                         cx + w * STRIDE / 2, cy + h * STRIDE / 2,
+                         float(scores[i])))
+        results.append(dets)
+    return results
+
+
+def _lane_keep(out):
+    """Suppressed detection heat for a (N, T, ...) lane tree, flattened to
+    (N*T, hs, ws). Uses the precomputed ``"keep"`` when the server fleet
+    step shipped it; otherwise folds lanes into the batch axis so the 4-D
+    max-pool NMS applies unchanged."""
+    if "keep" in out:
+        keep = np.asarray(out["keep"])
+        return keep.reshape((-1,) + keep.shape[2:])
+    heat = np.asarray(out["heat"])
+    n, t = heat.shape[:2]
+    flat = {"heat": heat.reshape((n * t,) + heat.shape[2:])}
+    return np.asarray(detection_keep_heat(flat))
+
+
+def detection_f1_batched(out, ref_out, iou_thresh=0.5):
+    """Per-lane mean-F1 for lane trees with leaves (N, T, ...); returns
+    (N,) float64, each entry bit-equal to ``detection_f1`` on that lane's
+    slice."""
+    keep = _lane_keep(out)
+    wh = np.asarray(out["wh"])
+    n, t = wh.shape[:2]
+    wh = wh.reshape((n * t,) + wh.shape[2:])
+    ref_keep = _lane_keep(ref_out)
+    ref_wh = np.asarray(ref_out["wh"])
+    ref_wh = ref_wh.reshape((n * t,) + ref_wh.shape[2:])
+    dets = _decode_detection_frames(keep, wh)
+    refs = _decode_detection_frames(ref_keep, ref_wh)
+    return np.asarray([
+        detection_f1(dets[b * t:(b + 1) * t], refs[b * t:(b + 1) * t],
+                     iou_thresh)
+        for b in range(n)], np.float64)
+
+
+def segmentation_iou_batched(out, ref_out):
+    """Per-lane segmentation IoU for (N, T, hs, ws, C) trees -> (N,)."""
+    a = np.asarray(jnp.argmax(out["seg"], -1))      # (N, T, hs, ws)
+    b = np.asarray(jnp.argmax(ref_out["seg"], -1))
+    axes = tuple(range(1, a.ndim))
+    lanes = []
+    for cls in (0, 1):
+        inter = np.logical_and(a == cls, b == cls).sum(axis=axes)
+        union = np.logical_or(a == cls, b == cls).sum(axis=axes)
+        lanes.append((inter, union))
+    out_acc = np.empty(a.shape[0], np.float64)
+    for i in range(a.shape[0]):
+        # same short list + np.mean the per-lane path builds, so the
+        # (at most 2-term) summation order is identical
+        ious = [inter[i] / union[i] for inter, union in lanes
+                if union[i] > 0]
+        out_acc[i] = float(np.mean(ious)) if ious else 1.0
+    return out_acc
+
+
+def keypoint_accuracy_batched(out, ref_out, radius=2.0):
+    """Per-lane keypoint accuracy for (N, T, hs, ws, K) trees -> (N,)."""
+    def peaks(o):
+        h = np.asarray(jax.nn.sigmoid(o["kp"]))
+        n, t, hs, ws, k = h.shape
+        flat = h.reshape(n, t, hs * ws, k).argmax(axis=2)
+        return np.stack([flat // ws, flat % ws], axis=-1)  # (N, T, K, 2)
+
+    pa, pb = peaks(out), peaks(ref_out)
+    d = np.sqrt(((pa - pb) ** 2).sum(-1))
+    return (d <= radius).mean(axis=(1, 2)).astype(np.float64)
+
+
+def device_lane_accuracy(task, out, ref_out):
+    """Pure-jnp per-lane accuracy (N,) for (N, T, ...) lane trees —
+    jit/shard_map-safe, so the fleet step can reduce accuracy on device
+    and ship O(N) scalars to host instead of full output trees.
+
+    Only segmentation and keypoint reduce on device; detection's greedy
+    F1 matching is data-dependent and stays on the (batched numpy) host
+    path. Device math is float32, so results track the float64 host path
+    to ~1e-6 rather than bit-exactly — the windowed bench keeps a
+    host-scored parity stage for the bit-equal rows.
+    """
+    if task == "segmentation":
+        a = jnp.argmax(out["seg"], -1)
+        b = jnp.argmax(ref_out["seg"], -1)
+        axes = tuple(range(1, a.ndim))
+        iou_sum = jnp.zeros(a.shape[0], jnp.float32)
+        n_valid = jnp.zeros(a.shape[0], jnp.float32)
+        for cls in (0, 1):
+            inter = ((a == cls) & (b == cls)).sum(axis=axes)
+            union = ((a == cls) | (b == cls)).sum(axis=axes)
+            valid = union > 0
+            iou = jnp.where(valid, inter / jnp.maximum(union, 1), 0.0)
+            iou_sum += iou.astype(jnp.float32)
+            n_valid += valid.astype(jnp.float32)
+        return jnp.where(n_valid > 0, iou_sum / jnp.maximum(n_valid, 1.0),
+                         1.0)
+    if task == "keypoint":
+        def peaks(o):
+            h = jax.nn.sigmoid(o["kp"])
+            n, t, hs, ws, k = h.shape
+            flat = h.reshape(n, t, hs * ws, k).argmax(axis=2)
+            return jnp.stack([flat // ws, flat % ws], axis=-1)
+
+        pa, pb = peaks(out), peaks(ref_out)
+        d = jnp.sqrt(((pa - pb) ** 2).sum(-1).astype(jnp.float32))
+        return (d <= 2.0).mean(axis=(1, 2))
+    raise ValueError(f"no device accuracy reduction for task {task!r} "
+                     f"(detection decodes on host)")
+
+
+# ---------------------------------------------------------------------------
 # the black-box wrapper used by AccMPEG
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -328,3 +472,20 @@ class FinalDNN:
         if self.task == "segmentation":
             return segmentation_iou(out, ref_out)
         return keypoint_accuracy(out, ref_out)
+
+    def accuracy_batched(self, out, ref_out) -> np.ndarray:
+        """Score every lane of a (N, T, ...) output tree in one numpy
+        pass -> (N,) float64, lane i bit-equal to ``accuracy`` on lane
+        i's slice."""
+        if self.task == "detection":
+            return detection_f1_batched(out, ref_out)
+        if self.task == "segmentation":
+            return segmentation_iou_batched(out, ref_out)
+        return keypoint_accuracy_batched(out, ref_out)
+
+    @property
+    def supports_device_accuracy(self) -> bool:
+        """Whether :func:`device_lane_accuracy` can reduce this task's
+        accuracy inside the jitted fleet step (detection cannot: greedy
+        box matching stays on host)."""
+        return self.task in ("segmentation", "keypoint")

@@ -1,0 +1,300 @@
+"""Streaming fleet aggregation (repro.core.aggregate): the windowed
+summaries must be *exact* where they claim exactness.
+
+Property families (real hypothesis when installed, the deterministic
+``_hypothesis_compat`` grid otherwise):
+
+1. Bit-parity — on randomized churn-shaped schedules (random active-lane
+   batches per chunk interval) the aggregator's running sums equal the
+   exact per-chunk path *bit for bit* when reconstructed in the
+   documented accumulation order (np.sum per lane batch, += across
+   chunks), and the reservoir p90 equals ``np.percentile`` of the full
+   delay list while the reservoir holds every sample.
+2. Sketches — the reservoir is exact until overflow and a seeded uniform
+   subsample after; P-squared tracks the quantile within a loose
+   tolerance at large n (it is the O(1) cross-check, not the headline).
+3. Wire + merge — JSON round-trips preserve every counter; the
+   cross-host merge is exact for counters/windows/attainment and for the
+   pooled-reservoir percentile while no part overflowed; overlapping
+   stream ids and mismatched ladders raise.
+"""
+import json
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dev-only dep; fall back to a fixed sample grid
+    from _hypothesis_compat import given, settings, st
+
+from repro.core.aggregate import (AggregateConfig, AggregateResult,
+                                  DEFAULT_TIERS, FleetAggregator,
+                                  P2Quantile, ReservoirSample, SLOTier)
+
+
+def _random_schedule(seed, n_cis, n_streams, window):
+    """A churn-shaped batch schedule: per chunk interval a random active
+    subset of the stream ids with random per-lane scalars; some
+    intervals are all-quiet (skipped, like the engine's)."""
+    rng = np.random.RandomState(seed)
+    tier_names = [t.name for t in DEFAULT_TIERS]
+    tier_of = {sid: tier_names[rng.randint(len(tier_names))]
+               for sid in range(n_streams)}
+    batches = []
+    for ci in range(n_cis):
+        a = rng.randint(0, n_streams + 1)
+        if a == 0:
+            continue  # all-quiet interval: the engine never observes it
+        sids = rng.choice(n_streams, size=a, replace=False)
+        batches.append((ci, sids,
+                        rng.rand(a),                 # accs
+                        rng.rand(a) * 1e4,           # bytes
+                        rng.rand(a) * 2.0))          # delays: straddle SLOs
+    return tier_of, batches
+
+
+def _exact_path(tier_of, batches):
+    """The per-chunk list path, reduced in the documented accumulation
+    order: np.sum over each lane batch, += across chunks."""
+    slo = {t.name: t.slo_s for t in DEFAULT_TIERS}
+    n = 0
+    s_acc = s_bytes = s_delay = 0.0
+    max_d = 0.0
+    att = {t.name: 0 for t in DEFAULT_TIERS}
+    tot = {t.name: 0 for t in DEFAULT_TIERS}
+    all_delays = []
+    for ci, sids, accs, bytes_, delays in batches:
+        n += len(sids)
+        s_acc += float(np.sum(accs))
+        s_bytes += float(np.sum(bytes_))
+        s_delay += float(np.sum(delays))
+        max_d = max(max_d, float(delays.max()))
+        for sid, d in zip(sids, delays):
+            name = tier_of[sid]
+            tot[name] += 1
+            att[name] += bool(d <= slo[name])
+        all_delays.extend(float(d) for d in delays)
+    return dict(n=n, sum_acc=s_acc, sum_bytes=s_bytes, sum_delay=s_delay,
+                max_delay=max_d, attained=att, total=tot,
+                delays=sorted(all_delays))
+
+
+def _aggregate(tier_of, batches, window=4, **kw):
+    agg = AggregateConfig(window=window, tier_of=tier_of, **kw).build()
+    for ci, sids, accs, bytes_, delays in batches:
+        agg.observe(ci, sids, accs, bytes_, delays)
+    return agg.result()
+
+
+# ---------------------------------------------------------------------------
+# 1. bit-parity against the exact per-chunk path
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=1, max_value=40),
+       st.integers(min_value=1, max_value=32),
+       st.sampled_from([1, 3, 4, 8]))
+def test_windowed_sums_bit_equal_exact_path(seed, n_cis, n_streams,
+                                            window):
+    tier_of, batches = _random_schedule(seed, n_cis, n_streams, window)
+    res = _aggregate(tier_of, batches, window=window)
+    exact = _exact_path(tier_of, batches)
+    assert res.n == exact["n"]
+    # bit equality, not isclose: same op order, same dtype
+    assert res.sum_acc == exact["sum_acc"]
+    assert res.sum_bytes == exact["sum_bytes"]
+    assert res.sum_delay == exact["sum_delay"]
+    assert res.max_delay == exact["max_delay"]
+    for i, t in enumerate(DEFAULT_TIERS):
+        assert int(res.total[i]) == exact["total"][t.name]
+        assert int(res.attained[i]) == exact["attained"][t.name]
+    # windows partition the global counters exactly
+    assert sum(w.n for w in res.windows) == exact["n"]
+    assert float(np.sum([w.sum_bytes for w in res.windows])) == \
+        pytest.approx(exact["sum_bytes"], rel=1e-12)
+    for w in res.windows:
+        assert {ci // res.window for ci in res.cis} >= {w.wi}
+    # reservoir never overflowed at these sizes: p90 is *exact*
+    if exact["delays"]:
+        assert res.n <= 2048
+        assert res.p90_delay == float(np.percentile(exact["delays"], 90.0))
+        assert res.delay_percentile(50.0) == \
+            float(np.percentile(exact["delays"], 50.0))
+    # served ids are exactly the union of the schedule's lanes
+    assert res.stream_ids == tuple(sorted(
+        {int(s) for _, sids, *_ in batches for s in sids}))
+
+
+def test_all_quiet_schedule_yields_empty_result():
+    res = AggregateConfig().build().result()
+    assert res.n == 0 and res.stream_ids == ()
+    assert np.isnan(res.accuracy) and np.isnan(res.p90_delay)
+    assert all(np.isnan(v) for v in res.attainment().values())
+
+
+def test_window_ring_ages_out_but_global_counters_keep_everything():
+    agg = AggregateConfig(window=2, n_windows=3).build()
+    for ci in range(20):
+        agg.observe(ci, [0], np.ones(1), np.full(1, 10.0), np.ones(1))
+    res = agg.result()
+    assert len(res.windows) == 3
+    assert [w.wi for w in res.windows] == [7, 8, 9]  # newest 3 of 10
+    assert res.n == 20 and res.sum_bytes == 200.0  # nothing lost globally
+
+
+# ---------------------------------------------------------------------------
+# 2. the sketches
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=1000),
+       st.integers(min_value=1, max_value=64))
+def test_reservoir_exact_until_overflow(seed, capacity):
+    rng = np.random.RandomState(seed)
+    rs = ReservoirSample(capacity, seed=seed)
+    xs = rng.rand(capacity)
+    rs.extend(xs)
+    assert rs.exact
+    for p in (10.0, 50.0, 90.0):
+        assert rs.percentile(p) == float(np.percentile(xs, p))
+    rs.extend(rng.rand(3 * capacity))  # overflow: uniform subsample
+    assert not rs.exact
+    assert rs.n == 4 * capacity
+    assert 0.0 <= rs.percentile(90.0) <= 1.0
+    # deterministic in the seed
+    rs2 = ReservoirSample(capacity, seed=seed)
+    rng2 = np.random.RandomState(seed)
+    rs2.extend(rng2.rand(capacity))
+    rs2.extend(rng2.rand(3 * capacity))
+    assert rs2.percentile(90.0) == rs.percentile(90.0)
+
+
+def test_reservoir_overflow_percentile_is_statistically_sane():
+    """A 512-slot reservoir over 50k uniform samples lands near the true
+    p90 — the graceful-degradation half of the contract."""
+    rng = np.random.RandomState(7)
+    rs = ReservoirSample(512, seed=7)
+    rs.extend(rng.rand(50_000))
+    assert abs(rs.percentile(90.0) - 0.9) < 0.06
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=1000),
+       st.sampled_from([0.5, 0.9, 0.95]))
+def test_p2_tracks_quantile(seed, q):
+    rng = np.random.RandomState(seed)
+    xs = rng.rand(5000)
+    sk = P2Quantile(q)
+    sk.extend(xs)
+    assert sk.n == xs.size
+    # O(1)-state estimator: loose tolerance, it is the cross-check
+    assert abs(sk.value - float(np.percentile(xs, q * 100.0))) < 0.05
+
+
+def test_p2_exact_small_n_and_validation():
+    sk = P2Quantile(0.9)
+    sk.extend([3.0, 1.0, 2.0])
+    assert sk.value == float(np.percentile([1.0, 2.0, 3.0], 90.0))
+    with pytest.raises(ValueError):
+        P2Quantile(0.0)
+    with pytest.raises(ValueError):
+        ReservoirSample(0)
+
+
+# ---------------------------------------------------------------------------
+# 3. wire + cross-host merge
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.sampled_from([2, 3]))
+def test_merge_matches_global_aggregation(seed, n_hosts):
+    """Split a schedule's streams across hosts; the merged per-host
+    aggregates must equal one global aggregator on every exact field,
+    and the pooled-reservoir percentile must equal the full-list
+    percentile while no part overflowed."""
+    tier_of, batches = _random_schedule(seed, 24, 12, 4)
+    global_res = _aggregate(tier_of, batches)
+    owner = {sid: sid % n_hosts for sid in range(12)}
+    parts = []
+    for h in range(n_hosts):
+        mine = []
+        for ci, sids, accs, bytes_, delays in batches:
+            m = np.asarray([owner[int(s)] == h for s in sids])
+            if m.any():
+                mine.append((ci, sids[m], accs[m], bytes_[m], delays[m]))
+        parts.append(_aggregate(tier_of, mine))
+    # JSON round-trip each part (what the allgather actually ships)
+    parts = [AggregateResult.from_wire(json.loads(json.dumps(p.to_wire())))
+             for p in parts]
+    merged = AggregateResult.merge(parts)
+    assert merged.n == global_res.n
+    assert merged.sum_acc == pytest.approx(global_res.sum_acc, rel=1e-12)
+    assert merged.sum_bytes == pytest.approx(global_res.sum_bytes,
+                                             rel=1e-12)
+    assert merged.max_delay == global_res.max_delay
+    assert np.array_equal(merged.attained, global_res.attained)
+    assert np.array_equal(merged.total, global_res.total)
+    assert merged.stream_ids == global_res.stream_ids
+    assert merged.cis == global_res.cis
+    # window ring merges exactly (disjoint lanes, same intervals)
+    assert [w.wi for w in merged.windows] == \
+        [w.wi for w in global_res.windows]
+    for mw, gw in zip(merged.windows, global_res.windows):
+        assert mw.n == gw.n
+        assert np.array_equal(mw.total, gw.total)
+    # pooled reservoirs were all exact: merged p90 == full-list p90
+    exact = _exact_path(tier_of, batches)
+    if exact["delays"]:
+        assert merged.p90_delay == \
+            float(np.percentile(exact["delays"], 90.0))
+
+
+def test_wire_roundtrip_is_lossless():
+    tier_of, batches = _random_schedule(3, 16, 6, 4)
+    res = _aggregate(tier_of, batches)
+    rt = AggregateResult.from_wire(json.loads(json.dumps(res.to_wire())))
+    assert rt.n == res.n and rt.sum_acc == res.sum_acc
+    assert rt.sum_bytes == res.sum_bytes
+    assert rt.tiers == res.tiers
+    assert rt.stream_ids == res.stream_ids and rt.cis == res.cis
+    assert rt.p90_delay == res.p90_delay
+    assert rt.p90_delay_p2 == res.p90_delay_p2
+    assert rt.attainment() == res.attainment()
+    assert rt.summary() == res.summary()
+
+
+def test_relabel_translates_ids_only():
+    tier_of, batches = _random_schedule(5, 8, 4, 4)
+    res = _aggregate(tier_of, batches)
+    mapping = {sid: sid + 100 for sid in res.stream_ids}
+    rel = res.relabel(mapping)
+    assert rel.stream_ids == tuple(sid + 100 for sid in res.stream_ids)
+    assert rel.sum_acc == res.sum_acc and rel.n == res.n
+
+
+def test_merge_validation_is_loud():
+    tier_of, batches = _random_schedule(1, 8, 4, 4)
+    res = _aggregate(tier_of, batches)
+    with pytest.raises(ValueError, match="two merged aggregates"):
+        AggregateResult.merge([res, res])
+    other_tiers = (SLOTier("only", 1.0),)
+    other = AggregateConfig(tiers=other_tiers,
+                            tier_of={0: "only"}).build().result()
+    with pytest.raises(ValueError, match="tier ladders"):
+        AggregateResult.merge([res, other])
+    with pytest.raises(ValueError, match="nothing to merge"):
+        AggregateResult.merge([])
+
+
+def test_config_validation_is_loud():
+    with pytest.raises(ValueError, match="unknown tier"):
+        AggregateConfig(tier_of={0: "platinum"}).build()
+    with pytest.raises(ValueError, match="window"):
+        AggregateConfig(window=0).build()
+    with pytest.raises(ValueError, match="positive SLO"):
+        SLOTier("bad", slo_s=0.0)
+    with pytest.raises(ValueError, match="duplicate"):
+        FleetAggregator(tiers=(SLOTier("a", 1.0), SLOTier("a", 2.0)))
+    with pytest.raises(ValueError, match="equally sized"):
+        AggregateConfig().build().observe(0, [0, 1], np.ones(1),
+                                          np.ones(2), np.ones(2))

@@ -1,0 +1,154 @@
+"""Open-loop workload generation (repro.control.workload): the schedule
+contracts the load harness leans on.
+
+- Determinism: a (seed, rate, tiers) triple names one exact schedule.
+- Legality: every event replays cleanly through the same ``apply_churn``
+  the serving loop uses — no double-joins, no leaves of absent streams —
+  and concurrency/identity caps hold at every interval.
+- Accounting: blocked arrivals are counted, never silently dropped;
+  recycled ids keep their original SLO tier; tier fractions track the
+  ladder weights.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dev-only dep; fall back to a fixed sample grid
+    from _hypothesis_compat import given, settings, st
+
+from repro.control import apply_churn, make_workload
+from repro.core.aggregate import DEFAULT_TIERS, SLOTier
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.floats(min_value=0.5, max_value=8.0),
+       st.sampled_from([None, 8, 16]))
+def test_schedule_is_legal_and_capped(seed, rate, max_concurrent):
+    wl = make_workload(n_chunks=24, rate_per_chunk=rate, seed=seed,
+                       max_concurrent=max_concurrent,
+                       max_streams=32)
+    active = list(wl.initial)
+    assert len(set(active)) == len(active)
+    seen_cis = set()
+    for ev in wl.events:
+        assert 0 < ev.chunk < wl.n_chunks
+        assert ev.chunk not in seen_cis, "one event per interval"
+        seen_cis.add(ev.chunk)
+    for ci in range(wl.n_chunks):
+        before = set(active)
+        for ev in wl.events:
+            if ev.chunk == ci:
+                assert not (set(ev.join) & before), "double-join"
+                assert set(ev.leave) <= before, "leave of absent stream"
+        active = apply_churn(active, wl.events, ci)
+        assert len(set(active)) == len(active)
+        if max_concurrent is not None:
+            assert len(active) <= max_concurrent
+        assert all(0 <= sid < wl.n_streams for sid in active)
+    assert wl.n_streams <= 32
+    assert wl.concurrency() == [len(apply_churn(
+        list(wl.initial), wl.events, ci)) if ci == 0 else
+        wl.concurrency()[ci] for ci in range(wl.n_chunks)]
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_same_seed_same_schedule(seed):
+    a = make_workload(n_chunks=16, rate_per_chunk=2.0, seed=seed)
+    b = make_workload(n_chunks=16, rate_per_chunk=2.0, seed=seed)
+    assert a.initial == b.initial and a.events == b.events
+    assert dict(a.tier_of) == dict(b.tier_of)
+    assert a.n_blocked == b.n_blocked
+    c = make_workload(n_chunks=16, rate_per_chunk=2.0, seed=seed + 1)
+    assert (a.initial, a.events) != (c.initial, c.events) or \
+        dict(a.tier_of) != dict(c.tier_of)
+
+
+def test_every_stream_has_a_tier_and_fractions_track_weights():
+    wl = make_workload(n_chunks=64, rate_per_chunk=16.0, seed=3,
+                       mean_session_chunks=2.0)
+    names = {t.name for t in DEFAULT_TIERS}
+    assert set(wl.tier_of) == set(range(wl.n_streams))
+    assert set(wl.tier_of.values()) <= names
+    fracs = wl.tier_fractions()
+    assert abs(sum(fracs.values()) - 1.0) < 1e-9
+    # bronze carries half the weight: it must dominate at this n
+    assert fracs["bronze"] == max(fracs.values())
+
+
+def test_id_recycling_is_capped_and_tier_sticky():
+    wl = make_workload(n_chunks=64, rate_per_chunk=8.0, seed=5,
+                       mean_session_chunks=1.2, pareto_alpha=3.0,
+                       max_streams=8)
+    assert wl.n_streams <= 8
+    joined = [sid for ev in wl.events for sid in ev.join]
+    assert len(joined) > len(set(joined)), "ids were recycled"
+    # a recycled id's tier never changes: tier_of is a function
+    assert set(wl.tier_of) == set(range(wl.n_streams))
+
+
+def test_blocked_arrivals_are_counted():
+    wl = make_workload(n_chunks=16, rate_per_chunk=8.0, seed=1,
+                       mean_session_chunks=64.0, initial_streams=4,
+                       max_concurrent=4, max_streams=4)
+    assert wl.peak_concurrency == 4
+    assert wl.n_blocked > 0
+    assert wl.events == ()  # nobody leaves, nobody else gets in
+
+
+def test_diurnal_modulation_shifts_arrival_mass():
+    flat = make_workload(n_chunks=200, rate_per_chunk=4.0, seed=9)
+    tide = make_workload(n_chunks=200, rate_per_chunk=4.0, seed=9,
+                         diurnal_amplitude=0.9)
+    def joins_in(wl, lo, hi):
+        return sum(len(ev.join) for ev in wl.events if lo <= ev.chunk < hi)
+    # the sinusoid peaks in the first half-period and troughs in the
+    # second: the modulated schedule must tilt mass toward the peak
+    # relative to the flat one
+    peak, trough = joins_in(tide, 1, 100), joins_in(tide, 100, 200)
+    assert peak > trough
+    assert abs(joins_in(flat, 1, 100) - joins_in(flat, 100, 200)) < \
+        (peak - trough)
+
+
+def test_aggregate_config_matches_workload():
+    tiers = (SLOTier("fast", 0.2, 0.5), SLOTier("slow", 2.0, 0.5))
+    wl = make_workload(n_chunks=8, rate_per_chunk=2.0, seed=0,
+                       tiers=tiers)
+    cfg = wl.aggregate_config(window=4)
+    assert cfg.tiers == tiers and cfg.window == 4
+    agg = cfg.build()  # tier_of validates against the ladder
+    assert agg.tiers == tiers
+
+
+def test_validation_is_loud():
+    with pytest.raises(ValueError, match="at least one chunk"):
+        make_workload(n_chunks=0)
+    with pytest.raises(ValueError, match="pareto_alpha"):
+        make_workload(n_chunks=4, pareto_alpha=1.0)
+    with pytest.raises(ValueError, match="diurnal_amplitude"):
+        make_workload(n_chunks=4, diurnal_amplitude=1.5)
+    with pytest.raises(ValueError, match="weights"):
+        make_workload(n_chunks=4, tiers=(SLOTier("a", 1.0, 0.0),))
+
+
+def test_mean_session_length_calibrated():
+    """The Pareto scale normalization: empirical mean session length
+    lands near ``mean_session_chunks`` (ceil + floor bias it up a bit)."""
+    rng_free = make_workload(n_chunks=400, rate_per_chunk=8.0, seed=11,
+                             mean_session_chunks=4.0)
+    # reconstruct session lengths: join at ci, leave at cj -> cj - ci
+    joins, lens = {}, []
+    for sid in rng_free.initial:
+        joins[sid] = 0
+    for ev in rng_free.events:
+        for sid in ev.leave:
+            if sid in joins:
+                lens.append(ev.chunk - joins.pop(sid))
+        for sid in ev.join:
+            joins[sid] = ev.chunk
+    assert len(lens) > 100
+    m = float(np.mean(lens))
+    assert 3.0 < m < 7.0  # mean 4 target, ceil-biased, heavy tail
