@@ -23,7 +23,27 @@ import sys
 from pathlib import Path
 
 from benchmarks.common import (HEADLINE_KEYS, REPO_ROOT,
-                               check_bench_regressions)
+                               check_bench_regressions, headline_metrics)
+
+
+def print_deltas(bench: str, fresh: dict, baseline: dict) -> None:
+    """Per-key baseline-vs-current readout, printed whether or not the
+    gate trips — so a bench leg's log always answers "how far did each
+    headline move", not only "did it regress past the threshold"."""
+    fresh_m, base_m = headline_metrics(fresh), headline_metrics(baseline)
+    for name in sorted(set(base_m) | set(fresh_m)):
+        base_v, fresh_v = base_m.get(name), fresh_m.get(name)
+        if base_v is None or fresh_v is None:
+            print(f"[check]   {name}: baseline={base_v} "
+                  f"current={fresh_v} (one side missing)")
+        elif isinstance(base_v, str) or isinstance(fresh_v, str):
+            mark = "" if base_v == fresh_v else "  <-- CHANGED"
+            print(f"[check]   {name}: baseline={base_v} "
+                  f"current={fresh_v}{mark}")
+        else:
+            rel = (fresh_v - base_v) / base_v if base_v else float("nan")
+            print(f"[check]   {name}: baseline={base_v:.4g} "
+                  f"current={fresh_v:.4g} ({rel:+.1%})")
 
 
 def main(argv=None) -> int:
@@ -56,6 +76,8 @@ def main(argv=None) -> int:
             continue
         fresh = json.loads(fresh_path.read_text())
         baseline = json.loads(base_path.read_text())
+        print(f"[check] {bench}: baseline vs current")
+        print_deltas(bench, fresh, baseline)
         bench_failures = check_bench_regressions(fresh, baseline,
                                                  threshold=args.threshold)
         if bench_failures:

@@ -82,6 +82,10 @@ HEADLINE_KEYS = {
         "loadtest/agg_speedup": ("speedup",),
         "loadtest/wire_compression": ("ratio",),
     },
+    # telemetry overhead is lower-is-better so the ratio rule does not
+    # apply; its gate is the met=yes verdict flags (collected for every
+    # row regardless of headline keys)
+    "obs": {},
 }
 
 #: derived keys that are pass/fail verdict flags: a yes in the baseline

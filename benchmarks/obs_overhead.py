@@ -1,0 +1,170 @@
+"""Telemetry-plane overhead budget: ~0 disabled, <2% enabled.
+
+The tentpole claim of ``repro.obs`` is that observability is free when
+off and near-free when on, because every span and metric records values
+the serving loop already computed — no extra device syncs, no RNG, no
+work inside measured stage windows. Two rows pin it:
+
+- **disabled hooks** (microbench): the per-interval cost the plane adds
+  when *off* is a handful of ``get_tracer()/get_metrics() is None``
+  branch checks. Measured in nanoseconds per interval; the budget is
+  "under a microsecond", i.e. unmeasurable against a multi-millisecond
+  serving interval.
+- **enabled overhead** (end to end): the same fleet schedule served
+  with the plane off and on (min-of-k serving walls, warm compiles
+  cached across reps so only the steady loop is compared). Budget:
+  <2% relative. The data-path digest (accuracy / bytes / delays under
+  ``sim_encode_s``) must additionally be bit-identical — telemetry that
+  perturbs results is wrong no matter how cheap.
+
+Verdict flags (``met=yes``) gate CI via ``benchmarks.check``; the raw
+ratios are hardware-dependent, so only the flags are headline (see
+``HEADLINE_KEYS["obs"]``).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+CHUNK = 5
+H, W = 48, 64
+N_STREAMS = 4
+N_CHUNKS = 8
+SIM_ENCODE_S = 0.05
+REPS = 5
+DISABLED_BUDGET_NS = 1000.0   # per interval, vs ~10ms intervals
+ENABLED_BUDGET = 0.02         # 2% of serving wall
+
+
+def _models():
+    import jax
+
+    from repro.core.accmodel import AccModel, accmodel_init
+    from repro.vision.dnn import FinalDNN, init_net
+
+    dnn = FinalDNN("detection",
+                   init_net("detection", jax.random.PRNGKey(0), width=8))
+    am = AccModel(accmodel_init(jax.random.PRNGKey(1), 8))
+    return dnn, am
+
+
+def _frames():
+    from repro.data.video import make_scene
+
+    return np.stack([
+        make_scene("dashcam", seed=300 + i, T=N_CHUNKS * CHUNK, H=H,
+                   W=W).frames
+        for i in range(N_STREAMS)])
+
+
+def _engine():
+    from repro.core.pipeline import NetworkConfig
+    from repro.engine import MultiStreamEngine
+
+    dnn, am = _models()
+    return MultiStreamEngine(
+        dnn, am, impl="fast", chunk_size=CHUNK,
+        net=NetworkConfig.shared(2.5e6, N_STREAMS),
+        sim_encode_s=SIM_ENCODE_S)
+
+
+def _digest(res) -> list:
+    return [[c.ci, c.accuracy, c.bytes, c.encode_s, c.stream_s,
+             c.queue_s]
+            for run in res.streams for c in run.chunks]
+
+
+def _min_wall(engine, frames, reps: int = REPS):
+    """Min-of-k steady serving wall (+ the last run, for digests). The
+    first call warms every compile cache; ``timing.wall_s`` measures
+    the loop only, and min-of-k rejects scheduler noise."""
+    walls, res = [], None
+    for _ in range(reps):
+        res = engine.run(frames)
+        walls.append(res.timing.wall_s)
+    return min(walls), res
+
+
+def disabled_hooks():
+    """ns/interval the instrumented loop pays with the plane off."""
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
+
+    assert obs_trace.get_tracer() is None
+    assert obs_metrics.get_metrics() is None
+    n = 200_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        # the per-interval disabled path: resolve both ambient handles
+        # and branch (the engine hoists these once per run; per-interval
+        # it is one `self._obs is not None` — this is the upper bound)
+        if obs_trace.get_tracer() is not None \
+                or obs_metrics.get_metrics() is not None:
+            raise AssertionError
+    ns = (time.perf_counter() - t0) / n * 1e9
+    met = ns < DISABLED_BUDGET_NS
+    emit("obs/disabled_hooks", ns / 1000.0,
+         f"ns_per_interval={ns:.0f};budget_ns={DISABLED_BUDGET_NS:.0f};"
+         f"met={'yes' if met else 'no'}")
+    return met
+
+
+def enabled_overhead():
+    """Same schedule, plane off vs on: wall overhead + digest identity."""
+    from repro import obs
+
+    frames = _frames()
+    engine = _engine()
+    engine.run(frames)  # warm every compile cache once, untimed
+    wall_off, res_off = _min_wall(engine, frames)
+    obs.enable(host=0)
+    try:
+        wall_on, res_on = _min_wall(engine, frames)
+        tracer = obs.get_tracer()
+        spans = len(tracer.stage_events("camera"))
+        reg = obs.get_metrics()
+        assert reg.get("stage_seconds_total", stage="camera") is not None
+    finally:
+        obs.disable()
+    overhead = (wall_on - wall_off) / wall_off
+    identical = _digest(res_on) == _digest(res_off)
+    met = overhead < ENABLED_BUDGET and identical
+    emit("obs/enabled_overhead", (wall_on - wall_off) * 1e6,
+         f"overhead={overhead * 100:+.2f}%;budget={ENABLED_BUDGET:.0%};"
+         f"wall_off_s={wall_off:.4f};wall_on_s={wall_on:.4f};"
+         f"camera_spans={spans};"
+         f"identical={'yes' if identical else 'no'};"
+         f"met={'yes' if met else 'no'}")
+    return met
+
+
+def smoke():
+    """CI smoke: the plane turns on, records, exports, and leaves the
+    data path bit-identical — one tiny end-to-end pass."""
+    from repro import obs
+
+    frames = _frames()[:, : 2 * CHUNK]
+    engine = _engine()
+    res_off = engine.run(frames)
+    obs.enable(host=0)
+    try:
+        res_on = engine.run(frames)
+        tracer, reg = obs.get_tracer(), obs.get_metrics()
+        n_cam = len(tracer.stage_events("camera"))
+        assert n_cam == len(res_on.timing.camera_s) > 0
+        assert "traceEvents" in tracer.chrome_trace()
+        assert reg.to_prometheus() and reg.to_jsonl()
+        cam = reg.get("stage_seconds_total", stage="camera")
+        assert np.isclose(cam.value, np.sum(res_on.timing.camera_s))
+    finally:
+        obs.disable()
+    assert _digest(res_on) == _digest(res_off)
+    emit("obs/smoke", 0.0, f"camera_spans={n_cam};identical=yes;ok=yes")
+
+
+def run():
+    disabled_hooks()
+    enabled_overhead()

@@ -14,17 +14,20 @@ import traceback
 
 #: benches whose rows are also persisted as BENCH_<name>.json at the repo
 #: root (machine-readable perf trajectory across PRs)
-JSON_BENCHES = ("control", "multistream", "churn", "kernels", "loadtest")
+JSON_BENCHES = ("control", "multistream", "churn", "kernels", "loadtest",
+                "obs")
 
 
 def main() -> None:
     from benchmarks import (churn, control, kernel_bench, loadtest,
-                            multistream, multitask, paper_figs, roofline)
+                            multistream, multitask, obs_overhead,
+                            paper_figs, roofline)
 
     benches = {
         "control": control.run,
         "churn": churn.run,
         "loadtest": loadtest.run,
+        "obs": obs_overhead.run,
         "multistream": multistream.run,
         "fig6": paper_figs.fig6_stability,
         "fig7": paper_figs.fig7_tradeoff,

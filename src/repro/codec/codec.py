@@ -237,7 +237,18 @@ class ChunkEncoderRegistry:
 
     def resolve(self, name: str):
         try:
-            return self._backends[name]["fn"]
+            entry = self._backends[name]
+            from repro.obs import metrics as obs_metrics
+
+            reg = obs_metrics.get_metrics()
+            if reg is not None:  # which backend the impl= knob actually
+                # chose, and whether its preferred lowering is live here
+                pref = entry["preferred_backend"]
+                reg.counter(
+                    "chunk_encoder_resolve_total", backend=name,
+                    native=str(pref is None
+                               or jax.default_backend() == pref)).inc()
+            return entry["fn"]
         except KeyError:
             # ValueError, not KeyError: every engine/fleet-step impl= knob
             # funnels through here, and a typo'd backend name should read

@@ -34,6 +34,8 @@ from typing import Dict, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from repro.core.pipeline import FleetTiming
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -161,7 +163,29 @@ class FleetAutoscaler:
     def decide(self, timing: FleetTiming, n_streams: int,
                mesh_width: int = 1, batch_depth: int = 2,
                n_devices: Optional[int] = None) -> ScaleDecision:
-        """Pick the next (mesh_width, batch_depth) from measured timing."""
+        """Pick the next (mesh_width, batch_depth) from measured timing.
+        One record point for the telemetry plane: every decision — from
+        any of the policy's exit paths, and from the cross-host subclass
+        via ``super().decide`` — lands here exactly once."""
+        d = self._decide(timing, n_streams, mesh_width=mesh_width,
+                         batch_depth=batch_depth, n_devices=n_devices)
+        changed = (d.mesh_width, d.batch_depth) != (mesh_width, batch_depth)
+        reg = obs_metrics.get_metrics()
+        if reg is not None:
+            reg.counter("scale_decisions_total",
+                        action="rescale" if changed else "hold").inc()
+        tracer = obs_trace.get_tracer()
+        if tracer is not None and changed:
+            tracer.instant("scale", stage="autoscaler",
+                           mesh_width=d.mesh_width,
+                           batch_depth=d.batch_depth,
+                           prev_width=mesh_width, prev_depth=batch_depth,
+                           n_streams=n_streams, reason=d.reason)
+        return d
+
+    def _decide(self, timing: FleetTiming, n_streams: int,
+                mesh_width: int = 1, batch_depth: int = 2,
+                n_devices: Optional[int] = None) -> ScaleDecision:
         if n_devices is None:
             # the devices a scale-out can actually claim: this host's.
             # Single-process that is every device; under jax.distributed
@@ -256,6 +280,18 @@ class FleetAutoscaler:
         else:
             n_padded, reused = tight, False
             self._compiled_shapes.add(tight)
+        reg = obs_metrics.get_metrics()
+        if reg is not None:
+            reg.counter("admissions_total").inc()
+            reg.counter("admission_shape_reuse_total" if reused
+                        else "admission_compiles_total").inc()
+        if not reused:  # a fresh padded shape means a compile is coming:
+            # worth a timeline mark even before the warm-up span lands
+            tracer = obs_trace.get_tracer()
+            if tracer is not None:
+                tracer.instant("admit_new_shape", stage="admission",
+                               n_active=n_active, n_padded=n_padded,
+                               mesh_width=mesh_width)
         active = np.zeros(n_padded, bool)
         active[:n_active] = True
         return AdmissionPlan(n_active=n_active, n_padded=n_padded,

@@ -35,7 +35,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.engine.engine import jit_encode
-from repro.engine.policies import QPPolicy, soft_drop_previous
+from repro.engine.policies import QPPolicy, soft_drop_previous, warm_ready
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,10 +157,28 @@ class RateController:
         budget = self.delay_budget_s
         congested = (obs.total_delay_s > budget
                      or obs.queue_s > self.backlog_tolerance * budget)
+        prev = self.level
         if congested:
             self.level = max(self.level * self.decrease_factor, 0.0)
+            action = "decrease"
         elif obs.total_delay_s < self.headroom * budget:
             self.level = min(self.level + self.increase_step, 1.0)
+            action = "increase"
+        else:
+            action = "hold"
+        reg = obs_metrics.get_metrics()
+        if reg is not None:
+            reg.counter("controller_decisions_total", action=action).inc()
+            reg.gauge("controller_level").set(self.level)
+        tracer = obs_trace.get_tracer()
+        if tracer is not None and action != "hold":
+            # level *transitions* only — holds would drown the lane; the
+            # causing observation rides along so the timeline answers
+            # "why did quality drop here?" without cross-referencing logs
+            tracer.instant(action, stage="controller", level=self.level,
+                           prev_level=prev, delay_s=obs.total_delay_s,
+                           queue_s=obs.queue_s, budget_s=budget,
+                           congested=congested, n_streams=obs.n_streams)
         return self.knobs()
 
 
@@ -198,12 +218,14 @@ class ControlledAccMPEGPolicy(QPPolicy):
 
     def warm(self, engine, chunk):
         knobs = self.controller.knob_array()
-        scores = self.accmodel.scores(chunk[:1])
-        jax.block_until_ready(scores)
-        frames_eff, qmap, _ = _controlled_prep(chunk, scores, knobs,
-                                               gamma=self.gamma)
-        jax.block_until_ready(
-            jit_encode(engine.impl)(frames_eff, qmap)[0])
+
+        def scores_prep_encode():
+            scores = jax.block_until_ready(self.accmodel.scores(chunk[:1]))
+            frames_eff, qmap, _ = _controlled_prep(chunk, scores, knobs,
+                                                   gamma=self.gamma)
+            return jit_encode(engine.impl)(frames_eff, qmap)[0]
+
+        warm_ready(self.name, scores_prep_encode)
 
     def encode_chunk(self, ctx):
         knobs = self.controller.knob_array()

@@ -56,9 +56,112 @@ from repro.core.pipeline import (ChunkResult, FleetTiming, NetworkConfig,
                                  RunResult, UplinkClock,
                                  shared_stream_delays)
 from repro.core.quality import QualityConfig
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve.steps import (make_accuracy_reduce_step,
                                make_camera_fleet_step, make_server_fleet_step,
                                stream_sharding)
+
+
+class _EngineObs:
+    """Per-run telemetry handles, resolved once so the per-interval cost
+    is one attribute load + ``is not None`` branch when the plane is off
+    (the <2%-enabled / ~0-disabled budget ``benchmarks/obs_overhead.py``
+    pins). ``None`` fields mean that half of the plane is disabled.
+
+    All recording uses values the engine already computed for its own
+    accounting — no extra device syncs, no RNG — so telemetry can never
+    perturb the data path (``tests/test_obs.py`` pins bit-identity).
+    Metric recording in the host stage happens *after*
+    ``timing.host_s.append``, so the measured host window stays clean.
+    """
+
+    __slots__ = ("tracer", "reg", "cam_c", "srv_c", "host_c",
+                 "stage_h", "delay_h", "queue_h")
+
+    def __init__(self):
+        self.tracer = obs_trace.get_tracer()
+        self.reg = reg = obs_metrics.get_metrics()
+        if reg is not None:
+            self.cam_c = reg.counter("stage_seconds_total", stage="camera")
+            self.srv_c = reg.counter("stage_seconds_total", stage="server")
+            self.host_c = reg.counter("stage_seconds_total", stage="host")
+            self.stage_h = {
+                s: reg.histogram("stage_seconds", stage=s)
+                for s in ("camera", "server", "host")}
+            self.delay_h = reg.histogram("chunk_delay_s")
+            self.queue_h = reg.histogram("uplink_queue_s")
+
+    def camera(self, ci: int, t0: float, wall: float, acct: float,
+               n_lanes: int, n_active: int) -> None:
+        tr = self.tracer
+        if tr is not None:
+            tr.complete("camera", "camera", t0, wall, ci=ci,
+                        lanes=n_lanes, active=n_active)
+        if self.reg is not None:
+            self.cam_c.inc(acct if acct is not None else wall)
+            self.stage_h["camera"].observe(wall)
+            self.reg.gauge("lanes_active").set(n_active)
+            self.reg.gauge("lanes_padded").set(n_lanes - n_active)
+
+    def server(self, ci: int, t0: float, dur: float,
+               estimated: bool) -> None:
+        tr = self.tracer
+        if tr is not None:
+            args = {"ci": ci}
+            if estimated:  # overlapped: steady-state estimate, the same
+                args["estimated"] = True  # number FleetTiming reports
+            tr.complete("server", "server", t0, dur, **args)
+        if self.reg is not None:
+            self.srv_c.inc(dur)
+            self.stage_h["server"].observe(dur)
+
+    def finish(self, ci: int, t0: float, host_dur: float, n_active: int,
+               lane_bytes, delays, queue_s: float, cam_dt: float) -> None:
+        """Host-scoring + uplink accounting for one finished interval.
+        Called after ``timing.host_s.append`` so none of this work lands
+        inside the measured host window."""
+        tr = self.tracer
+        tail = max(delays[:n_active], default=0.0) if n_active else 0.0
+        if tr is not None:
+            tr.complete("scoring", "scoring", t0, host_dur, ci=ci,
+                        active=n_active)
+            if n_active:
+                # modelled transmit time (the accounting clock, not wall
+                # clock): anchored at the scoring instant, duration =
+                # the batch-tail upload + backlog wait
+                tr.complete("uplink", "uplink", t0, queue_s + tail,
+                            ci=ci, queue_s=queue_s,
+                            bytes=float(sum(lane_bytes[:n_active])),
+                            modelled=True)
+        if self.reg is not None:
+            self.host_c.inc(host_dur)
+            self.stage_h["host"].observe(host_dur)
+            self.reg.counter("chunks_served_total").inc(n_active)
+            if n_active:
+                self.reg.counter("wire_bytes_total").inc(
+                    float(sum(lane_bytes[:n_active])))
+                self.reg.gauge("uplink_backlog_s").set(queue_s)
+                self.queue_h.observe(queue_s)
+                self.delay_h.observe_many(
+                    [d + cam_dt + queue_s for d in delays[:n_active]])
+
+    def churn(self, ci: int, event) -> None:
+        if self.tracer is not None:
+            self.tracer.instant("churn", stage="events", ci=ci,
+                                join=list(event.join),
+                                leave=list(event.leave))
+        if self.reg is not None:
+            self.reg.counter("churn_joins_total").inc(len(event.join))
+            self.reg.counter("churn_leaves_total").inc(len(event.leave))
+
+    def slo_attainment(self, aggregate) -> None:
+        """Windowed runs: export the aggregator's per-tier SLO
+        attainment as gauges at run end."""
+        if self.reg is not None and aggregate is not None:
+            for tier, frac in aggregate.attainment().items():
+                if frac == frac:  # skip empty tiers (NaN)
+                    self.reg.gauge("slo_attainment", tier=tier).set(frac)
 
 
 @functools.lru_cache()
@@ -245,6 +348,7 @@ class MultiStreamEngine:
         self._warm = {}   # (shape, mesh, refs is None) -> steady-state times
         self._refs_prepared = None  # (refs object, prepared copy)
         self._agg = None  # live FleetAggregator during a windowed run
+        self._obs = None  # per-run telemetry handles (None = plane off)
 
     # -- step construction ---------------------------------------------------
     def _resolve_mesh(self, n_streams: int) -> Optional[Mesh]:
@@ -307,12 +411,25 @@ class MultiStreamEngine:
         skip the warm-up device work entirely."""
         if key in self._warm:
             return self._warm[key]
+        t_warm = time.perf_counter()
         d0, _, _ = camera(warm)
         jax.block_until_ready(d0)
         so = server_step(d0)
         jax.block_until_ready(jax.tree_util.tree_leaves(so))
         if acc_step is not None:  # compile the device accuracy reduce too
             jax.block_until_ready(acc_step(so, so))
+        tracer = obs_trace.get_tracer()
+        if tracer is not None:  # compiles stall a host mid-run: make the
+            # warm-up visible on the timeline instead of vanishing into
+            # the gap between intervals
+            tracer.complete("warm_compile", "warmup", t_warm,
+                            time.perf_counter() - t_warm,
+                            shape=list(warm.shape))
+        reg = obs_metrics.get_metrics()
+        if reg is not None:
+            reg.counter("warm_compiles_total").inc()
+            reg.histogram("warmup_seconds").observe(
+                time.perf_counter() - t_warm)
         cam_steady_s = server_steady_s = 0.0
         if overlap:  # serialized mode measures stages per chunk instead
             t0 = time.perf_counter()
@@ -494,7 +611,14 @@ class MultiStreamEngine:
                 queue_s=queue_s, compute_s=p["cam_dt"],
                 n_streams=n_active),
                 used_knobs=p.get("knobs"))
-        timing.host_s.append(time.perf_counter() - t0)
+        host_dur = time.perf_counter() - t0
+        timing.host_s.append(host_dur)
+        ob = self._obs
+        if ob is not None:  # after host_s.append: outside the host window
+            if overlap:
+                ob.server(ci, t0, p["server_steady_s"], True)
+            ob.finish(ci, t0, host_dur, n_active, lane_bytes, delays,
+                      queue_s, p["cam_dt"])
 
     # -- the pipelined fleet loop ---------------------------------------------
     def run(self, frames, refs: Optional[Sequence[Sequence]] = None,
@@ -521,6 +645,8 @@ class MultiStreamEngine:
             self.controller.reset()
         clock = None if self.trace is None else \
             UplinkClock(self.trace, cs, self.fps)
+        self._obs = _EngineObs() \
+            if (obs_trace.enabled() or obs_metrics.enabled()) else None
 
         def camera(batch):
             if controlled:  # traced knob array: fresh values, same program
@@ -567,6 +693,10 @@ class MultiStreamEngine:
             # simulation constant (deterministic delay replay / parity)
             acct_dt = cam_dt if self.sim_encode_s is None \
                 else self.sim_encode_s
+            if self._obs is not None:
+                wall = cam_dt if not self.overlap \
+                    else time.perf_counter() - t0
+                self._obs.camera(ci, t0, wall, cam_dt, N, N)
             t1 = time.perf_counter()
             outs = server_step(decoded)           # batched server DNN
             ref_outs = server_step(batch) if refs is None else None
@@ -592,7 +722,10 @@ class MultiStreamEngine:
                     if ref_outs is not None:  # ref pass bills to server
                         jax.block_until_ready(
                             jax.tree_util.tree_leaves(ref_outs))
-                timing.server_s.append(time.perf_counter() - t1)
+                srv_dt = time.perf_counter() - t1
+                timing.server_s.append(srv_dt)
+                if self._obs is not None:
+                    self._obs.server(ci, t1, srv_dt, False)
                 self._finish(pending.pop(0), per_stream, net, refs,
                              timing, False, clock)
         while pending:
@@ -606,6 +739,8 @@ class MultiStreamEngine:
                 batch_depth=self.depth if self.overlap else 1)
         if windowed:
             agg, self._agg = self._agg.result(), None
+            if self._obs is not None:
+                self._obs.slo_attainment(agg)
             return FleetResult([], timing.camera_s, timing=timing,
                                aggregate=agg)
         streams = [RunResult(f"accmpeg_fleet[{i}]", per_stream[i])
@@ -719,6 +854,8 @@ class MultiStreamEngine:
         use_dev = self._use_device_reduce(refs)
         per_stream: dict = {sid: [] for sid in range(N_total)}
         timing = FleetTiming()
+        self._obs = _EngineObs() \
+            if (obs_trace.enabled() or obs_metrics.enabled()) else None
         decisions: List = []
         pending: List[dict] = []
         warm_s = 0.0  # per-shape compiles land mid-loop under churn;
@@ -726,6 +863,10 @@ class MultiStreamEngine:
         t_run = time.perf_counter()
         for ci, s in enumerate(starts):
             active_ids = apply_churn(active_ids, events, ci)
+            if self._obs is not None:
+                for ev in events:
+                    if ev.chunk == ci and (ev.join or ev.leave):
+                        self._obs.churn(ci, ev)
             if owned_set is not None:
                 stray = sorted(sid for sid in active_ids
                                if sid not in owned_set)
@@ -790,6 +931,11 @@ class MultiStreamEngine:
             timing.camera_s.append(cam_dt)
             acct_dt = cam_dt if self.sim_encode_s is None \
                 else self.sim_encode_s
+            if self._obs is not None:
+                wall = cam_dt if not self.overlap \
+                    else time.perf_counter() - t0
+                self._obs.camera(ci, t0, wall, cam_dt, plan.n_padded,
+                                 len(ids))
             t1 = time.perf_counter()
             outs = server_step(decoded)           # batched server DNN
             ref_outs = server_step(batch) if refs is None else None
@@ -813,7 +959,10 @@ class MultiStreamEngine:
                     if ref_outs is not None:
                         jax.block_until_ready(
                             jax.tree_util.tree_leaves(ref_outs))
-                timing.server_s.append(time.perf_counter() - t1)
+                srv_dt = time.perf_counter() - t1
+                timing.server_s.append(srv_dt)
+                if self._obs is not None:
+                    self._obs.server(ci, t1, srv_dt, False)
                 self._finish(pending.pop(0), per_stream, net, refs,
                              timing, False, clock)
             if rescale and (ci + 1) % max(decide_every, 1) == 0:
@@ -846,6 +995,8 @@ class MultiStreamEngine:
         timing.wall_s = time.perf_counter() - t_run - warm_s
         if windowed:
             agg, self._agg = self._agg.result(), None
+            if self._obs is not None:
+                self._obs.slo_attainment(agg)
             return FleetResult([], timing.camera_s, timing=timing,
                                stream_ids=list(agg.stream_ids),
                                decisions=decisions,

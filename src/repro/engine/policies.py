@@ -21,6 +21,8 @@ transmit more than once per chunk (DDS's two passes).
 """
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -29,6 +31,8 @@ from repro.codec.codec import roi_qp_map
 from repro.codec.dct import MB
 from repro.core.quality import QualityConfig, dilate, qp_map_from_scores
 from repro.engine.engine import ChunkContext, StreamingEngine, jit_encode
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.vision.dnn import decode_detections
 
 
@@ -84,6 +88,30 @@ def reconstruct_dropped(decoded_kept, keep) -> jnp.ndarray:
     return jnp.stack(full)
 
 
+def warm_ready(name: str, *thunks):
+    """Run each warm-up thunk and block until its result is device-ready
+    — the shared body of every policy's ``warm()`` (they all compiled
+    their hot programs with the same ``jax.block_until_ready(...)``
+    boilerplate). One call per policy keeps the whole warm-up inside a
+    single ``warm_compile`` span on the telemetry plane's warmup lane,
+    so compile stalls are attributable to the policy that caused them.
+    Returns the last thunk's (ready) result."""
+    t0 = time.perf_counter()
+    out = None
+    for thunk in thunks:
+        out = jax.block_until_ready(thunk())
+    dur = time.perf_counter() - t0
+    tracer = obs_trace.get_tracer()
+    if tracer is not None:
+        tracer.complete("warm_compile", "warmup", t0, dur, policy=name,
+                        n_programs=len(thunks))
+    reg = obs_metrics.get_metrics()
+    if reg is not None:
+        reg.counter("warm_compiles_total", policy=name).inc()
+        reg.histogram("warmup_seconds").observe(dur)
+    return out
+
+
 def _ensure_compiled(seen: set, key, encode_fn):
     """Frame-dropping policies encode data-dependent kept-frame counts, so
     each new count means a fresh XLA compile that warm() cannot predict.
@@ -126,9 +154,12 @@ class AccMPEGPolicy(QPPolicy):
         cs = engine.chunk_size
         k = self.frame_sample or cs
         n_maps = cs if (k < cs) else 1
-        jax.block_until_ready(self.accmodel.scores(chunk[:1]))
-        jax.block_until_ready(jit_encode(engine.impl)(chunk, jnp.full(
-            (n_maps,) + tuple(s // MB for s in chunk.shape[1:3]), 35.0))[0])
+        warm_ready(
+            self.name,
+            lambda: self.accmodel.scores(chunk[:1]),
+            lambda: jit_encode(engine.impl)(chunk, jnp.full(
+                (n_maps,) + tuple(s // MB for s in chunk.shape[1:3]),
+                35.0))[0])
 
     def encode_chunk(self, ctx):
         chunk = ctx.chunk
@@ -157,7 +188,8 @@ class UniformPolicy(QPPolicy):
 
     def warm(self, engine, chunk):
         from repro.codec.codec import encode_chunk_uniform
-        jax.block_until_ready(encode_chunk_uniform(chunk, self.qp)[0])
+        warm_ready(self.name,
+                   lambda: encode_chunk_uniform(chunk, self.qp)[0])
 
     def encode_chunk(self, ctx):
         return ctx.encode_uniform(self.qp)
@@ -191,9 +223,12 @@ class DDSPolicy(QPPolicy):
     def warm(self, engine, chunk):
         from repro.codec.codec import encode_chunk_uniform
         H, W = chunk.shape[1:3]
-        jax.block_until_ready(encode_chunk_uniform(chunk, self.qp_lo)[0])
-        jax.block_until_ready(jit_encode(engine.impl)(
-            chunk, jnp.full((1, H // MB, W // MB), float(self.qp_lo)))[0])
+        warm_ready(
+            self.name,
+            lambda: encode_chunk_uniform(chunk, self.qp_lo)[0],
+            lambda: jit_encode(engine.impl)(
+                chunk,
+                jnp.full((1, H // MB, W // MB), float(self.qp_lo)))[0])
 
     def encode_chunk(self, ctx):
         H, W = ctx.chunk.shape[1:3]
@@ -222,8 +257,11 @@ class EAARPolicy(QPPolicy):
 
     def warm(self, engine, chunk):
         H, W = chunk.shape[1:3]
-        jax.block_until_ready(jit_encode(engine.impl)(
-            chunk, jnp.full((1, H // MB, W // MB), float(self.qp_hi)))[0])
+        warm_ready(
+            self.name,
+            lambda: jit_encode(engine.impl)(
+                chunk,
+                jnp.full((1, H // MB, W // MB), float(self.qp_hi)))[0])
 
     def encode_chunk(self, ctx):
         H, W = ctx.chunk.shape[1:3]
@@ -253,7 +291,7 @@ class ReductoPolicy(QPPolicy):
         self._warmed = set()  # kept-frame shapes already compiled
 
     def warm(self, engine, chunk):
-        jax.block_until_ready(self._feat(chunk))
+        warm_ready(self.name, lambda: self._feat(chunk))
 
     def encode_chunk(self, ctx):
         from repro.codec.codec import encode_chunk_uniform
@@ -299,8 +337,9 @@ class SiEVEPolicy(QPPolicy):
     def warm(self, engine, chunk):
         from repro.codec.codec import encode_chunk_uniform
 
-        jax.block_until_ready(self.camera.predict(chunk))
-        jax.block_until_ready(encode_chunk_uniform(chunk, self.qp)[0])
+        warm_ready(self.name,
+                   lambda: self.camera.predict(chunk),
+                   lambda: encode_chunk_uniform(chunk, self.qp)[0])
 
     def encode_chunk(self, ctx):
         from repro.codec.codec import encode_chunk_uniform
@@ -342,10 +381,12 @@ class ReductoAccMPEGPolicy(QPPolicy):
         self._warmed = set()  # kept-frame shapes already compiled
 
     def warm(self, engine, chunk):
-        jax.block_until_ready(self._feat(chunk))
-        jax.block_until_ready(self.accmodel.scores(chunk[:1]))
-        jax.block_until_ready(jit_encode(engine.impl)(chunk, jnp.full(
-            (1,) + tuple(s // MB for s in chunk.shape[1:3]), 35.0))[0])
+        warm_ready(
+            self.name,
+            lambda: self._feat(chunk),
+            lambda: self.accmodel.scores(chunk[:1]),
+            lambda: jit_encode(engine.impl)(chunk, jnp.full(
+                (1,) + tuple(s // MB for s in chunk.shape[1:3]), 35.0))[0])
 
     def encode_chunk(self, ctx):
         keep = drop_static_frames(ctx, self._feat, self.thresh)
@@ -371,9 +412,12 @@ class VigilPolicy(QPPolicy):
 
     def warm(self, engine, chunk):
         H, W = chunk.shape[1:3]
-        jax.block_until_ready(self.camera.predict(chunk)["heat"])
-        jax.block_until_ready(jit_encode(engine.impl)(
-            chunk, jnp.full((1, H // MB, W // MB), float(self.qp_lo)))[0])
+        warm_ready(
+            self.name,
+            lambda: self.camera.predict(chunk)["heat"],
+            lambda: jit_encode(engine.impl)(
+                chunk,
+                jnp.full((1, H // MB, W // MB), float(self.qp_lo)))[0])
 
     def encode_chunk(self, ctx):
         H, W = ctx.chunk.shape[1:3]

@@ -44,6 +44,20 @@ def warn_fallback(name: str, substitute: str) -> None:
     if name in _FALLBACK_WARNED:
         return
     _FALLBACK_WARNED.add(name)
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
+
+    reg = obs_metrics.get_metrics()
+    if reg is not None:
+        reg.counter("encoder_fallbacks_total", backend=name,
+                    substitute=substitute).inc()
+    tracer = obs_trace.get_tracer()
+    if tracer is not None:  # surface the substitution on the timeline
+        # too: a trace whose "pallas" spans actually ran the XLA scan
+        # should say so next to the spans themselves
+        tracer.instant("encoder_fallback", stage="events", backend=name,
+                       substitute=substitute,
+                       platform=jax.default_backend())
     warnings.warn(
         f"CHUNK_ENCODERS[{name!r}]: no TPU detected "
         f"(jax.default_backend()={jax.default_backend()!r}); substituting "

@@ -19,9 +19,21 @@ fleet served once in-process (single-process local fallback) and once as
 two ``jax.distributed`` workers, asserting the global ``FleetResult``s
 are bit-identical — accuracy, wire bytes, and (under the deterministic
 ``sim_encode_s`` accounting) every delay component.
+
+The smoke serves the workers with the telemetry plane on (``REPRO_OBS=1``
+exported to the gang) and the in-process reference *both* off and on —
+so one run pins the parity check *and* the telemetry-on-vs-off
+bit-identity guarantee. Worker 0 writes the cross-host merged Chrome
+trace (``--trace-out``, Perfetto-loadable, one process lane per host)
+and the gathered per-host metrics JSONL (``--metrics-out``); the driver
+prints each host's per-stage time summary and reconciles the
+``stage_seconds_total`` counters against ``FleetTiming``.
+``--profile DIR`` additionally captures a ``jax.profiler`` device trace
+per worker under ``DIR/host<k>``.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import socket
@@ -33,6 +45,12 @@ from pathlib import Path
 from typing import List, Optional
 
 SRC = str(Path(__file__).resolve().parents[2])
+
+#: worker-env contract for the smoke's telemetry outputs (set by the
+#: driver, read by worker 0 in ``_smoke_obs_outputs``)
+ENV_TRACE_OUT = "REPRO_OBS_TRACE_OUT"
+ENV_METRICS_OUT = "REPRO_OBS_METRICS_OUT"
+ENV_PROFILE_DIR = "REPRO_PROFILE_DIR"
 
 
 def find_free_port(host: str = "127.0.0.1") -> int:
@@ -130,15 +148,16 @@ def launch_fleet(body: str, num_processes: int = 2,
 # ---------------------------------------------------------------------------
 # the 2-process parity smoke (CI: multihost-smoke job)
 # ---------------------------------------------------------------------------
-def _smoke_digest() -> dict:
-    """Serve a small churned two-host fleet and digest the global result.
+def _smoke_result():
+    """Serve a small churned two-host fleet; returns the global
+    :class:`repro.serve.fleet.FleetResult`.
 
     Deterministic by construction — seeded scenes, seeded model inits,
     ``sim_encode_s`` accounting, per-host constant traces — so the same
-    digest must come out of the single-process fallback and of every
-    ``jax.distributed`` worker, bit for bit. Workers import and call
-    this very function: one source of truth for what "the same run"
-    means."""
+    data-path digest must come out of the single-process fallback and of
+    every ``jax.distributed`` worker, bit for bit. Workers import and
+    call this very function: one source of truth for what "the same
+    run" means."""
     import jax
     import numpy as np
 
@@ -166,10 +185,18 @@ def _smoke_digest() -> dict:
             trace=constant_trace(1.5e5 * (host + 1), rtt_s=0.02),
             autoscaler=FleetAutoscaler(), sim_encode_s=0.05)
 
-    res = serve_fleet(
+    return serve_fleet(
         make_engine, frames, topology,
         events=[ChurnEvent(1, leave=(1,)), ChurnEvent(2, join=(1,),
                                                       leave=(3,))])
+
+
+def _smoke_digest(res=None) -> dict:
+    """The data-path digest the parity assertions compare: everything a
+    ``FleetResult`` carries except wall clocks (which can never be
+    bit-identical across runs)."""
+    if res is None:
+        res = _smoke_result()
     return {
         "stream_ids": res.stream_ids,
         "hosts": res.hosts,
@@ -180,41 +207,166 @@ def _smoke_digest() -> dict:
     }
 
 
+def _smoke_obs_outputs() -> Optional[dict]:
+    """After a telemetry-enabled smoke serve: worker 0 writes the merged
+    Chrome trace + gathered per-host metrics JSONL (paths from the
+    driver's env contract), and every worker returns the per-host
+    per-stage span summary. None when the telemetry plane was off."""
+    from repro import obs
+    from repro.distributed import multihost
+    from repro.serve import fleet as fleet_mod
+
+    gather = fleet_mod.LAST_OBS_GATHER
+    if gather is None:
+        return None
+    span_payloads = [p["spans"] for p in gather
+                     if p.get("spans") is not None]
+    summary = obs.stage_summary(span_payloads)
+    if multihost.exchange().host == 0:
+        trace_out = os.environ.get(ENV_TRACE_OUT, "fleet_trace.json")
+        metrics_out = os.environ.get(ENV_METRICS_OUT,
+                                     "fleet_metrics.jsonl")
+        with open(trace_out, "w") as f:
+            json.dump(obs.merge_host_traces(span_payloads), f)
+        ts = time.time()
+        lines = [json.dumps({"host": p["host"], "unix_time": ts, **s},
+                            sort_keys=True)
+                 for p in gather for s in (p.get("metrics") or [])]
+        with open(metrics_out, "w") as f:
+            f.write("\n".join(lines) + ("\n" if lines else ""))
+    return summary
+
+
 _SMOKE_BODY = """
-    import json
-    from repro.launch.fleet import _smoke_digest
-    print("DIGEST " + json.dumps(_smoke_digest(), sort_keys=True))
+    import json, os
+    from repro import obs
+    obs.enable_from_env(host=jax.process_index())  # no-op sans REPRO_OBS
+    from repro.launch.fleet import (ENV_PROFILE_DIR, _smoke_digest,
+                                    _smoke_obs_outputs, _smoke_result)
+    with obs.profile_region(os.environ.get(ENV_PROFILE_DIR),
+                            host=jax.process_index()):
+        res = _smoke_result()
+    print("DIGEST " + json.dumps(_smoke_digest(res), sort_keys=True))
+    summary = _smoke_obs_outputs()
+    if summary is not None:
+        print("OBSSUM " + json.dumps(summary, sort_keys=True))
 """
 
 
-def smoke() -> None:
-    """The CI multihost-smoke: 2-process ``jax.distributed`` serve run
-    must match the single-process fallback bit-exactly."""
+def _print_stage_table(summary: dict) -> None:
+    """Per-host per-stage span-time table from ``obs.stage_summary``
+    output (hosts/stages keyed by strings after the JSON round trip)."""
+    print(f"{'host':>4} {'stage':<12} {'spans':>6} {'total_s':>9} "
+          f"{'mean_s':>9} {'max_s':>9}")
+    for host in sorted(summary, key=int):
+        for stage, row in sorted(summary[host].items()):
+            print(f"{host:>4} {stage:<12} {row['n']:>6} "
+                  f"{row['total_s']:>9.4f} {row['mean_s']:>9.4f} "
+                  f"{row['max_s']:>9.4f}")
+
+
+def _reconcile_counters(res, registry) -> None:
+    """The tentpole's books-balance check: the per-interval
+    ``stage_seconds_total`` counters the engine hooks increment must sum
+    to the same stage totals ``FleetTiming`` measures (float association
+    aside — the counter adds across hosts in gather order)."""
+    import numpy as np
+
+    for stage, measured in (("camera", res.timing.camera_s),
+                            ("server", res.timing.server_s),
+                            ("host", res.timing.host_s)):
+        c = registry.get("stage_seconds_total", stage=stage)
+        assert c is not None, f"stage_seconds_total{{{stage}}} never fired"
+        total = float(np.sum(measured))
+        assert np.isclose(c.value, total, rtol=1e-9, atol=1e-12), (
+            f"telemetry books don't balance: stage_seconds_total"
+            f"{{stage={stage}}}={c.value} vs FleetTiming sum {total}")
+
+
+def smoke(trace_out: str = "fleet_trace.json",
+          metrics_out: str = "fleet_metrics.jsonl",
+          profile: Optional[str] = None) -> None:
+    """The CI multihost-smoke: the 2-process ``jax.distributed`` serve
+    (telemetry on) must match the single-process fallback bit-exactly —
+    run both with the plane off and with it on, so the same assertion
+    also pins telemetry-on-vs-off bit-identity. Worker 0 leaves the
+    merged Chrome trace and metrics JSONL behind for the CI artifact
+    upload."""
+    from repro import obs
+
     reference = json.loads(json.dumps(_smoke_digest(), sort_keys=True))
-    outs = launch_fleet(_SMOKE_BODY, num_processes=2, timeout=600)
-    digests = []
+    # same run again under the telemetry plane: identical digest, and
+    # the counters the hooks kept must reconcile with FleetTiming
+    obs.enable(host=0)
+    try:
+        res_on = _smoke_result()
+        on_digest = json.loads(json.dumps(_smoke_digest(res_on),
+                                          sort_keys=True))
+        assert on_digest == reference, (
+            "telemetry-on single-process run diverged from telemetry-off:"
+            f"\n{on_digest}\n!=\n{reference}")
+        _reconcile_counters(res_on, obs.get_metrics())
+    finally:
+        obs.disable()
+    env = {obs.ENV_OBS: "1", ENV_TRACE_OUT: trace_out,
+           ENV_METRICS_OUT: metrics_out}
+    if profile:
+        env[ENV_PROFILE_DIR] = profile
+    outs = launch_fleet(_SMOKE_BODY, num_processes=2, timeout=600,
+                        env=env)
+    digests, summaries = [], []
     for i, out in enumerate(outs):
         lines = [ln for ln in out.splitlines() if ln.startswith("DIGEST ")]
         assert lines, f"worker {i} printed no digest:\n{out}"
         digests.append(json.loads(lines[-1][len("DIGEST "):]))
+        obs_lines = [ln for ln in out.splitlines()
+                     if ln.startswith("OBSSUM ")]
+        assert obs_lines, f"worker {i} printed no span summary:\n{out}"
+        summaries.append(json.loads(obs_lines[-1][len("OBSSUM "):]))
     for i, d in enumerate(digests):
         assert d == reference, (
             f"worker {i} global FleetResult diverged from the "
             f"single-process run:\n{d}\n!=\n{reference}")
+    assert summaries[0] == summaries[1], (
+        "workers disagree on the gathered span summary — the fleet_obs "
+        f"allgather is not lockstep:\n{summaries[0]}\n!=\n{summaries[1]}")
+    hosts_seen = sorted(summaries[0], key=int)
+    assert hosts_seen == ["0", "1"], (
+        f"merged telemetry covers hosts {hosts_seen}, expected both "
+        f"workers' lanes")
+    assert os.path.exists(trace_out), f"worker 0 left no {trace_out}"
+    assert os.path.exists(metrics_out), f"worker 0 left no {metrics_out}"
     n_chunks = len(reference["chunks"])
     print(f"multihost-smoke OK: 2-process jax.distributed serve == "
-          f"single-process fallback, bit-exact "
+          f"single-process fallback (telemetry off AND on), bit-exact "
           f"({n_chunks} stream-chunks, streams={reference['stream_ids']}, "
           f"hosts={reference['hosts']}, shapes={reference['shapes']})")
+    print(f"merged Chrome trace -> {trace_out}; per-host metrics -> "
+          f"{metrics_out}" + (f"; device profiles -> {profile}/host<k>"
+                              if profile else ""))
+    _print_stage_table(summaries[0])
 
 
 def main(argv: Optional[List[str]] = None) -> None:
-    args = list(sys.argv[1:] if argv is None else argv)
-    if args == ["--smoke"]:
-        smoke()
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.fleet",
+        description="multi-process fleet launcher / parity smoke")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the 2-process parity + telemetry smoke")
+    ap.add_argument("--trace-out", default="fleet_trace.json",
+                    help="merged Chrome trace path (smoke; worker 0 "
+                         "writes it)")
+    ap.add_argument("--metrics-out", default="fleet_metrics.jsonl",
+                    help="gathered per-host metrics JSONL path (smoke)")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture jax.profiler device traces per worker "
+                         "under DIR/host<k>")
+    args = ap.parse_args(sys.argv[1:] if argv is None else argv)
+    if args.smoke:
+        smoke(trace_out=args.trace_out, metrics_out=args.metrics_out,
+              profile=args.profile)
         return
-    raise SystemExit(f"usage: python -m repro.launch.fleet --smoke "
-                     f"(got {args})")
+    ap.error("nothing to do (pass --smoke)")
 
 
 if __name__ == "__main__":

@@ -5,6 +5,11 @@
 
 Serving-side fault tolerance: per-request deadline accounting, straggler
 batch logging, and cache re-initialization on shape change (elastic batch).
+
+Observability: ``--profile DIR`` wraps the serve region in a
+``jax.profiler`` device trace; ``REPRO_OBS=1`` turns on the span/metrics
+plane (``repro.obs``) and ``--trace-out`` writes the resulting Chrome
+trace (prefill + per-step decode spans) for Perfetto.
 """
 from __future__ import annotations
 
@@ -16,6 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
@@ -25,7 +32,12 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--mesh", default="local", choices=["local", "single", "multi"])
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler device trace under DIR")
+    ap.add_argument("--trace-out", default="serve_trace.json",
+                    help="Chrome trace output path (with REPRO_OBS=1)")
     args = ap.parse_args(argv)
+    obs.enable_from_env()
 
     from repro.configs.base import get_config, get_reduced_config
     from repro.distributed.sharding import Rules
@@ -52,23 +64,35 @@ def main(argv=None):
         extras["frames"] = jnp.asarray(
             rng.normal(0, 0.3, (B, max_seq, cfg.d_model)), dtype)
 
-    t0 = time.perf_counter()
-    cache, last = model.prefill(params, prompts, extras, max_seq=max_seq)
-    jax.block_until_ready(last)
-    t_prefill = time.perf_counter() - t0
-
-    decode = jax.jit(model.decode)
-    tok = jnp.argmax(last[:, -1, :], -1)[:, None].astype(jnp.int32)
-    outs = [tok]
-    lat = []
-    for i in range(G - 1):
+    tracer = obs.get_tracer()
+    with obs.profile_region(args.profile):
         t0 = time.perf_counter()
-        cache, logits = decode(params, cache, tok, P + i)
-        tok = jnp.argmax(logits[:, -1, :], -1)[:, None].astype(jnp.int32)
-        jax.block_until_ready(tok)
-        lat.append(time.perf_counter() - t0)
-        outs.append(tok)
+        cache, last = model.prefill(params, prompts, extras,
+                                    max_seq=max_seq)
+        jax.block_until_ready(last)
+        t_prefill = time.perf_counter() - t0
+        if tracer is not None:
+            tracer.complete("prefill", "server", t0, t_prefill,
+                            batch=B, prompt_len=P)
+
+        decode = jax.jit(model.decode)
+        tok = jnp.argmax(last[:, -1, :], -1)[:, None].astype(jnp.int32)
+        outs = [tok]
+        lat = []
+        for i in range(G - 1):
+            t0 = time.perf_counter()
+            cache, logits = decode(params, cache, tok, P + i)
+            tok = jnp.argmax(logits[:, -1, :], -1)[:, None].astype(
+                jnp.int32)
+            jax.block_until_ready(tok)
+            lat.append(time.perf_counter() - t0)
+            if tracer is not None:
+                tracer.complete("decode", "server", t0, lat[-1], step=i)
+            outs.append(tok)
     gen = jnp.concatenate(outs, axis=1)
+    if tracer is not None:
+        tracer.write(args.trace_out)
+        print(f"[obs] Chrome trace -> {args.trace_out}")
     lat = np.asarray(lat[1:]) if len(lat) > 1 else np.asarray(lat)
     print(f"[serve] {args.arch}: batch={B} prompt={P} gen={G}")
     print(f"  prefill: {t_prefill*1000:.1f} ms "

@@ -1,0 +1,100 @@
+"""Shared jit-compile accounting — recompiles as a live metric.
+
+The control plane's core guarantee is *zero recompiles while serving*:
+per-chunk knob changes ride as traced arrays and admission re-pads
+churned fleets onto already-compiled shapes. Several suites used to pin
+this with ad-hoc ``_cache_size()`` tuples; :class:`CompileCounter` is
+the one shared way to do it — snapshot the jit caches of every program
+on the hot path, run the schedule, and assert the caches did not grow.
+
+Promoted from ``tests/_compile_counter.py`` (a thin re-export shim
+remains there) so production serving can watch the same signal: with
+the ambient metrics registry installed (:mod:`repro.obs.metrics`),
+:meth:`CompileCounter.publish` surfaces per-program compile-cache sizes
+as gauges and cache *growth* as a counter — a recompile mid-run (which
+stalls a host for seconds) shows up on the telemetry plane instead of
+only failing a test. The span tracer gets an instant per detected
+recompile, so the stall is visible on the timeline too.
+
+``_cache_size()`` is the per-jit compiled-program count jax exposes on
+jitted callables (already relied on by ``tests/test_fleet_sharded.py``);
+counting cache entries rather than wrapping the compiler keeps the
+check exact under cache *hits* (a warm dispatch adds nothing).
+"""
+from __future__ import annotations
+
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
+
+
+class CompileCounter:
+    """Tracks the compile-cache sizes of named jitted programs.
+
+    >>> counter = CompileCounter(camera=cam_step, encode=jit_encode("fast"))
+    >>> ...  # serve a schedule that must not recompile
+    >>> counter.assert_no_recompiles()
+
+    ``snapshot()`` re-baselines (e.g. after an expected warm-up pass);
+    ``growth()`` reports per-program deltas for assertion messages;
+    ``publish()`` exports sizes/growth to the ambient metrics registry.
+    """
+
+    def __init__(self, **jitted):
+        for name, fn in jitted.items():
+            if not hasattr(fn, "_cache_size"):
+                raise TypeError(f"{name} is not a jitted callable "
+                                f"(no _cache_size): {fn!r}")
+        self.jitted = dict(jitted)
+        self.baseline = self.sizes()
+
+    def sizes(self) -> dict:
+        return {name: fn._cache_size()
+                for name, fn in self.jitted.items()}
+
+    def snapshot(self) -> dict:
+        """Re-baseline at the current cache sizes and return them."""
+        self.baseline = self.sizes()
+        return dict(self.baseline)
+
+    def growth(self) -> dict:
+        """Programs whose cache grew (or shrank) since the baseline."""
+        return {name: size - self.baseline[name]
+                for name, size in self.sizes().items()
+                if size != self.baseline[name]}
+
+    def assert_no_recompiles(self, context: str = ""):
+        grown = self.growth()
+        assert not grown, (
+            f"unexpected XLA recompiles{' (' + context + ')' if context else ''}: "
+            + ", ".join(f"{name}: {self.baseline[name]}->"
+                        f"{self.baseline[name] + delta}"
+                        for name, delta in sorted(grown.items())))
+
+    def assert_total(self, **expected: int):
+        """Pin absolute cache sizes (e.g. one program per padded shape)."""
+        actual = {name: self.jitted[name]._cache_size() for name in expected}
+        assert actual == expected, f"{actual} != {expected}"
+
+    def publish(self, context: str = "") -> dict:
+        """Export current cache sizes (gauges) and growth since baseline
+        (counter + trace instants) to the ambient telemetry plane, then
+        re-baseline. No-op (beyond the growth computation) when both the
+        registry and the tracer are disabled. Returns the growth dict so
+        callers can also log/assert on it."""
+        grown = self.growth()
+        reg = _metrics.get_metrics()
+        if reg is not None:
+            for name, size in self.sizes().items():
+                reg.gauge("jit_cache_size", program=name).set(size)
+            for name, delta in grown.items():
+                if delta > 0:
+                    reg.counter("jit_recompiles", program=name).inc(delta)
+        tracer = _trace.get_tracer()
+        if tracer is not None:
+            for name, delta in sorted(grown.items()):
+                if delta > 0:
+                    tracer.instant("recompile", stage="warmup",
+                                   program=name, new_programs=delta,
+                                   context=context or None)
+        self.baseline = self.sizes()
+        return grown

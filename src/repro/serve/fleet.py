@@ -48,6 +48,14 @@ from repro.control.autoscaler import ChurnEvent, ScaleDecision
 from repro.core.aggregate import AggregateResult
 from repro.core.pipeline import ChunkResult, FleetTiming, RunResult
 from repro.engine.multistream import FleetResult
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
+#: the last ``serve_fleet`` call's gathered telemetry payloads (one
+#: ``{"host", "spans", "metrics"}`` dict per host), or None when the
+#: telemetry plane was off. ``repro.launch.fleet`` reads this to write
+#: the merged Chrome trace / metrics log after a smoke run.
+LAST_OBS_GATHER = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -348,4 +356,27 @@ def serve_fleet(make_engine: Callable[[int], "object"], frames,
     # every host assembles the identical global result
     gathered = ex.allgather("fleet_result", payloads)
     flat = [p for host_list in gathered for p in host_list]
+
+    # telemetry rides one extra lockstep round. Enablement is env-gated
+    # (``REPRO_OBS`` — ``repro.launch.fleet`` exports it to the whole
+    # worker gang), so every host agrees this allgather happens; peer
+    # span streams are adopted into the local tracer, which is what
+    # makes ``Tracer.chrome_trace()`` on any host show every host's
+    # lanes with wall-clock-aligned timestamps.
+    global LAST_OBS_GATHER
+    LAST_OBS_GATHER = None
+    tracer = obs_trace.get_tracer()
+    reg = obs_metrics.get_metrics()
+    if tracer is not None or reg is not None:
+        obs_gathered = ex.allgather("fleet_obs", {
+            "host": int(ex.host),
+            "spans": None if tracer is None else tracer.payload(),
+            "metrics": None if reg is None else reg.series(),
+        })
+        if tracer is not None:
+            for p in obs_gathered:
+                if p["spans"] is not None:
+                    tracer.adopt(p["spans"])
+        LAST_OBS_GATHER = obs_gathered
+
     return merge_host_results(flat)

@@ -1,63 +1,10 @@
-"""Shared jit-compile accounting for recompile-regression tests.
-
-The control plane's core guarantee is *zero recompiles while serving*:
-per-chunk knob changes ride as traced arrays and admission re-pads churned
-fleets onto already-compiled shapes. Several suites used to pin this with
-ad-hoc ``_cache_size()`` tuples; :class:`CompileCounter` is the one shared
-way to do it — snapshot the jit caches of every program on the hot path,
-run the schedule, and assert the caches did not grow.
-
-``_cache_size()`` is the per-jit compiled-program count jax exposes on
-jitted callables (already relied on by ``tests/test_fleet_sharded.py``);
-counting cache entries rather than wrapping the compiler keeps the check
-exact under cache *hits* (a warm dispatch adds nothing).
-"""
+"""Thin re-export shim: :class:`CompileCounter` moved to
+``repro.obs.compile`` (public API, metric-emitting) so production
+serving and the test suite watch recompiles the same way. Existing
+imports (``from _compile_counter import CompileCounter``) keep working
+unchanged."""
 from __future__ import annotations
 
+from repro.obs.compile import CompileCounter
 
-class CompileCounter:
-    """Tracks the compile-cache sizes of named jitted programs.
-
-    >>> counter = CompileCounter(camera=cam_step, encode=jit_encode("fast"))
-    >>> ...  # serve a schedule that must not recompile
-    >>> counter.assert_no_recompiles()
-
-    ``snapshot()`` re-baselines (e.g. after an expected warm-up pass);
-    ``growth()`` reports per-program deltas for assertion messages.
-    """
-
-    def __init__(self, **jitted):
-        for name, fn in jitted.items():
-            if not hasattr(fn, "_cache_size"):
-                raise TypeError(f"{name} is not a jitted callable "
-                                f"(no _cache_size): {fn!r}")
-        self.jitted = dict(jitted)
-        self.baseline = self.sizes()
-
-    def sizes(self) -> dict:
-        return {name: fn._cache_size()
-                for name, fn in self.jitted.items()}
-
-    def snapshot(self) -> dict:
-        """Re-baseline at the current cache sizes and return them."""
-        self.baseline = self.sizes()
-        return dict(self.baseline)
-
-    def growth(self) -> dict:
-        """Programs whose cache grew (or shrank) since the baseline."""
-        return {name: size - self.baseline[name]
-                for name, size in self.sizes().items()
-                if size != self.baseline[name]}
-
-    def assert_no_recompiles(self, context: str = ""):
-        grown = self.growth()
-        assert not grown, (
-            f"unexpected XLA recompiles{' (' + context + ')' if context else ''}: "
-            + ", ".join(f"{name}: {self.baseline[name]}->"
-                        f"{self.baseline[name] + delta}"
-                        for name, delta in sorted(grown.items())))
-
-    def assert_total(self, **expected: int):
-        """Pin absolute cache sizes (e.g. one program per padded shape)."""
-        actual = {name: self.jitted[name]._cache_size() for name in expected}
-        assert actual == expected, f"{actual} != {expected}"
+__all__ = ["CompileCounter"]
