@@ -81,6 +81,9 @@ HEADLINE_KEYS = {
     "loadtest": {
         "loadtest/agg_speedup": ("speedup",),
         "loadtest/wire_compression": ("ratio",),
+        # elastic drain-and-rehome at N=4096: 1.00x means the merged
+        # windowed aggregate bit-matches the fixed-host reference
+        "loadtest/elastic_hosts": ("match",),
     },
     # telemetry overhead is lower-is-better so the ratio rule does not
     # apply; its gate is the met=yes verdict flags (collected for every

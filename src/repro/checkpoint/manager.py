@@ -53,6 +53,10 @@ class CheckpointManager:
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        # serializes retention deletes (async save thread) against
+        # readers (steps()/restore() on the main thread) — without it,
+        # _gc can rmtree the very directory restore() is reading
+        self._lock = threading.Lock()
 
     # ---- save ------------------------------------------------------------
     def save(self, step: int, state: PyTree, extra: Optional[dict] = None):
@@ -89,18 +93,41 @@ class CheckpointManager:
             "extra": extra,
         }
         (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
-        if final.exists():
-            shutil.rmtree(final)
-        os.replace(tmp, final)
-        self._gc()
+        # re-saving an existing step must never *lose* the checkpoint: the
+        # old dir is renamed aside (not rmtree'd) before the new one goes
+        # in, and deleted only after the replace lands. A crash anywhere
+        # in that window leaves either the final dir or a recoverable
+        # ``.old-`` copy on disk (``steps()`` renames orphans back), so
+        # the module's crash-mid-save contract extends to re-saves.
+        with self._lock:
+            old = None
+            if final.exists():
+                old = self.dir / \
+                    f"step_{step:010d}.old-{uuid.uuid4().hex[:8]}"
+                os.replace(final, old)
+            os.replace(tmp, final)
+            if old is not None:
+                shutil.rmtree(old, ignore_errors=True)
+        self._gc(newest=step)
 
-    def _gc(self):
-        steps = sorted(self.steps())
-        for s in steps[: max(0, len(steps) - self.keep)]:
-            shutil.rmtree(self.dir / f"step_{s:010d}", ignore_errors=True)
-        for stale in self.dir.glob("step_*.tmp-*"):
-            if time.time() - stale.stat().st_mtime > 3600:
-                shutil.rmtree(stale, ignore_errors=True)
+    def _gc(self, newest: Optional[int] = None):
+        with self._lock:
+            steps = sorted(self.steps_unlocked())
+            for s in steps[: max(0, len(steps) - self.keep)]:
+                # never touch the step just written: the main thread may
+                # be about to restore(latest_step()) it
+                if newest is not None and s >= newest:
+                    continue
+                shutil.rmtree(self.dir / f"step_{s:010d}",
+                              ignore_errors=True)
+            for stale in self.dir.glob("step_*.tmp-*"):
+                if time.time() - stale.stat().st_mtime > 3600:
+                    shutil.rmtree(stale, ignore_errors=True)
+            for stale in self.dir.glob("step_*.old-*"):
+                # only drop superseded copies; an orphan (no final dir)
+                # is a crash survivor steps() will recover, not garbage
+                if (self.dir / stale.name.split(".old-")[0]).exists():
+                    shutil.rmtree(stale, ignore_errors=True)
 
     def wait(self):
         if self._thread is not None:
@@ -114,13 +141,24 @@ class CheckpointManager:
             raise RuntimeError(f"async checkpoint save failed: {err!r}") from err
 
     # ---- restore -----------------------------------------------------------
-    def steps(self):
+    def steps_unlocked(self):
+        # crash-window recovery: a re-save that died between renaming the
+        # old step aside and landing the new one leaves an ``.old-``
+        # orphan with no final dir — rename it back so the step survives
+        for p in self.dir.glob("step_*.old-*"):
+            final = self.dir / p.name.split(".old-")[0]
+            if not final.exists() and (p / "manifest.json").exists():
+                os.replace(p, final)
         out = []
         for p in self.dir.glob("step_*"):
-            if p.is_dir() and ".tmp-" not in p.name \
+            if p.is_dir() and p.name.split("_", 1)[1].isdigit() \
                     and (p / "manifest.json").exists():
                 out.append(int(p.name.split("_")[1]))
         return sorted(out)
+
+    def steps(self):
+        with self._lock:
+            return self.steps_unlocked()
 
     def latest_step(self) -> Optional[int]:
         steps = self.steps()
@@ -134,17 +172,23 @@ class CheckpointManager:
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        data = np.load(self.dir / f"step_{step:010d}" / "arrays.npz")
         flat_like, treedef = _flatten(like)
         shard_flat = _flatten(shardings)[0] if shardings is not None else {}
         leaves = []
-        for key, ref in flat_like.items():
-            if key not in data:
-                raise KeyError(f"checkpoint missing array {key!r}")
-            arr = data[key].astype(ref.dtype) if hasattr(ref, "dtype") else data[key]
-            if key in shard_flat:
-                arr = jax.device_put(arr, shard_flat[key])
-            leaves.append(arr)
+        # hold the retention lock for the whole read: npz members load
+        # lazily, so the file must stay intact until the last array is out
+        with self._lock:
+            self.steps_unlocked()  # recover any crash-window .old- orphan
+            with np.load(self.dir / f"step_{step:010d}"
+                         / "arrays.npz") as data:
+                for key, ref in flat_like.items():
+                    if key not in data:
+                        raise KeyError(f"checkpoint missing array {key!r}")
+                    arr = data[key].astype(ref.dtype) \
+                        if hasattr(ref, "dtype") else data[key]
+                    if key in shard_flat:
+                        arr = jax.device_put(arr, shard_flat[key])
+                    leaves.append(arr)
         return jax.tree_util.tree_unflatten(treedef, leaves)
 
     def manifest(self, step: Optional[int] = None) -> dict:

@@ -186,8 +186,12 @@ def make_workload(n_chunks: int,
     if initial_streams is None:
         initial_streams = max(1, int(round(rate_per_chunk
                                            * mean_session_chunks)))
-    if max_concurrent is not None:
-        initial_streams = min(initial_streams, max_concurrent)
+    if max_concurrent is not None and initial_streams > max_concurrent:
+        # the t=0 analogue of the mid-run headroom check: every initial
+        # stream beyond the cap is a blocked arrival, counted exactly as
+        # a mid-run join refused for want of headroom would be
+        n_blocked += initial_streams - max_concurrent
+        initial_streams = max_concurrent
     initial: List[int] = []
     for _ in range(initial_streams):
         admit(0, initial)

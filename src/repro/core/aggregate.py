@@ -240,14 +240,24 @@ class ReservoirSample:
         return self.n <= self.capacity
 
     def state(self) -> dict:
+        # the generator state rides along so a suspended/resumed
+        # reservoir keeps sampling the exact sequence the uninterrupted
+        # one would — without it resumption is only exact pre-overflow
+        kind, keys, pos, has_g, g = self._rng.get_state()
         return {"capacity": self.capacity, "seed": self.seed,
-                "n": self.n, "buf": [float(x) for x in self._buf]}
+                "n": self.n, "buf": [float(x) for x in self._buf],
+                "rng": [kind, [int(k) for k in keys], int(pos),
+                        int(has_g), float(g)]}
 
     @classmethod
     def from_state(cls, st: dict) -> "ReservoirSample":
         rs = cls(st["capacity"], st["seed"])
         rs.n = int(st["n"])
         rs._buf = np.asarray(st["buf"], np.float64)
+        if "rng" in st:
+            kind, keys, pos, has_g, g = st["rng"]
+            rs._rng.set_state((kind, np.asarray(keys, np.uint32),
+                               int(pos), int(has_g), float(g)))
         return rs
 
     @staticmethod
@@ -459,6 +469,54 @@ class FleetAggregator:
         w.total += tot
         self.p2.extend(delays)
         self.res.extend(delays)
+
+    # -- suspend/resume ---------------------------------------------------
+    def export_state(self) -> dict:
+        """JSON-serializable snapshot of every mutable accumulator — the
+        piece of serving state a draining host checkpoints so its adopter
+        resumes windowed aggregation mid-run, bit-exactly (the sketches
+        carry their generator state, see ``ReservoirSample.state``)."""
+        return {
+            "n": int(self.n), "sum_acc": float(self.sum_acc),
+            "sum_bytes": float(self.sum_bytes),
+            "sum_delay": float(self.sum_delay),
+            "max_delay": float(self.max_delay),
+            "attained": [int(x) for x in self.attained],
+            "total": [int(x) for x in self.total],
+            "windows": [self._windows[wi].to_wire()
+                        for wi in sorted(self._windows)],
+            "cis": [int(c) for c in self._cis],
+            "served": [int(s) for s in np.flatnonzero(self._served)],
+            "p2": self.p2.state(), "res": self.res.state(),
+        }
+
+    def import_state(self, st: dict) -> "FleetAggregator":
+        """Restore :meth:`export_state` output into this (freshly built)
+        aggregator; the configuration (window, tiers, quantile) comes
+        from the constructor and must match the exporting side's."""
+        self.n = int(st["n"])
+        self.sum_acc = float(st["sum_acc"])
+        self.sum_bytes = float(st["sum_bytes"])
+        self.sum_delay = float(st["sum_delay"])
+        self.max_delay = float(st["max_delay"])
+        self.attained = np.asarray(st["attained"], np.int64)
+        self.total = np.asarray(st["total"], np.int64)
+        if self.attained.size != len(self.tiers):
+            raise ValueError(
+                f"aggregator state carries {self.attained.size} tiers "
+                f"but this aggregator is configured with "
+                f"{len(self.tiers)}; drain and adopt sides must share "
+                f"one AggregateConfig")
+        self._windows = {int(w["wi"]): WindowStats.from_wire(w)
+                         for w in st["windows"]}
+        self._cis = [int(c) for c in st["cis"]]
+        served = [int(s) for s in st["served"]]
+        if served:
+            self._grow(max(served) + 1)
+            self._served[np.asarray(served, np.int64)] = True
+        self.p2 = P2Quantile.from_state(st["p2"])
+        self.res = ReservoirSample.from_state(st["res"])
+        return self
 
     def result(self) -> "AggregateResult":
         return AggregateResult(

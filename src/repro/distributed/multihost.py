@@ -72,11 +72,25 @@ class LocalExchange:
     n_hosts = 1
     host = 0
 
+    def __init__(self):
+        self.failed = set()
+
+    def live(self) -> List[int]:
+        return [h for h in range(self.n_hosts) if h not in self.failed]
+
+    def mark_failed(self, host: int) -> None:
+        self.failed.add(int(host))
+
     def allgather(self, tag: str, obj: Any) -> List[Any]:
         # round-trip through JSON so the fallback has the same float /
         # tuple-vs-list semantics as the real cross-host exchange —
         # parity tests compare the two paths bit for bit
         return [json.loads(json.dumps(obj))]
+
+    def tolerant_allgather(self, tag: str, obj: Any,
+                           tolerate=(), timeout_s: float = 20.0
+                           ) -> List[Any]:
+        return self.allgather(tag, obj)
 
     def barrier(self, name: str = "sync") -> None:
         pass
@@ -117,12 +131,48 @@ class KVExchange:
         self.timeout_ms = int(timeout_s * 1000)
         self.host = process_index()
         self.n_hosts = process_count()
+        # hosts marked dead (explicitly or by a tolerant gather timing
+        # out): all subsequent gathers skip them, so survivors stay in
+        # lockstep with each other rather than blocking on a corpse
+        self.failed = set()
+
+    def live(self) -> List[int]:
+        return [h for h in range(self.n_hosts) if h not in self.failed]
+
+    def mark_failed(self, host: int) -> None:
+        self.failed.add(int(host))
 
     def allgather(self, tag: str, obj: Any) -> List[Any]:
         base = f"fleetx/{tag}/{next(self._rounds)}"
         self._client.key_value_set(f"{base}/{self.host}", json.dumps(obj))
         return [json.loads(self._client.blocking_key_value_get(
-            f"{base}/{h}", self.timeout_ms)) for h in range(self.n_hosts)]
+            f"{base}/{h}", self.timeout_ms)) for h in self.live()]
+
+    def tolerant_allgather(self, tag: str, obj: Any,
+                           tolerate=(), timeout_s: float = 20.0
+                           ) -> List[Any]:
+        """Allgather that survives the death of any host in ``tolerate``:
+        those hosts get a short per-host timeout instead of the exchange
+        default, and a timeout marks the host failed (its value is
+        omitted) rather than raising. Hosts not in ``tolerate`` keep the
+        fail-loud default — an unexpected corpse is still a bug.
+
+        Every live host must pass the same ``tolerate`` set (lockstep),
+        so after the round all survivors agree on ``failed``."""
+        tolerate = {int(h) for h in tolerate}
+        base = f"fleetx/{tag}/{next(self._rounds)}"
+        self._client.key_value_set(f"{base}/{self.host}", json.dumps(obj))
+        out: List[Any] = []
+        for h in self.live():
+            ms = int(timeout_s * 1000) if h in tolerate else self.timeout_ms
+            try:
+                out.append(json.loads(self._client.blocking_key_value_get(
+                    f"{base}/{h}", ms)))
+            except Exception:  # XlaRuntimeError: DEADLINE_EXCEEDED
+                if h not in tolerate:
+                    raise
+                self.mark_failed(h)
+        return out
 
     def barrier(self, name: str = "sync") -> None:
         self._client.wait_at_barrier(

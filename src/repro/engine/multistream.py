@@ -193,6 +193,10 @@ class FleetResult:
     # ingestion host that served each entry of ``streams``
     aggregate: Optional[AggregateResult] = None  # detail="windowed":
     # O(window) summaries replace ``streams`` at fleet scale
+    served_cis: Optional[List[int]] = None  # absolute chunk interval of
+    # each ``camera_s`` entry (all-quiet intervals append neither) — the
+    # explicit record the cross-host camera_s merge aligns on, and what
+    # failure-time re-serve dedup keys by
 
     @property
     def n_streams(self):
@@ -343,6 +347,7 @@ class MultiStreamEngine:
         # never cross to host — only (N,) scalars do
         self.device_reduce = device_reduce
         self.last_scale = None  # autoscaler's most recent ScaleDecision
+        self.last_serve_state = None  # serve_loop's exported resume state
         self._steps = {}  # resolved mesh (or None) -> (camera, server)
         self._acc_steps = {}  # resolved mesh -> device accuracy reduce
         self._warm = {}   # (shape, mesh, refs is None) -> steady-state times
@@ -737,21 +742,26 @@ class MultiStreamEngine:
             self.last_scale = self.autoscaler.decide(
                 timing, N, mesh_width=width,
                 batch_depth=self.depth if self.overlap else 1)
+        served_cis = list(range(len(starts)))  # run(): ci == position
         if windowed:
             agg, self._agg = self._agg.result(), None
             if self._obs is not None:
                 self._obs.slo_attainment(agg)
             return FleetResult([], timing.camera_s, timing=timing,
-                               aggregate=agg)
+                               aggregate=agg, served_cis=served_cis)
         streams = [RunResult(f"accmpeg_fleet[{i}]", per_stream[i])
                    for i in range(N)]
-        return FleetResult(streams, timing.camera_s, timing=timing)
+        return FleetResult(streams, timing.camera_s, timing=timing,
+                           served_cis=served_cis)
 
     # -- the closed-loop churn serving loop ------------------------------------
     def serve_loop(self, frames, events=(), refs=None, initial=None,
                    net: Optional[NetworkConfig] = None, rescale: bool = True,
                    decide_every: int = 1,
-                   owned: Optional[Sequence[int]] = None) -> FleetResult:
+                   owned: Optional[Sequence[int]] = None,
+                   start_chunk: int = 0,
+                   stop_chunk: Optional[int] = None,
+                   state: Optional[dict] = None) -> FleetResult:
         """Closed-loop fleet serving under stream churn: scaling happens
         *inside* the loop, not between runs.
 
@@ -795,6 +805,20 @@ class MultiStreamEngine:
         instead of silently serving — and mis-accounting — another
         host's streams.
 
+        Suspend/resume (elastic hosts, ``repro.serve.fleet``):
+        ``start_chunk``/``stop_chunk`` bound the served interval range
+        ``[start_chunk, stop_chunk)`` on the *global* chunk timeline —
+        ``ci`` stays absolute, so the uplink clock's capture times and
+        the churn schedule line up across a suspension. ``state`` imports
+        a previous call's exported resume state; after every call the
+        engine leaves its export in ``self.last_serve_state``: the uplink
+        clock's backlog (``free_at_s``), the controller level, the
+        windowed aggregator's accumulators, and the last decoded chunk of
+        the active lanes (the adopting host's warm reference, restored
+        against *its* mesh by the re-homing path). ``initial`` must
+        already reflect the churn up to ``start_chunk`` — events at
+        chunks before ``start_chunk`` are never re-applied.
+
         Returns a :class:`FleetResult` whose ``streams`` hold one
         ``RunResult`` per stream id that ever served (``stream_ids`` maps
         them back), plus the ``decisions`` and compiled-``shapes``
@@ -806,11 +830,17 @@ class MultiStreamEngine:
         N_total, T = frames.shape[:2]
         cs = self.chunk_size
         starts = list(range(0, T - T % cs, cs))
+        n_int = len(starts)
+        stop = n_int if stop_chunk is None else int(stop_chunk)
+        if not 0 <= start_chunk <= stop <= n_int:
+            raise ValueError(
+                f"serve window [{start_chunk}, {stop}) does not fit the "
+                f"schedule's {n_int} intervals")
         events = tuple(events)
         for ev in events:
-            if ev.chunk >= len(starts):
+            if ev.chunk >= n_int:
                 raise ValueError(f"churn event at chunk {ev.chunk} never "
-                                 f"fires; schedule has {len(starts)} "
+                                 f"fires; schedule has {n_int} "
                                  f"intervals")
             for sid in ev.join + ev.leave:
                 if not 0 <= sid < N_total:
@@ -851,9 +881,22 @@ class MultiStreamEngine:
         windowed = self.detail == "windowed"
         if windowed:
             self._agg = (self.aggregate or AggregateConfig()).build()
+        # resume: the suspended run's serving state picks up where it
+        # left off — clock backlog, controller level, aggregate window
+        if state is not None:
+            if clock is not None and state.get("clock_free_at_s") \
+                    is not None:
+                clock.free_at_s = float(state["clock_free_at_s"])
+            if controlled and state.get("controller_level") is not None:
+                self.controller.level = float(state["controller_level"])
+            if windowed and state.get("agg") is not None:
+                self._agg.import_state(state["agg"])
         use_dev = self._use_device_reduce(refs)
         per_stream: dict = {sid: [] for sid in range(N_total)}
         timing = FleetTiming()
+        served_cis: List[int] = []
+        last_dec = None  # (device decoded batch, n_active) of the last
+        # served interval — exported as the resume state's warm reference
         self._obs = _EngineObs() \
             if (obs_trace.enabled() or obs_metrics.enabled()) else None
         decisions: List = []
@@ -861,7 +904,8 @@ class MultiStreamEngine:
         warm_s = 0.0  # per-shape compiles land mid-loop under churn;
         # excluded from wall_s so it stays comparable to run()'s
         t_run = time.perf_counter()
-        for ci, s in enumerate(starts):
+        for ci in range(start_chunk, stop):
+            s = starts[ci]
             active_ids = apply_churn(active_ids, events, ci)
             if self._obs is not None:
                 for ev in events:
@@ -929,6 +973,8 @@ class MultiStreamEngine:
             cam_dt = cam_steady_s if self.overlap \
                 else time.perf_counter() - t0
             timing.camera_s.append(cam_dt)
+            served_cis.append(ci)
+            last_dec = (decoded, len(ids))
             acct_dt = cam_dt if self.sim_encode_s is None \
                 else self.sim_encode_s
             if self._obs is not None:
@@ -993,6 +1039,24 @@ class MultiStreamEngine:
             self._finish(pending.pop(0), per_stream, net, refs, timing,
                          self.overlap, clock)
         timing.wall_s = time.perf_counter() - t_run - warm_s
+        # export the resume state (see the docstring): whatever a
+        # draining host must carry for its adopter to continue this run
+        # bit-exactly from ``stop``
+        if last_dec is not None:
+            dec, n_act = last_dec
+            last_decoded = np.asarray(dec)[:n_act]
+        else:
+            last_decoded = None
+        agg_state = self._agg.export_state() if windowed else None
+        self.last_serve_state = {
+            "next_chunk": int(stop),
+            "clock_free_at_s": None if clock is None
+            else float(clock.free_at_s),
+            "controller_level": None if not controlled
+            else float(self.controller.level),
+            "agg": agg_state,
+            "last_decoded": last_decoded,
+        }
         if windowed:
             agg, self._agg = self._agg.result(), None
             if self._obs is not None:
@@ -1001,10 +1065,11 @@ class MultiStreamEngine:
                                stream_ids=list(agg.stream_ids),
                                decisions=decisions,
                                shapes=list(scaler.compiled_shapes),
-                               aggregate=agg)
+                               aggregate=agg, served_cis=served_cis)
         served = [sid for sid in sorted(per_stream) if per_stream[sid]]
         streams = [RunResult(f"accmpeg_churn[{sid}]", per_stream[sid])
                    for sid in served]
         return FleetResult(streams, timing.camera_s, timing=timing,
                            stream_ids=served, decisions=decisions,
-                           shapes=list(scaler.compiled_shapes))
+                           shapes=list(scaler.compiled_shapes),
+                           served_cis=served_cis)

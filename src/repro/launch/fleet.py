@@ -84,15 +84,23 @@ def worker_prelude(devices_per_proc: int = 1) -> str:
 
 def launch_fleet(body: str, num_processes: int = 2,
                  devices_per_proc: int = 1, timeout: int = 900,
-                 env: Optional[dict] = None) -> List[str]:
+                 env: Optional[dict] = None,
+                 stagger_s: Optional[dict] = None) -> List[str]:
     """Run ``body`` (dedented python source, after the prelude) in
     ``num_processes`` workers joined via ``jax.distributed``; returns
     each worker's stdout in process order.
 
+    ``stagger_s`` maps process index -> spawn delay in seconds (elastic
+    joiners arriving late: ``jax.distributed.initialize`` blocks the
+    early arrivals until the whole gang connects, exactly like a real
+    staggered rollout).
+
     Failure is loud and collective: any nonzero exit (or a hang past
     ``timeout`` — e.g. a worker waiting at a barrier its dead sibling
     never reaches) kills the whole gang and raises with the offending
-    worker's output."""
+    worker's output. A worker that *exits cleanly* early (rc 0 — the
+    injected-kill fault in the elastic smoke uses ``os._exit(0)``) is
+    not a failure."""
     import threading
 
     from repro.distributed.multihost import (ENV_COORD, ENV_NPROCS,
@@ -102,6 +110,8 @@ def launch_fleet(body: str, num_processes: int = 2,
     script = worker_prelude(devices_per_proc) + textwrap.dedent(body)
     procs = []
     for i in range(num_processes):
+        if stagger_s and stagger_s.get(i):
+            time.sleep(float(stagger_s[i]))
         e = dict(os.environ)
         e.update(env or {})
         e[ENV_COORD] = f"127.0.0.1:{port}"
@@ -283,9 +293,177 @@ def _reconcile_counters(res, registry) -> None:
             f"{{stage={stage}}}={c.value} vs FleetTiming sum {total}")
 
 
+# ---------------------------------------------------------------------------
+# the elastic-membership smoke (drain-and-rehome + kill-one-host)
+# ---------------------------------------------------------------------------
+#: worker-env contract for the elastic smoke scenarios
+ENV_ELASTIC_MODE = "REPRO_ELASTIC_MODE"
+ENV_ELASTIC_CKPT = "REPRO_ELASTIC_CKPT"
+
+
+def _elastic_smoke_result(mode: str, ckpt_dir: Optional[str]):
+    """Serve one elastic scenario (or its uninterrupted reference).
+
+    ``drain``: one host owns every stream, a second host joins mid-run
+    (staggered spawn in the 2-process form) and adopts the whole shard
+    when the first host drains at chunk 2 — planned handoff through a
+    checkpoint, nothing re-served. ``fail``: the two-host churned fleet
+    of ``_smoke_result``, with host 1 killed at chunk 2 *after*
+    publishing its last segment but *before* checkpointing; host 0
+    detects the death by exchange timeout and re-serves host 1's unit
+    forward from the chunk-1 checkpoint (dedup by absolute ``ci``).
+    ``<mode>_ref`` serves the identical schedule with a fixed host set —
+    the bit-exactness reference. Adopted units keep their origin host's
+    engine config (``make_engine(unit)``), which is what makes the
+    post-rehome accounting bit-identical to the reference."""
+    import jax
+    import numpy as np
+
+    from repro.control import ChurnEvent, FleetAutoscaler
+    from repro.control.traces import constant_trace
+    from repro.core.accmodel import AccModel, accmodel_init
+    from repro.data.video import make_scene
+    from repro.engine import MultiStreamEngine
+    from repro.serve.fleet import FleetTopology, HostEvent, serve_fleet
+    from repro.vision.dnn import FinalDNN, init_net
+
+    base = mode[: -len("_ref")] if mode.endswith("_ref") else mode
+    if base not in ("drain", "fail"):
+        raise ValueError(f"unknown elastic smoke mode {mode!r}")
+    h, w, cs = 48, 64, 10
+    dnn = FinalDNN("detection",
+                   init_net("detection", jax.random.PRNGKey(0), width=8))
+    am = AccModel(accmodel_init(jax.random.PRNGKey(1), 8))
+    if base == "drain":
+        T = 4 * cs
+        topology = FleetTopology(((0, 1, 2, 3), ()))
+        events = []
+        host_events = [HostEvent(1, host=1, kind="join"),
+                       HostEvent(2, host=0, kind="drain", adopter=1)]
+        segment_every = None
+    else:
+        T = 3 * cs
+        topology = FleetTopology(((0, 1), (2, 3)))
+        events = [ChurnEvent(1, leave=(1,)),
+                  ChurnEvent(2, join=(1,), leave=(3,))]
+        host_events = [HostEvent(2, host=1, kind="fail", adopter=0)]
+        segment_every = 1
+    frames = np.stack([
+        make_scene("dashcam", seed=40 + i, T=T, H=h, W=w).frames
+        for i in range(4)])
+
+    def make_engine(host):
+        return MultiStreamEngine(
+            dnn, am, impl="fast", chunk_size=cs,
+            trace=constant_trace(1.5e5 * (host + 1), rtt_s=0.02),
+            autoscaler=FleetAutoscaler(), sim_encode_s=0.05)
+
+    if mode.endswith("_ref"):
+        return serve_fleet(make_engine, frames, topology, events=events)
+    return serve_fleet(make_engine, frames, topology, events=events,
+                       host_events=host_events, checkpoint_dir=ckpt_dir,
+                       segment_every=segment_every, fail_timeout_s=10.0)
+
+
+def _elastic_digest(res) -> dict:
+    """Per-(stream, interval) accounting rows, sorted — the elastic
+    parity digest. ``hosts``/``shapes`` are excluded on purpose: a
+    re-homed stream legitimately reports its adopter, but its *chunk
+    accounting* must be bit-identical to the uninterrupted reference.
+    ``served_cis`` pins the no-lost-interval guarantee."""
+    rows = []
+    for sid, run in zip(res.stream_ids, res.streams):
+        for c in run.chunks:
+            rows.append([int(sid), int(c.ci), c.accuracy, c.bytes,
+                         c.encode_s, c.stream_s, c.queue_s])
+    rows.sort(key=lambda r: (r[0], r[1]))
+    return {"stream_ids": list(res.stream_ids),
+            "served_cis": list(res.served_cis or []),
+            "chunks": rows}
+
+
+_ELASTIC_BODY = """
+    import json, os, sys
+    from repro import obs
+    obs.enable_from_env(host=jax.process_index())  # no-op sans REPRO_OBS
+    from repro.launch.fleet import (ENV_ELASTIC_CKPT, ENV_ELASTIC_MODE,
+                                    _elastic_digest, _elastic_smoke_result,
+                                    _smoke_obs_outputs)
+    mode = os.environ[ENV_ELASTIC_MODE]
+    res = _elastic_smoke_result(mode, os.environ[ENV_ELASTIC_CKPT])
+    print("DIGEST " + json.dumps(_elastic_digest(res), sort_keys=True))
+    _smoke_obs_outputs()
+    if mode == "fail":
+        # the coordinator already lost a member; skip jax.distributed's
+        # full-gang shutdown handshake, which would wait on the corpse
+        sys.stdout.flush()
+        sys.stderr.flush()
+        os._exit(0)
+"""
+
+
+def elastic_smoke(kill_trace_out: str = "fleet_trace_kill.json") -> None:
+    """The elastic-membership smoke: both scenarios must reproduce the
+    uninterrupted reference's per-(stream, interval) accounting bit for
+    bit, in the local fallback *and* as a real 2-process gang (staggered
+    joiner for the drain, an injected ``os._exit`` kill for the fail).
+    Worker 0 of the kill run leaves its merged Chrome trace behind for
+    the CI artifact upload."""
+    import tempfile
+
+    from repro import obs
+
+    for mode in ("drain", "fail"):
+        ref = json.loads(json.dumps(
+            _elastic_digest(_elastic_smoke_result(mode + "_ref", None)),
+            sort_keys=True))
+        with tempfile.TemporaryDirectory() as d:
+            local = json.loads(json.dumps(
+                _elastic_digest(_elastic_smoke_result(mode, d)),
+                sort_keys=True))
+        assert local == ref, (
+            f"local {mode} scenario diverged from the uninterrupted "
+            f"reference:\n{local}\n!=\n{ref}")
+        env = {ENV_ELASTIC_MODE: mode}
+        stagger = None
+        if mode == "drain":
+            stagger = {1: 1.0}  # the joiner arrives late
+        else:
+            env[obs.ENV_OBS] = "1"  # kill run leaves the trace artifact
+            env[ENV_TRACE_OUT] = kill_trace_out
+            env[ENV_METRICS_OUT] = kill_trace_out + ".metrics.jsonl"
+        with tempfile.TemporaryDirectory() as d:
+            env[ENV_ELASTIC_CKPT] = d
+            outs = launch_fleet(_ELASTIC_BODY, num_processes=2,
+                                timeout=600, env=env, stagger_s=stagger)
+        for i, out in enumerate(outs):
+            lines = [ln for ln in out.splitlines()
+                     if ln.startswith("DIGEST ")]
+            if mode == "fail" and i == 1:
+                assert not lines, (
+                    f"the killed worker should die before returning a "
+                    f"merged result:\n{out}")
+                continue
+            assert lines, f"worker {i} printed no digest:\n{out}"
+            d = json.loads(lines[-1][len("DIGEST "):])
+            assert d == ref, (
+                f"{mode}: worker {i} diverged from the uninterrupted "
+                f"reference:\n{d}\n!=\n{ref}")
+        n = len(ref["chunks"])
+        verb = "drain-and-rehome handoff" if mode == "drain" \
+            else "kill-one-host recovery"
+        print(f"elastic-smoke OK [{mode}]: {verb} == uninterrupted "
+              f"reference, bit-exact ({n} stream-chunks, served "
+              f"intervals {ref['served_cis']})")
+    assert os.path.exists(kill_trace_out), (
+        f"kill-scenario worker 0 left no {kill_trace_out}")
+    print(f"kill-scenario merged Chrome trace -> {kill_trace_out}")
+
+
 def smoke(trace_out: str = "fleet_trace.json",
           metrics_out: str = "fleet_metrics.jsonl",
-          profile: Optional[str] = None) -> None:
+          profile: Optional[str] = None,
+          kill_trace_out: str = "fleet_trace_kill.json") -> None:
     """The CI multihost-smoke: the 2-process ``jax.distributed`` serve
     (telemetry on) must match the single-process fallback bit-exactly —
     run both with the plane off and with it on, so the same assertion
@@ -345,6 +523,7 @@ def smoke(trace_out: str = "fleet_trace.json",
           f"{metrics_out}" + (f"; device profiles -> {profile}/host<k>"
                               if profile else ""))
     _print_stage_table(summaries[0])
+    elastic_smoke(kill_trace_out=kill_trace_out)
 
 
 def main(argv: Optional[List[str]] = None) -> None:
@@ -361,10 +540,13 @@ def main(argv: Optional[List[str]] = None) -> None:
     ap.add_argument("--profile", default=None, metavar="DIR",
                     help="capture jax.profiler device traces per worker "
                          "under DIR/host<k>")
+    ap.add_argument("--kill-trace-out", default="fleet_trace_kill.json",
+                    help="merged Chrome trace path for the elastic "
+                         "kill-one-host scenario (smoke)")
     args = ap.parse_args(sys.argv[1:] if argv is None else argv)
     if args.smoke:
         smoke(trace_out=args.trace_out, metrics_out=args.metrics_out,
-              profile=args.profile)
+              profile=args.profile, kill_trace_out=args.kill_trace_out)
         return
     ap.error("nothing to do (pass --smoke)")
 

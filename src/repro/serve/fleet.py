@@ -167,19 +167,19 @@ def host_payload(host: int, owned: Sequence[int], res: FleetResult) -> dict:
     thousand-stream fleets."""
     owned = list(owned)
     # which absolute chunk interval each camera_s entry belongs to: the
-    # serve loop appends one entry per *served* interval (all-quiet
-    # intervals append nothing), and every served interval produced at
-    # least one chunk carrying its ci — so the sorted served-ci set
-    # aligns 1:1 with camera_s. The merge needs this to max-combine
-    # hosts by interval, not by list position (hosts idle differently).
+    # serve loop records this explicitly (``FleetResult.served_cis`` —
+    # one entry per served interval, all-quiet intervals record
+    # nothing). The merge needs it to max-combine hosts by interval,
+    # not by list position (hosts idle differently), and failure-time
+    # re-serve dedup keys on it. Older results without the record fall
+    # back to position (run(): ci == position).
     aggregate = None
     if res.aggregate is not None:
         aggregate = res.aggregate.relabel(
             {lane: owned[lane] for lane in res.aggregate.stream_ids})
-        cis = sorted(set(aggregate.cis))
+    if res.served_cis is not None:
+        cis = [int(c) for c in res.served_cis]
     else:
-        cis = sorted({c.ci for run in res.streams for c in run.chunks})
-    if len(cis) != len(res.camera_s):  # run(): ci == position
         cis = list(range(len(res.camera_s)))
     return {
         "aggregate": None if aggregate is None else aggregate.to_wire(),
@@ -203,7 +203,8 @@ def host_payload(host: int, owned: Sequence[int], res: FleetResult) -> dict:
     }
 
 
-def merge_host_results(payloads: Sequence[dict]) -> FleetResult:
+def merge_host_results(payloads: Sequence[dict],
+                       elastic: bool = False) -> FleetResult:
     """Assemble the global :class:`FleetResult` from every host's
     payload (the cross-host reduction, run identically on all hosts).
 
@@ -223,8 +224,24 @@ def merge_host_results(payloads: Sequence[dict]) -> FleetResult:
     carries the merged aggregate with ``streams=[]``. Mixing windowed
     and per-chunk payloads in one gather is a configuration error
     (hosts must agree on ``detail=``) and raises ``ValueError``.
+
+    ``elastic=True`` is the dynamic-membership mode (:class:`HostEvent`
+    schedules): payloads arrive one per (host, segment) instead of one
+    per host, may carry ``"unit"``/``"seg"``/``"reserve"`` markers, and
+    the same stream legitimately appears in several payloads — a unit
+    re-homed mid-run, or a failed host's interval re-served by its
+    adopter from the last checkpoint (at-least-once). Per-chunk entries
+    dedup by absolute ``(sid, ci)``, preferring the original serve over
+    a ``reserve`` re-serve (they are bit-identical under ``sim_encode_s``
+    — the restored clock replays the same delays — so the preference
+    only fixes which *host* label wins); windowed aggregates are
+    cumulative per unit (resume imports the previous segment's state),
+    so each unit keeps its widest-coverage aggregate and units merge
+    disjointly. The non-elastic path is byte-identical to before and
+    still treats a duplicated stream id as the error it is.
     """
-    payloads = sorted(payloads, key=lambda p: p["host"])
+    payloads = sorted(payloads,
+                      key=lambda p: (p["host"], p.get("seg", 0)))
     with_agg = [p for p in payloads if p.get("aggregate") is not None]
     if with_agg and len(with_agg) != len(payloads):
         raise ValueError(
@@ -234,23 +251,12 @@ def merge_host_results(payloads: Sequence[dict]) -> FleetResult:
             f"{sorted(p['host'] for p in payloads if p.get('aggregate') is None)} "
             "shipped per-chunk streams; every host's engine must use "
             "the same detail= setting")
-    entries = []  # (sid, host, RunResult)
-    for p in payloads:
-        for s in p["streams"]:
-            entries.append((s["sid"], p["host"], RunResult(
-                f"accmpeg_fleet_host{p['host']}[{s['sid']}]",
-                [ChunkResult.from_wire(c) for c in s["chunks"]])))
-    counts = collections.Counter(sid for sid, _, _ in entries)
-    dupes = sorted(sid for sid, n in counts.items() if n > 1)
-    if dupes:
-        raise ValueError(f"two hosts reported the same stream id: "
-                         f"{dupes}")
-    entries.sort(key=lambda e: e[0])
     by_ci: dict = {}
     for p in payloads:
         for ci, cam in zip(p["camera_ci"], p["camera_s"]):
             by_ci[ci] = max(by_ci.get(ci, 0.0), cam)
     camera_s = [by_ci[ci] for ci in sorted(by_ci)]
+    served_cis = sorted(int(c) for c in by_ci)
     timing = FleetTiming.merge_concurrent([
         FleetTiming(camera_s=p["timing"]["camera_s"],
                     server_s=p["timing"]["server_s"],
@@ -260,24 +266,449 @@ def merge_host_results(payloads: Sequence[dict]) -> FleetResult:
                  for d in p["decisions"]]
     shapes = sorted({s for p in payloads for s in p["shapes"]})
     if with_agg:
-        parts = [AggregateResult.from_wire(p["aggregate"])
-                 for p in payloads]
-        host_of = {sid: p["host"]
-                   for p, part in zip(payloads, parts)
-                   for sid in part.stream_ids}
+        if elastic:
+            # aggregates are cumulative per unit (each segment resumes
+            # from the previous segment's imported state), so the
+            # widest-coverage payload per unit supersedes the rest —
+            # including a dead host's final publish, which its adopter's
+            # checkpoint-restored lineage strictly contains
+            best_agg: dict = {}
+            for p in payloads:
+                part = AggregateResult.from_wire(p["aggregate"])
+                uid = p.get("unit", p["host"])
+                rank = (len(part.cis), p.get("seg", 0))
+                if uid not in best_agg or rank > best_agg[uid][0]:
+                    best_agg[uid] = (rank, p["host"], part)
+            parts = [part for _, _, part in best_agg.values()]
+            host_of = {sid: host for _, host, part in best_agg.values()
+                       for sid in part.stream_ids}
+        else:
+            parts = [AggregateResult.from_wire(p["aggregate"])
+                     for p in payloads]
+            host_of = {sid: p["host"]
+                       for p, part in zip(payloads, parts)
+                       for sid in part.stream_ids}
         merged = AggregateResult.merge(parts)  # loud on dupe sids
         return FleetResult(
             streams=[], camera_s=camera_s, timing=timing,
             stream_ids=list(merged.stream_ids),
             decisions=decisions, shapes=shapes,
             hosts=[host_of[sid] for sid in merged.stream_ids],
-            aggregate=merged)
+            aggregate=merged, served_cis=served_cis)
+    if elastic:
+        # dedup by absolute (sid, ci): a re-homed unit contributes each
+        # interval from exactly one segment, and a failed host's
+        # re-served intervals (reserve) yield to the original publish
+        best: dict = {}  # (sid, ci) -> (priority, host, wire chunk)
+        for p in payloads:
+            prio = (1 if p.get("reserve") else 0, p["host"])
+            for s in p["streams"]:
+                for c in s["chunks"]:
+                    key = (int(s["sid"]), int(c["ci"]))
+                    if key not in best or prio < best[key][0]:
+                        best[key] = (prio, p["host"], c)
+        per_sid: dict = {}
+        for (sid, ci), (_, host, c) in best.items():
+            per_sid.setdefault(sid, []).append((ci, host, c))
+        entries = []
+        for sid in sorted(per_sid):
+            rows = sorted(per_sid[sid], key=lambda r: r[0])
+            entries.append((sid, rows[-1][1], RunResult(
+                f"accmpeg_fleet_elastic[{sid}]",
+                [ChunkResult.from_wire(c) for _, _, c in rows])))
+    else:
+        entries = []  # (sid, host, RunResult)
+        for p in payloads:
+            for s in p["streams"]:
+                entries.append((s["sid"], p["host"], RunResult(
+                    f"accmpeg_fleet_host{p['host']}[{s['sid']}]",
+                    [ChunkResult.from_wire(c) for c in s["chunks"]])))
+        counts = collections.Counter(sid for sid, _, _ in entries)
+        dupes = sorted(sid for sid, n in counts.items() if n > 1)
+        if dupes:
+            raise ValueError(f"two hosts reported the same stream id: "
+                             f"{dupes}")
+        entries.sort(key=lambda e: e[0])
     return FleetResult(
         streams=[run for _, _, run in entries],
         camera_s=camera_s, timing=timing,
         stream_ids=[sid for sid, _, _ in entries],
         decisions=decisions, shapes=shapes,
-        hosts=[host for _, host, _ in entries])
+        hosts=[host for _, host, _ in entries],
+        served_cis=served_cis)
+
+
+# ---------------------------------------------------------------------------
+# elastic host membership
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class HostEvent:
+    """One host-membership transition at a chunk-interval boundary.
+
+    - ``join``: the host starts serving its declared shard at ``chunk``
+      (its streams must be inactive before then — validated loudly).
+      The launcher may stagger the process's actual spawn; it still
+      participates in every exchange round from process start.
+    - ``drain``: planned departure. The host serves through ``chunk``,
+      checkpoints its serving state, and ``adopter`` restores it against
+      its own mesh and continues — bit-exact, nothing re-served.
+    - ``fail``: unplanned death *at* the boundary — the host publishes
+      its last segment's accounting but dies before checkpointing.
+      Survivors detect it by exchange timeout; ``adopter`` restores the
+      last checkpoint that *did* land and re-serves forward from it
+      (at-least-once; the merge dedups by absolute chunk interval).
+    """
+
+    chunk: int
+    host: int
+    kind: str
+    adopter: Optional[int] = None
+
+    def __post_init__(self):
+        if self.kind not in ("join", "drain", "fail"):
+            raise ValueError(f"unknown host event kind {self.kind!r}: "
+                             f"expected join, drain, or fail")
+        if self.chunk < 0:
+            raise ValueError(f"host event at negative chunk {self.chunk}")
+        if self.kind in ("drain", "fail"):
+            if self.adopter is None:
+                raise ValueError(f"{self.kind} event for host {self.host} "
+                                 f"names no adopter for its streams")
+            if int(self.adopter) == int(self.host):
+                raise ValueError(f"host {self.host} cannot adopt its own "
+                                 f"streams on {self.kind}")
+
+
+def rehome(topology: FleetTopology, departing: int,
+           adopter: int) -> FleetTopology:
+    """Re-home planner: the departing host's streams move to the
+    adopter, host slots preserved (indices keep meaning process ids).
+    The departing host's ownership becomes empty — it stays a (dead or
+    idle) member of the topology so nothing downstream renumbers."""
+    own = list(topology.ownership)
+    for h, what in ((departing, "departing"), (adopter, "adopter")):
+        if not 0 <= h < len(own):
+            raise ValueError(f"{what} host {h} is not in the topology "
+                             f"({len(own)} hosts)")
+    if departing == adopter:
+        raise ValueError(f"host {departing} cannot adopt itself")
+    own[adopter] = tuple(own[adopter]) + tuple(own[departing])
+    own[departing] = ()
+    return FleetTopology(tuple(own))
+
+
+def _active_at(initial, events, chunk: int):
+    """The active set *entering* interval ``chunk`` (replays the same
+    ``apply_churn`` the serve loop uses; the resumed loop re-applies the
+    event at ``chunk`` itself, so events before it are folded here)."""
+    from repro.control.autoscaler import apply_churn
+
+    active = list(initial)
+    for ci in range(chunk):
+        active = apply_churn(active, events, ci)
+    return active
+
+
+def _serve_state_tree(state: dict, include_refs: bool = True):
+    """Split an engine's exported resume state into the array tree
+    CheckpointManager persists and the JSON manifest extra riding
+    alongside (next_chunk, aggregate accumulators, field schema)."""
+    arrays = {}
+    for key in ("clock_free_at_s", "controller_level"):
+        if state.get(key) is not None:
+            arrays[key] = np.float64(state[key])
+    if include_refs and state.get("last_decoded") is not None:
+        arrays["last_decoded"] = np.asarray(state["last_decoded"])
+    fields = {k: [list(np.asarray(v).shape), str(np.asarray(v).dtype)]
+              for k, v in arrays.items()}
+    meta = {"next_chunk": int(state["next_chunk"]),
+            "agg": state.get("agg"), "fields": fields}
+    return arrays, meta
+
+
+def _serve_state_from(mgr, step: Optional[int] = None, mesh=None) -> dict:
+    """Rebuild a resume-state dict from a checkpoint. ``mesh`` is the
+    *adopting* engine's stream mesh: the warm decoded reference is
+    device_put against it when the lane count divides its width — the
+    elastic-rescale idiom promoted to the serving path."""
+    step = step if step is not None else mgr.latest_step()
+    meta = mgr.manifest(step)["extra"]
+    like = {k: np.zeros(tuple(shape), dtype=dtype)
+            for k, (shape, dtype) in meta["fields"].items()}
+    shardings = None
+    if mesh is not None and "last_decoded" in like:
+        from repro.distributed.sharding import stream_sharding
+
+        width = int(getattr(getattr(mesh, "devices", None), "size", 0))
+        if width > 1 and like["last_decoded"].shape[0] % width == 0:
+            shardings = {"last_decoded": stream_sharding(mesh)}
+    restored = mgr.restore(like, step=step, shardings=shardings)
+    return {
+        "next_chunk": int(meta["next_chunk"]),
+        "agg": meta.get("agg"),
+        "clock_free_at_s": None if "clock_free_at_s" not in restored
+        else float(restored["clock_free_at_s"]),
+        "controller_level": None if "controller_level" not in restored
+        else float(restored["controller_level"]),
+        "last_decoded": restored.get("last_decoded"),
+    }
+
+
+def _serve_fleet_elastic(make_engine, frames, topology: FleetTopology,
+                         events, initial, refs, net, rescale: bool,
+                         decide_every: int, ex, host_events,
+                         checkpoint_dir, segment_every: Optional[int],
+                         fail_timeout_s: float,
+                         checkpoint_refs: bool) -> FleetResult:
+    """The dynamic-membership serve driver: the run splits into segments
+    at host-event boundaries; each segment every live host serves its
+    homed *units* (a unit = one origin host's stream shard, which moves
+    whole on adoption and keeps its origin engine config so re-homed
+    accounting stays bit-exact), then the fleet gathers payloads,
+    checkpoints, detects failures (tolerant commit gather), and applies
+    the boundary's membership transitions."""
+    import os
+    from pathlib import Path
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.control.autoscaler import apply_churn
+
+    host_events = tuple(sorted(
+        host_events, key=lambda e: (e.chunk, e.kind != "join", e.host)))
+    n_hosts = topology.n_hosts
+    seen_kinds: dict = {}
+    for ev in host_events:
+        if not 0 <= ev.host < n_hosts:
+            raise ValueError(f"host event names host {ev.host}; topology "
+                             f"has {n_hosts}")
+        if ev.adopter is not None and not 0 <= ev.adopter < n_hosts:
+            raise ValueError(f"host event names adopter {ev.adopter}; "
+                             f"topology has {n_hosts}")
+        kinds = seen_kinds.setdefault(ev.host, [])
+        if any(k in ("drain", "fail") for k in kinds):
+            raise ValueError(f"host {ev.host} has events scheduled after "
+                             f"it leaves the fleet")
+        if ev.kind == "join" and kinds:
+            raise ValueError(f"host {ev.host} joins twice")
+        kinds.append(ev.kind)
+    departing_kinds = {ev.kind for ev in host_events}
+    if departing_kinds & {"drain", "fail"} and checkpoint_dir is None:
+        raise ValueError(
+            "drain/fail host events carry serving state through "
+            "CheckpointManager; pass checkpoint_dir=")
+
+    join_at = {ev.host: int(ev.chunk) for ev in host_events
+               if ev.kind == "join" and ev.chunk > 0}
+    if all(h in join_at for h in range(n_hosts)):
+        raise ValueError("every host joins mid-run; chunk 0 would have "
+                         "no serving host")
+
+    engines: dict = {}
+
+    def engine_for(uid: int):
+        if uid not in engines:
+            engines[uid] = make_engine(uid)
+        return engines[uid]
+
+    first_host = min(h for h in range(n_hosts) if h not in join_at)
+    cs = engine_for(first_host).chunk_size
+    T = frames.shape[1]
+    n_chunks = (T - T % cs) // cs
+    for ev in host_events:
+        hi = n_chunks if ev.kind == "join" else n_chunks - 1
+        lo = 0 if ev.kind == "join" else 1
+        if not lo <= ev.chunk <= hi:
+            raise ValueError(f"{ev.kind} event at chunk {ev.chunk} "
+                             f"cannot fire; schedule has {n_chunks} "
+                             f"intervals")
+
+    cuts = {int(ev.chunk) for ev in host_events
+            if 0 < ev.chunk < n_chunks}
+    if segment_every:
+        cuts |= set(range(int(segment_every), n_chunks,
+                          int(segment_every)))
+    bounds = [0] + sorted(cuts) + [n_chunks]
+
+    per_host_events = split_events(topology, events)
+    all_ids = list(range(frames.shape[0])) if initial is None \
+        else list(initial)
+    units: dict = {}
+    for h in range(n_hosts):
+        owned = list(topology.ownership[h])
+        g2l = {g: lane for lane, g in enumerate(owned)}
+        local_events = [
+            ChurnEvent(evc.chunk,
+                       join=tuple(g2l[s] for s in evc.join),
+                       leave=tuple(g2l[s] for s in evc.leave))
+            for evc in per_host_events[h]]
+        units[h] = {
+            "uid": h, "streams": owned, "events": local_events,
+            "initial": tuple(g2l[s] for s in all_ids if s in g2l),
+            "home": h, "resume": int(join_at.get(h, 0)), "state": None,
+            "needs_restore": False, "restore_step": None,
+            "reserve": False,
+        }
+    for h, jc in join_at.items():
+        active = list(units[h]["initial"])
+        if active:
+            raise ValueError(
+                f"host {h} joins at chunk {jc} but its streams "
+                f"{sorted(active)} (local lanes) are active from chunk "
+                f"0; a joiner's shard must be idle until it joins")
+        for ci in range(jc):
+            active = apply_churn(active, units[h]["events"], ci)
+            if active:
+                raise ValueError(
+                    f"host {h} joins at chunk {jc} but the churn "
+                    f"schedule activates its streams during interval "
+                    f"{ci}; a joiner's shard must be idle until it "
+                    f"joins")
+
+    mgrs: dict = {}
+
+    def mgr_for(uid: int) -> CheckpointManager:
+        if uid not in mgrs:
+            mgrs[uid] = CheckpointManager(
+                Path(checkpoint_dir) / f"unit{uid}", async_save=False)
+        return mgrs[uid]
+
+    ev_at: dict = {}
+    for ev in host_events:
+        if ev.kind == "join" and ev.chunk == 0:
+            continue
+        ev_at.setdefault(int(ev.chunk), []).append(ev)
+
+    distributed = ex.n_hosts > 1
+    me = ex.host
+    joined = {h for h in range(n_hosts) if join_at.get(h, 0) == 0}
+    departed: set = set()
+    curr_topology = topology
+    all_payloads: list = []
+
+    for k, (a, b) in enumerate(zip(bounds, bounds[1:])):
+        seg_payloads = []
+        served_units = []
+        for uid in sorted(units):
+            u = units[uid]
+            if not u["streams"]:  # a host may own nothing until it adopts
+                continue
+            if u["home"] in departed or u["home"] not in joined:
+                continue
+            if distributed and u["home"] != me:
+                continue
+            eng = engine_for(uid)
+            if u["needs_restore"]:
+                mgr = mgr_for(uid)
+                if mgr.steps():
+                    mesh = eng.mesh \
+                        if not isinstance(eng.mesh, str) else None
+                    st = _serve_state_from(mgr, step=u["restore_step"],
+                                           mesh=mesh)
+                    u["state"] = st
+                    u["resume"] = int(st["next_chunk"])
+                else:
+                    # failed before its first checkpoint landed:
+                    # re-serve the unit's whole history (still
+                    # at-least-once; the merge dedups)
+                    u["state"] = None
+                    u["resume"] = int(join_at.get(uid, 0))
+                u["needs_restore"] = False
+            if u["resume"] >= b:
+                continue
+            local_refs = None if refs is None \
+                else [refs[g] for g in u["streams"]]
+            init_now = _active_at(u["initial"], u["events"], u["resume"])
+            res = eng.serve_loop(
+                frames[u["streams"]], events=u["events"],
+                initial=tuple(init_now), refs=local_refs, net=net,
+                rescale=rescale, decide_every=decide_every,
+                owned=tuple(range(len(u["streams"]))),
+                start_chunk=u["resume"], stop_chunk=b,
+                state=u["state"])
+            u["state"] = eng.last_serve_state
+            u["resume"] = b
+            p = host_payload(u["home"], u["streams"], res)
+            p["unit"] = uid
+            p["seg"] = k
+            p["reserve"] = bool(u["reserve"])
+            seg_payloads.append(p)
+            served_units.append(u)
+
+        gathered = ex.allgather(f"fleet_seg{k}", seg_payloads)
+        for host_list in gathered:
+            all_payloads.extend(host_list)
+
+        fail_evs = [ev for ev in ev_at.get(b, []) if ev.kind == "fail"]
+        if distributed and any(ev.host == me for ev in fail_evs):
+            # the injected fault: die *after* publishing the segment's
+            # accounting but *before* checkpointing — survivors must
+            # recover the interval from the previous checkpoint
+            os._exit(0)
+
+        if checkpoint_dir is not None:
+            failing = {ev.host for ev in fail_evs}
+            for u in served_units:
+                if u["home"] in failing:  # local-mode fault simulation
+                    continue
+                arrays, meta = _serve_state_tree(
+                    u["state"], include_refs=checkpoint_refs)
+                mgr_for(u["uid"]).save(b, arrays, extra=meta)
+
+        if distributed:
+            # commit round doubles as the failure detector: scheduled
+            # deaths get a short per-host timeout; a timeout marks the
+            # host failed and later gathers skip it
+            ex.tolerant_allgather(
+                f"fleet_commit{k}", {"host": int(me), "ok": True},
+                tolerate={ev.host for ev in fail_evs},
+                timeout_s=fail_timeout_s)
+        else:
+            for ev in fail_evs:
+                ex.mark_failed(ev.host)
+
+        for ev in ev_at.get(b, []):  # joins first (sorted above), so a
+            if ev.kind == "join":    # joiner can adopt at its boundary
+                joined.add(ev.host)
+        for ev in ev_at.get(b, []):
+            if ev.kind not in ("drain", "fail"):
+                continue
+            if ev.adopter not in joined or ev.adopter in departed:
+                raise ValueError(
+                    f"adopter {ev.adopter} is not a live joined host at "
+                    f"chunk {b} (joined={sorted(joined)}, "
+                    f"departed={sorted(departed)})")
+            departed.add(ev.host)
+            curr_topology = rehome(curr_topology, ev.host, ev.adopter)
+            for u in units.values():
+                if u["home"] == ev.host:
+                    u["home"] = ev.adopter
+                    u["state"] = None
+                    u["needs_restore"] = True
+                    u["restore_step"] = b if ev.kind == "drain" else None
+                    if ev.kind == "fail":
+                        u["reserve"] = True
+                    # the adopter builds a fresh engine for the unit
+                    # (same origin config — make_engine(uid) — so the
+                    # re-homed accounting stays bit-exact)
+                    engines.pop(u["uid"], None)
+
+    global LAST_OBS_GATHER
+    LAST_OBS_GATHER = None
+    tracer = obs_trace.get_tracer()
+    reg = obs_metrics.get_metrics()
+    if tracer is not None or reg is not None:
+        obs_gathered = ex.allgather("fleet_obs", {
+            "host": int(ex.host),
+            "spans": None if tracer is None else tracer.payload(),
+            "metrics": None if reg is None else reg.series(),
+        })
+        if tracer is not None:
+            for p in obs_gathered:
+                if p["spans"] is not None:
+                    tracer.adopt(p["spans"])
+        LAST_OBS_GATHER = obs_gathered
+
+    return merge_host_results(all_payloads, elastic=True)
 
 
 # ---------------------------------------------------------------------------
@@ -287,7 +718,10 @@ def serve_fleet(make_engine: Callable[[int], "object"], frames,
                 topology: FleetTopology, events: Sequence[ChurnEvent] = (),
                 initial: Optional[Sequence[int]] = None, refs=None,
                 net=None, rescale: bool = False, decide_every: int = 1,
-                exchange=None) -> FleetResult:
+                exchange=None, host_events: Sequence[HostEvent] = (),
+                checkpoint_dir=None, segment_every: Optional[int] = None,
+                fail_timeout_s: float = 20.0,
+                checkpoint_refs: bool = True) -> FleetResult:
     """Serve a churned fleet across the topology's ingestion hosts.
 
     ``make_engine(host)`` builds the host's ``MultiStreamEngine`` — this
@@ -303,6 +737,20 @@ def serve_fleet(make_engine: Callable[[int], "object"], frames,
     :class:`FleetResult`. Without it, the same call simulates every
     host sequentially in-process through the same merge — the local
     fallback existing callers get by default.
+
+    ``host_events`` makes the *host set* elastic (:class:`HostEvent`:
+    join/drain/fail at interval boundaries): the run splits into
+    segments, departing hosts' stream shards re-home to survivors via
+    :func:`rehome`, serving state travels through ``CheckpointManager``
+    under ``checkpoint_dir`` (required for drain/fail; it must be a
+    path every host can reach), ``segment_every`` adds periodic
+    checkpoint boundaries so an unplanned failure loses at most one
+    segment of progress, ``fail_timeout_s`` bounds failure detection,
+    and ``checkpoint_refs=False`` drops the (large) warm decoded
+    reference from checkpoints when only accounting continuity matters.
+    Both runtimes — distributed and the local fallback — drive the same
+    segment/merge machinery, so the 2-process parity guarantee extends
+    to elastic runs.
     """
     from repro.distributed import multihost
 
@@ -325,6 +773,11 @@ def serve_fleet(make_engine: Callable[[int], "object"], frames,
         raise ValueError(f"{ex.n_hosts} processes joined the fleet but "
                          f"the topology declares {topology.n_hosts} "
                          f"hosts")
+    if host_events:
+        return _serve_fleet_elastic(
+            make_engine, frames, topology, events, initial, refs, net,
+            rescale, decide_every, ex, host_events, checkpoint_dir,
+            segment_every, fail_timeout_s, checkpoint_refs)
     my_hosts = [ex.host] if ex.n_hosts > 1 \
         else list(range(topology.n_hosts))
 

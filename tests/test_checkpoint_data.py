@@ -123,3 +123,58 @@ def test_prefetching_loader_sequential(tmp_path):
             break
     loader.close()
     assert steps == [10, 11, 12]
+
+
+def test_crash_during_resave_preserves_old_checkpoint(tmp_path):
+    """Kill a subprocess between the rename-aside and the landing of a
+    re-save: the original checkpoint must survive (recovered from its
+    ``.old-`` copy) with its original bytes — a crash mid-re-save can
+    never lose the step."""
+    import subprocess
+    import sys
+    import textwrap
+
+    body = textwrap.dedent(f"""
+        import os
+        import numpy as np
+        from repro.checkpoint.manager import CheckpointManager
+        mgr = CheckpointManager({str(tmp_path)!r}, async_save=False)
+        mgr.save(0, {{"a": np.full((4,), 1.0)}}, extra={{"gen": 1}})
+        real = os.replace
+        def dying(src, dst, *a, **k):
+            real(src, dst, *a, **k)
+            if ".old-" in str(dst):
+                os._exit(17)  # die before the new dir replaces the old
+        os.replace = dying
+        mgr.save(0, {{"a": np.full((4,), 2.0)}}, extra={{"gen": 2}})
+    """)
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", body], env=env,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 17, proc.stderr
+    # only the crash-window .old- orphan is on disk; steps() recovers it
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    assert mgr.steps() == [0]
+    restored = mgr.restore({"a": np.zeros(4)})
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.full((4,), 1.0))
+    assert mgr.manifest(0)["extra"]["gen"] == 1
+
+
+def test_restore_races_retention(tmp_path):
+    """Async saves (whose background thread runs retention deletes) racing
+    ``restore(latest_step())`` on the main thread: every restore must see
+    an intact checkpoint for the step it picked — the retention lock keeps
+    ``_gc`` from deleting a directory mid-read."""
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=True)
+    base = np.arange(64, dtype=np.float64)
+    for s in range(20):
+        mgr.save(s, {"a": base + s})
+        step = mgr.latest_step()
+        assert step is not None
+        restored = mgr.restore({"a": np.zeros(64)}, step=step)
+        np.testing.assert_array_equal(np.asarray(restored["a"]), base + step)
+    mgr.wait()
+    assert mgr.steps() == [18, 19]

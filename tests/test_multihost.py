@@ -315,3 +315,88 @@ def test_two_process_parity_bit_exact():
     # the digest really carried served work from both hosts
     assert reference["hosts"] == [0, 0, 1, 1]
     assert all(b > 0 for _, _, b, *_ in reference["chunks"])
+
+
+# ---------------------------------------------------------------------------
+# elastic host membership (HostEvent / rehome / elastic merge / re-homing)
+# ---------------------------------------------------------------------------
+def test_host_event_validation_is_loud():
+    from repro.serve.fleet import HostEvent
+
+    HostEvent(0, host=1, kind="join")
+    HostEvent(2, host=0, kind="drain", adopter=1)
+    with pytest.raises(ValueError, match="unknown host event kind"):
+        HostEvent(0, host=0, kind="leave")
+    with pytest.raises(ValueError, match="negative chunk"):
+        HostEvent(-1, host=0, kind="join")
+    with pytest.raises(ValueError, match="no adopter"):
+        HostEvent(1, host=0, kind="fail")
+    with pytest.raises(ValueError, match="cannot adopt its own"):
+        HostEvent(1, host=0, kind="drain", adopter=0)
+
+
+def test_rehome_moves_shard_and_keeps_slots():
+    from repro.serve.fleet import rehome
+
+    topo = FleetTopology(((0, 1), (2,), (3,)))
+    moved = rehome(topo, departing=0, adopter=2)
+    assert moved.ownership == ((), (2,), (3, 0, 1))
+    assert moved.owner_of(1) == 2  # adopted
+    assert moved.owner_of(2) == 1  # untouched host keeps its slot
+    with pytest.raises(ValueError, match="cannot adopt itself"):
+        rehome(topo, 1, 1)
+    with pytest.raises(ValueError, match="not in the topology"):
+        rehome(topo, 5, 0)
+
+
+def test_merge_elastic_dedups_reserved_intervals():
+    """At-least-once recovery: the adopter re-serves the failed host's
+    already-published interval flagged ``reserve`` — the merge must keep
+    the original publish for that interval, take the adopter's rows for
+    the later ones, and never emit a duplicate (sid, ci)."""
+    orig = _fake_payload(1, [5], ci0=1)
+    orig["streams"][0]["chunks"][0]["bytes"] = 111.0  # marker
+    readopt = _fake_payload(0, [5], ci0=1)
+    readopt["reserve"] = True
+    readopt["seg"] = 1
+    extra = dict(readopt["streams"][0]["chunks"][0], ci=2)
+    readopt["streams"][0]["chunks"].append(extra)
+    merged = merge_host_results([orig, readopt], elastic=True)
+    assert merged.stream_ids == [5]
+    chunks = merged.streams[0].chunks
+    assert [c.ci for c in chunks] == [1, 2]
+    assert chunks[0].bytes == 111.0  # original publish beat the re-serve
+    assert merged.hosts == [0]  # the stream's final home is the adopter
+    # the non-elastic path keeps the loud duplicate-sid contract
+    with pytest.raises(ValueError, match="same stream id"):
+        merge_host_results([orig, readopt])
+
+
+def test_two_process_rehome_parity_bit_exact():
+    """The elastic acceptance criterion: host 0 drains at chunk 2 and
+    hands its checkpointed shard to the mid-run joiner; the merged
+    2-process result bit-matches the never-drained single-host reference
+    under the deterministic sim_encode_s accounting."""
+    import tempfile
+
+    from repro.launch.fleet import _elastic_digest, _elastic_smoke_result
+
+    reference = json.loads(json.dumps(
+        _elastic_digest(_elastic_smoke_result("drain_ref", None)),
+        sort_keys=True))
+    with tempfile.TemporaryDirectory() as ckpt:
+        body = """
+            import json
+            from repro.launch.fleet import (_elastic_digest,
+                                            _elastic_smoke_result)
+            res = _elastic_smoke_result("drain", """ + repr(ckpt) + """)
+            print("DIGEST " + json.dumps(_elastic_digest(res),
+                                         sort_keys=True))
+        """
+        outs = run_fleet(body, num_processes=2, timeout=600)
+    for i, out in enumerate(outs):
+        lines = [ln for ln in out.splitlines() if ln.startswith("DIGEST ")]
+        assert lines, f"worker {i} printed no digest:\n{out}"
+        assert json.loads(lines[-1][len("DIGEST "):]) == reference, \
+            f"worker {i} diverged from the never-drained reference"
+    assert reference["served_cis"] == [0, 1, 2, 3]  # no lost interval

@@ -152,3 +152,25 @@ def test_mean_session_length_calibrated():
     assert len(lens) > 100
     m = float(np.mean(lens))
     assert 3.0 < m < 7.0  # mean 4 target, ceil-biased, heavy tail
+
+
+def test_initial_truncation_counts_blocked():
+    """Regression: truncating ``initial_streams`` to ``max_concurrent``
+    must count every refused initial stream as a blocked arrival,
+    exactly like the identical mid-run headroom check does — the t=0
+    undercount skewed BENCH_loadtest's blocked-arrival accounting."""
+    wl = make_workload(n_chunks=1, rate_per_chunk=0.0, seed=0,
+                       initial_streams=10, max_concurrent=4)
+    assert len(wl.initial) == 4
+    assert wl.n_blocked == 6
+    # no truncation -> no phantom blocks
+    wl2 = make_workload(n_chunks=1, rate_per_chunk=0.0, seed=0,
+                        initial_streams=3, max_concurrent=4)
+    assert len(wl2.initial) == 3
+    assert wl2.n_blocked == 0
+    # the id-space cap path still counts separately (alloc refusal)
+    wl3 = make_workload(n_chunks=1, rate_per_chunk=0.0, seed=0,
+                        initial_streams=6, max_concurrent=8,
+                        max_streams=2)
+    assert len(wl3.initial) == 2
+    assert wl3.n_blocked == 4
