@@ -60,7 +60,7 @@ def mid_stream_rescale():
     from repro.core.pipeline import NetworkConfig, make_reference
     from repro.core.quality import QualityConfig
     from repro.data.video import make_scene
-    from repro.engine import MultiStreamEngine
+    from repro.engine import EngineConfig, MultiStreamEngine
 
     dnn, am = _models()
     qcfg = QualityConfig(alpha=0.3, gamma=2, qp_hi=30, qp_lo=42)
@@ -83,9 +83,9 @@ def mid_stream_rescale():
             # the N_max shape and reuse it unconditionally, whole schedule
             scaler = FleetAutoscaler(reuse_slack=float("inf"))
             scaler.admit(N_MAX, mesh_width=1)
-        engine = MultiStreamEngine(dnn, am, qcfg, net=net,
-                                   chunk_size=CHUNK, impl="fast",
-                                   autoscaler=scaler, fps=FPS)
+        engine = MultiStreamEngine(dnn, am, config=EngineConfig(
+            qcfg=qcfg, net=net, chunk_size=CHUNK, impl="fast",
+            autoscaler=scaler, fps=FPS))
         res = engine.serve_loop(frames, events=events, refs=refs,
                                 rescale=(name == "adaptive"))
         tails = _interval_tails(res)
@@ -126,7 +126,7 @@ def smoke():
     from repro.control import ChurnEvent, FleetAutoscaler
     from repro.core.accmodel import AccModel, accmodel_init
     from repro.data.video import make_scene
-    from repro.engine import MultiStreamEngine
+    from repro.engine import EngineConfig, MultiStreamEngine
     from repro.vision.dnn import FinalDNN, init_net
 
     h, w = 64, 112
@@ -136,9 +136,9 @@ def smoke():
     frames = np.stack([
         make_scene("dashcam", seed=5 + i, T=3 * CHUNK, H=h, W=w).frames
         for i in range(2)])
-    engine = MultiStreamEngine(dnn, am, impl="fast",
-                               autoscaler=FleetAutoscaler(), fps=FPS,
-                               chunk_size=CHUNK)
+    engine = MultiStreamEngine(dnn, am, config=EngineConfig(
+        impl="fast", autoscaler=FleetAutoscaler(), fps=FPS,
+        chunk_size=CHUNK))
     res = engine.serve_loop(
         frames, initial=(0,),
         events=[ChurnEvent(1, join=(1,)), ChurnEvent(2, leave=(0,))])

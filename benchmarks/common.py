@@ -85,6 +85,17 @@ HEADLINE_KEYS = {
         # windowed aggregate bit-matches the fixed-host reference
         "loadtest/elastic_hosts": ("match",),
     },
+    "multitask": {
+        # accuracies (0..1) are machine-portable like ratios are; the
+        # uniform-QP and autoencoder comparison rows stay informational
+        "fig7_seg/accmpeg": ("acc",),
+        "fig7_kp/accmpeg": ("acc",),
+    },
+    "multitenant": {
+        # dedicated/shared server-compute ratio at equal accuracy (the
+        # met flag additionally pins the >=1.3x + accuracy-parity gate)
+        "multitenant/shared_vs_dedicated": ("ratio",),
+    },
     # telemetry overhead is lower-is-better so the ratio rule does not
     # apply; its gate is the met=yes verdict flags (collected for every
     # row regardless of headline keys)

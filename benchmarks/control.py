@@ -126,7 +126,7 @@ def autoscaler_demo():
     from repro.core.pipeline import make_reference
     from repro.core.quality import QualityConfig
     from repro.data.video import make_scene
-    from repro.engine import MultiStreamEngine
+    from repro.engine import EngineConfig, MultiStreamEngine
 
     dnn, am = _models()
     qcfg = QualityConfig(alpha=0.3, gamma=2, qp_hi=30, qp_lo=42)
@@ -136,10 +136,9 @@ def autoscaler_demo():
     refs = [make_reference(s.frames, dnn, qp_hi=30, chunk_size=CHUNK)
             for s in scenes]
     scaler = FleetAutoscaler()
-    engine = MultiStreamEngine(dnn, am, qcfg, chunk_size=CHUNK,
-                               impl="fast", autoscaler=scaler,
-                               trace=make_trace("lte", seed=1),
-                               controller=RateController())
+    engine = MultiStreamEngine(dnn, am, config=EngineConfig(
+        qcfg=qcfg, chunk_size=CHUNK, impl="fast", autoscaler=scaler,
+        trace=make_trace("lte", seed=1), controller=RateController()))
     res = engine.run(np.stack([s.frames for s in scenes]), refs=refs)
     from repro.control.autoscaler import stage_occupancy
 

@@ -79,14 +79,14 @@ def _fleet_frames(n: int, n_chunks: int) -> np.ndarray:
 
 def _engine(dnn, am, detail, wl, net, device_reduce=True):
     from repro.control import FleetAutoscaler
-    from repro.engine import MultiStreamEngine
+    from repro.engine import EngineConfig, MultiStreamEngine
 
-    return MultiStreamEngine(
-        dnn, am, net=net, chunk_size=CHUNK, impl="fast",
+    return MultiStreamEngine(dnn, am, config=EngineConfig(
+        net=net, chunk_size=CHUNK, impl="fast",
         autoscaler=FleetAutoscaler(), fps=FPS,
         sim_encode_s=SIM_ENCODE_S, detail=detail,
         aggregate=wl.aggregate_config(window=CHUNK, n_windows=64),
-        device_reduce=device_reduce)
+        device_reduce=device_reduce))
 
 
 def _serve(engine, wl, frames, net):

@@ -118,7 +118,7 @@ def fleet_pipeline_overlap():
     from repro.core.pipeline import make_reference, pipeline_makespan
     from repro.core.quality import QualityConfig
     from repro.data.video import make_scene
-    from repro.engine import MultiStreamEngine
+    from repro.engine import EngineConfig, MultiStreamEngine
     from repro.vision.dnn import FinalDNN, init_net
 
     # width 8 fleet-cam serving regime; D(H) references are precomputed
@@ -135,8 +135,8 @@ def fleet_pipeline_overlap():
                    init_net("detection", jax.random.PRNGKey(1), width=8))
     refs = [make_reference(s.frames, dnn, qp_hi=30, chunk_size=CHUNK)
             for s in scenes]
-    engines = {ov: MultiStreamEngine(dnn, am, qcfg, chunk_size=CHUNK,
-                                     impl="fast", overlap=ov)
+    engines = {ov: MultiStreamEngine(dnn, am, config=EngineConfig(
+                       qcfg=qcfg, chunk_size=CHUNK, impl="fast", overlap=ov))
                for ov in (False, True)}
     for eng in engines.values():
         eng.run(frames, refs=refs)  # warm the whole loop (compiles+caches)
@@ -162,7 +162,7 @@ def fleet_accuracy_accounting():
     from repro.core.pipeline import NetworkConfig, make_reference
     from repro.core.quality import QualityConfig
     from repro.data.video import make_scene
-    from repro.engine import MultiStreamEngine
+    from repro.engine import EngineConfig, MultiStreamEngine
 
     n = 4
     dnn = final_dnn()
@@ -172,7 +172,8 @@ def fleet_accuracy_accounting():
               for i in range(n)]
     refs = [make_reference(s.frames, dnn, qp_hi=QP_HI) for s in scenes]
     net = NetworkConfig.shared(2.5e6, n)
-    fleet = MultiStreamEngine(dnn, am, qcfg, net=net).run(
+    fleet = MultiStreamEngine(
+        dnn, am, config=EngineConfig(qcfg=qcfg, net=net)).run(
         np.stack([s.frames for s in scenes]), refs=refs)
     s = fleet.summary()
     emit("multistream/fleet_e2e", s["camera_s_per_chunk"] * 1e6,

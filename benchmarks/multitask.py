@@ -110,3 +110,32 @@ def autoencoder_baseline():
     emit("fig7_ae/autoencoder", float(np.mean(delays)) * 1e6,
          f"acc={np.mean(accs):.4f};bytes={np.mean(nbytes):.0f};"
          f"recon_mse={float(l):.5f}")
+
+
+def run():
+    """All three multi-task rows in one bench leg (regression-guarded
+    via HEADLINE_KEYS["multitask"] + BENCH_multitask.json)."""
+    fig7_segmentation()
+    fig7_keypoint()
+    autoencoder_baseline()
+
+
+def smoke():
+    """Fast plumbing check with untrained tiny models: the seg and kp
+    task families run end to end through the streaming engine."""
+    import jax
+
+    from repro.core.accmodel import AccModel, accmodel_init
+    from repro.data.video import make_scene
+    from repro.vision.dnn import FinalDNN, init_net
+
+    for task in ("segmentation", "keypoint"):
+        dnn = FinalDNN(task, init_net(task, jax.random.PRNGKey(0), width=8))
+        am = AccModel(accmodel_init(jax.random.PRNGKey(1), 8))
+        scene = make_scene("surf", seed=7, T=10, H=64, W=112)
+        refs = make_reference(scene.frames, dnn, qp_hi=QP_HI)
+        qc = QualityConfig(alpha=0.4, gamma=2, qp_hi=QP_HI, qp_lo=42)
+        r = StreamingEngine(dnn).run(AccMPEGPolicy(am, qc), scene.frames,
+                                     refs=refs)
+        assert np.isfinite(r.accuracy), task
+        print(f"multitask smoke ok: {task} acc={r.accuracy:.4f}")

@@ -62,13 +62,13 @@ def _frames():
 
 def _engine():
     from repro.core.pipeline import NetworkConfig
-    from repro.engine import MultiStreamEngine
+    from repro.engine import EngineConfig, MultiStreamEngine
 
     dnn, am = _models()
-    return MultiStreamEngine(
-        dnn, am, impl="fast", chunk_size=CHUNK,
+    return MultiStreamEngine(dnn, am, config=EngineConfig(
+        impl="fast", chunk_size=CHUNK,
         net=NetworkConfig.shared(2.5e6, N_STREAMS),
-        sim_encode_s=SIM_ENCODE_S)
+        sim_encode_s=SIM_ENCODE_S))
 
 
 def _digest(res) -> list:

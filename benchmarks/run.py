@@ -15,13 +15,13 @@ import traceback
 #: benches whose rows are also persisted as BENCH_<name>.json at the repo
 #: root (machine-readable perf trajectory across PRs)
 JSON_BENCHES = ("control", "multistream", "churn", "kernels", "loadtest",
-                "obs")
+                "obs", "multitask", "multitenant")
 
 
 def main() -> None:
     from benchmarks import (churn, control, kernel_bench, loadtest,
-                            multistream, multitask, obs_overhead,
-                            paper_figs, roofline)
+                            multistream, multitask, multitenant,
+                            obs_overhead, paper_figs, roofline)
 
     benches = {
         "control": control.run,
@@ -29,6 +29,8 @@ def main() -> None:
         "loadtest": loadtest.run,
         "obs": obs_overhead.run,
         "multistream": multistream.run,
+        "multitask": multitask.run,
+        "multitenant": multitenant.run,
         "fig6": paper_figs.fig6_stability,
         "fig7": paper_figs.fig7_tradeoff,
         "fig7seg": multitask.fig7_segmentation,

@@ -19,7 +19,8 @@ def main():
     from repro.core.quality import QualityConfig
     from repro.core.training import train_accmodel
     from repro.data.video import make_scene
-    from repro.engine import AccMPEGPolicy, MultiStreamEngine, StreamingEngine
+    from repro.engine import (AccMPEGPolicy, EngineConfig, MultiStreamEngine,
+                              StreamingEngine)
     from repro.vision.train import train_final_dnn
 
     H, W = 192, 320
@@ -44,7 +45,8 @@ def main():
 
     print(f"serving {n_streams} camera streams "
           f"({net.uplink_bps / 1e6:.1f} Mbps shared uplink, rtt 100 ms)\n")
-    fleet = MultiStreamEngine(dnn, accmodel, qcfg, net=net).run(
+    fleet = MultiStreamEngine(
+        dnn, accmodel, config=EngineConfig(qcfg=qcfg, net=net)).run(
         fleet_frames, refs=refs)
     for cam, r in enumerate(fleet.streams):
         s = r.summary()

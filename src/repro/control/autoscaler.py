@@ -85,11 +85,24 @@ def apply_churn(active: Sequence[int], events: Sequence[ChurnEvent],
 
 @dataclasses.dataclass(frozen=True)
 class ScaleDecision:
-    """What the fleet should look like for the next serving interval."""
+    """What the fleet should look like for the next serving interval.
+
+    ``tenant_share`` (multi-tenant fleets only) is the capacity split:
+    tenant t's fraction of the fleet's serving lanes for the next
+    interval, proportional to gathered per-tenant occupancy. ``None`` on
+    single-tenant fleets — the wire dict then omits nothing and old
+    payloads reconstruct unchanged.
+    """
 
     mesh_width: int
     batch_depth: int  # chunks in flight; 1 = serialized, >=2 = overlapped
     reason: str
+    tenant_share: Optional[Tuple[float, ...]] = None
+
+    def __post_init__(self):
+        if self.tenant_share is not None:
+            object.__setattr__(self, "tenant_share",
+                               tuple(float(x) for x in self.tenant_share))
 
     @property
     def overlap(self) -> bool:
@@ -162,13 +175,28 @@ class FleetAutoscaler:
     # -- scaling --------------------------------------------------------------
     def decide(self, timing: FleetTiming, n_streams: int,
                mesh_width: int = 1, batch_depth: int = 2,
-               n_devices: Optional[int] = None) -> ScaleDecision:
+               n_devices: Optional[int] = None,
+               tenant_streams: Optional[Sequence[int]] = None,
+               ) -> ScaleDecision:
         """Pick the next (mesh_width, batch_depth) from measured timing.
         One record point for the telemetry plane: every decision — from
         any of the policy's exit paths, and from the cross-host subclass
-        via ``super().decide`` — lands here exactly once."""
+        via ``super().decide`` — lands here exactly once.
+
+        ``tenant_streams`` (multi-tenant fleets): per-tenant active
+        stream counts for the interval; the decision then carries
+        ``tenant_share`` — each tenant's fraction of serving capacity,
+        proportional to its occupancy of the fleet's lanes (tenants share
+        the stacked-params fleet program, so lanes ARE the capacity
+        grain; a tenant with no active streams gets share 0.0)."""
         d = self._decide(timing, n_streams, mesh_width=mesh_width,
                          batch_depth=batch_depth, n_devices=n_devices)
+        if tenant_streams is not None:
+            counts = np.asarray(list(tenant_streams), np.float64)
+            total = float(counts.sum())
+            share = tuple(counts / total) if total > 0 else \
+                tuple(0.0 for _ in counts)
+            d = dataclasses.replace(d, tenant_share=share)
         changed = (d.mesh_width, d.batch_depth) != (mesh_width, batch_depth)
         reg = obs_metrics.get_metrics()
         if reg is not None:
@@ -327,7 +355,9 @@ class CrossHostAutoscaler(FleetAutoscaler):
 
     def decide(self, timing: FleetTiming, n_streams: int,
                mesh_width: int = 1, batch_depth: int = 2,
-               n_devices: Optional[int] = None) -> ScaleDecision:
+               n_devices: Optional[int] = None,
+               tenant_streams: Optional[Sequence[int]] = None,
+               ) -> ScaleDecision:
         if n_devices is None:
             from repro.distributed.sharding import host_local_devices
 
@@ -339,6 +369,8 @@ class CrossHostAutoscaler(FleetAutoscaler):
             "wall_s": float(timing.wall_s),
             "n_streams": int(n_streams),
             "n_devices": int(n_devices),
+            "tenant_streams": None if tenant_streams is None
+            else [int(x) for x in tenant_streams],
         }
         gathered = self.exchange.allgather("autoscaler_decide", local)
         agg = FleetTiming(wall_s=max(g["wall_s"] for g in gathered))
@@ -347,6 +379,20 @@ class CrossHostAutoscaler(FleetAutoscaler):
             agg.server_s.extend(g["server_s"])
             agg.host_s.extend(g["host_s"])
         total = sum(g["n_streams"] for g in gathered)
+        # per-tenant occupancy is summed fleet-wide: the capacity split
+        # is a global agreement like the rest of the decision (hosts that
+        # sent None contribute nothing — e.g. a round mixing tenanted and
+        # untenanted engines is a topology bug surfaced by length mismatch)
+        t_counts = None
+        per_host = [g["tenant_streams"] for g in gathered
+                    if g.get("tenant_streams") is not None]
+        if per_host:
+            lens = {len(ts) for ts in per_host}
+            if len(lens) != 1:
+                raise ValueError(f"hosts disagree on tenant count: "
+                                 f"{sorted(lens)}")
+            t_counts = [sum(ts[t] for ts in per_host)
+                        for t in range(lens.pop())]
         # mesh_width/batch_depth stay host-local knobs, but the decision
         # must be identical on every host even when device counts differ
         # — so the width ceiling is the *gathered minimum* device count
@@ -354,7 +400,8 @@ class CrossHostAutoscaler(FleetAutoscaler):
         return super().decide(agg, total, mesh_width=mesh_width,
                               batch_depth=batch_depth,
                               n_devices=min(g["n_devices"]
-                                            for g in gathered))
+                                            for g in gathered),
+                              tenant_streams=t_counts)
 
 
 def pad_streams(frames: np.ndarray, n_padded: int) -> np.ndarray:

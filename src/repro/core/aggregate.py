@@ -340,11 +340,19 @@ class AggregateConfig:
     reservoir: int = 2048
     seed: int = 0
 
-    def build(self) -> "FleetAggregator":
+    def build(self, tenant_of: Optional[Mapping[int, int]] = None,
+              tenant_tiers: Optional[Sequence[Sequence[SLOTier]]] = None,
+              ) -> "FleetAggregator":
+        """Build the aggregator; a tenanted engine threads its stream ->
+        tenant map and per-tenant SLO ladders through here (they are
+        serving-plane wiring, not user aggregation policy, so they ride
+        as build arguments rather than config fields)."""
         return FleetAggregator(window=self.window, n_windows=self.n_windows,
                                tiers=self.tiers, tier_of=self.tier_of,
                                quantile=self.quantile,
-                               reservoir=self.reservoir, seed=self.seed)
+                               reservoir=self.reservoir, seed=self.seed,
+                               tenant_of=tenant_of,
+                               tenant_tiers=tenant_tiers)
 
 
 class FleetAggregator:
@@ -368,7 +376,9 @@ class FleetAggregator:
                  tiers: Sequence[SLOTier] = DEFAULT_TIERS,
                  tier_of: Optional[Mapping[int, str]] = None,
                  quantile: float = 0.9, reservoir: int = 2048,
-                 seed: int = 0):
+                 seed: int = 0,
+                 tenant_of: Optional[Mapping[int, int]] = None,
+                 tenant_tiers: Optional[Sequence[Sequence[SLOTier]]] = None):
         if window < 1:
             raise ValueError("window must be >= 1 chunk intervals")
         if not tiers:
@@ -403,6 +413,46 @@ class FleetAggregator:
         self.total = np.zeros(len(self.tiers), np.int64)
         self.p2 = P2Quantile(quantile)
         self.res = ReservoirSample(reservoir, seed)
+        # -- per-tenant accounting (multi-tenant serving) ------------------
+        # active iff the engine declared tenancy; single-tenant engines
+        # skip it entirely, keeping their state and wire bit-identical to
+        # the pre-tenant format
+        self._tenant_of: Dict[int, int] = dict(tenant_of or {})
+        self.n_tenants = 0
+        if tenant_tiers is not None:
+            self.n_tenants = len(tenant_tiers)
+        elif self._tenant_of:
+            self.n_tenants = max(self._tenant_of.values()) + 1
+        if self.n_tenants:
+            n_t = len(self.tiers)
+            if tenant_tiers is None:
+                tenant_tiers = [self.tiers] * self.n_tenants
+            self.tenant_tiers = tuple(tuple(ts) for ts in tenant_tiers)
+            for t, ladder in enumerate(self.tenant_tiers):
+                if len(ladder) != n_t:
+                    raise ValueError(
+                        f"tenant {t}'s SLO ladder has {len(ladder)} tiers "
+                        f"but the fleet ladder has {n_t}; per-tenant "
+                        f"ladders reuse the fleet's tier classes (only "
+                        f"slo_s may differ per tenant)")
+            for t_idx in self._tenant_of.values():
+                if not 0 <= t_idx < self.n_tenants:
+                    raise ValueError(f"tenant_of maps to tenant {t_idx}; "
+                                     f"only {self.n_tenants} tenants "
+                                     f"declared")
+            #: (T, K) per-tenant per-tier delay budget
+            self._t_slo = np.asarray(
+                [[tier.slo_s for tier in ladder]
+                 for ladder in self.tenant_tiers], np.float64)
+            self.t_n = np.zeros(self.n_tenants, np.int64)
+            self.t_sum_acc = np.zeros(self.n_tenants, np.float64)
+            self.t_sum_bytes = np.zeros(self.n_tenants, np.float64)
+            self.t_sum_delay = np.zeros(self.n_tenants, np.float64)
+            self.t_attained = np.zeros((self.n_tenants, n_t), np.int64)
+            self.t_total = np.zeros((self.n_tenants, n_t), np.int64)
+        else:
+            self.tenant_tiers = None
+        self._tenant_arr = np.zeros(0, np.int64)  # dense sid -> tenant
 
     # -- sid -> tier dense cache -----------------------------------------
     def _grow(self, n: int):
@@ -418,6 +468,12 @@ class FleetAggregator:
         served = np.zeros(n, bool)
         served[:old] = self._served
         self._served = served
+        tarr = np.zeros(n, np.int64)
+        tarr[:self._tenant_arr.size] = self._tenant_arr
+        for sid, t_idx in self._tenant_of.items():
+            if self._tenant_arr.size <= sid < n:
+                tarr[sid] = t_idx
+        self._tenant_arr = tarr
 
     def observe(self, ci: int, sids: Sequence[int],
                 accs: np.ndarray, bytes_: np.ndarray,
@@ -469,6 +525,27 @@ class FleetAggregator:
         w.total += tot
         self.p2.extend(delays)
         self.res.extend(delays)
+        if self.n_tenants:
+            # per-tenant fold: same vectorized bincount shape, flattened
+            # over (tenant, tier) pairs; attainment is judged against the
+            # *tenant's* ladder budget (_t_slo), the fleet-wide counters
+            # above stay on the fleet ladder untouched
+            ten_idx = self._tenant_arr[sids]
+            self.t_n += np.bincount(ten_idx, minlength=self.n_tenants)
+            self.t_sum_acc += np.bincount(ten_idx, weights=accs,
+                                          minlength=self.n_tenants)
+            self.t_sum_bytes += np.bincount(ten_idx, weights=bytes_,
+                                            minlength=self.n_tenants)
+            self.t_sum_delay += np.bincount(ten_idx, weights=delays,
+                                            minlength=self.n_tenants)
+            flat = ten_idx * n_t + tier_idx
+            ok = delays <= self._t_slo[ten_idx, tier_idx]
+            size = self.n_tenants * n_t
+            self.t_attained += np.bincount(
+                flat, weights=ok, minlength=size).astype(np.int64).reshape(
+                    self.n_tenants, n_t)
+            self.t_total += np.bincount(flat, minlength=size).reshape(
+                self.n_tenants, n_t)
 
     # -- suspend/resume ---------------------------------------------------
     def export_state(self) -> dict:
@@ -476,7 +553,7 @@ class FleetAggregator:
         piece of serving state a draining host checkpoints so its adopter
         resumes windowed aggregation mid-run, bit-exactly (the sketches
         carry their generator state, see ``ReservoirSample.state``)."""
-        return {
+        st = {
             "n": int(self.n), "sum_acc": float(self.sum_acc),
             "sum_bytes": float(self.sum_bytes),
             "sum_delay": float(self.sum_delay),
@@ -489,6 +566,17 @@ class FleetAggregator:
             "served": [int(s) for s in np.flatnonzero(self._served)],
             "p2": self.p2.state(), "res": self.res.state(),
         }
+        if self.n_tenants:
+            st["tenants"] = {
+                "t_n": [int(x) for x in self.t_n],
+                "t_sum_acc": [float(x) for x in self.t_sum_acc],
+                "t_sum_bytes": [float(x) for x in self.t_sum_bytes],
+                "t_sum_delay": [float(x) for x in self.t_sum_delay],
+                "t_attained": [[int(x) for x in row]
+                               for row in self.t_attained],
+                "t_total": [[int(x) for x in row] for row in self.t_total],
+            }
+        return st
 
     def import_state(self, st: dict) -> "FleetAggregator":
         """Restore :meth:`export_state` output into this (freshly built)
@@ -516,9 +604,42 @@ class FleetAggregator:
             self._served[np.asarray(served, np.int64)] = True
         self.p2 = P2Quantile.from_state(st["p2"])
         self.res = ReservoirSample.from_state(st["res"])
+        ten = st.get("tenants")
+        if ten is not None:
+            if not self.n_tenants:
+                raise ValueError(
+                    "aggregator state carries per-tenant counters but "
+                    "this aggregator was built untenanted; drain and "
+                    "adopt sides must share the tenant declaration")
+            if len(ten["t_n"]) != self.n_tenants:
+                raise ValueError(
+                    f"aggregator state carries {len(ten['t_n'])} tenants "
+                    f"but this aggregator is configured with "
+                    f"{self.n_tenants}")
+            self.t_n = np.asarray(ten["t_n"], np.int64)
+            self.t_sum_acc = np.asarray(ten["t_sum_acc"], np.float64)
+            self.t_sum_bytes = np.asarray(ten["t_sum_bytes"], np.float64)
+            self.t_sum_delay = np.asarray(ten["t_sum_delay"], np.float64)
+            self.t_attained = np.asarray(ten["t_attained"], np.int64)
+            self.t_total = np.asarray(ten["t_total"], np.int64)
+        elif self.n_tenants:
+            raise ValueError(
+                "this aggregator was built tenanted but the state to "
+                "import carries no per-tenant counters")
         return self
 
     def result(self) -> "AggregateResult":
+        served = tuple(int(s) for s in np.flatnonzero(self._served))
+        tenant_kw = {}
+        if self.n_tenants:
+            tenant_kw = dict(
+                tenant_tiers=self.tenant_tiers,
+                tenant_of={s: int(self._tenant_arr[s]) for s in served},
+                t_n=self.t_n.copy(), t_sum_acc=self.t_sum_acc.copy(),
+                t_sum_bytes=self.t_sum_bytes.copy(),
+                t_sum_delay=self.t_sum_delay.copy(),
+                t_attained=self.t_attained.copy(),
+                t_total=self.t_total.copy())
         return AggregateResult(
             window=self.window, quantile=self.quantile,
             tiers=self.tiers, n=self.n, sum_acc=self.sum_acc,
@@ -527,9 +648,10 @@ class FleetAggregator:
             attained=self.attained.copy(), total=self.total.copy(),
             windows=tuple(self._windows[wi]
                           for wi in sorted(self._windows)),
-            stream_ids=tuple(int(s) for s in np.flatnonzero(self._served)),
+            stream_ids=served,
             cis=tuple(self._cis),
-            p2_state=self.p2.state(), res_state=self.res.state())
+            p2_state=self.p2.state(), res_state=self.res.state(),
+            **tenant_kw)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -553,6 +675,16 @@ class AggregateResult:
     cis: Tuple[int, ...]         # served chunk intervals, arrival order
     p2_state: dict
     res_state: dict
+    # -- per-tenant plane (None on untenanted runs: the wire format and
+    # merge semantics of single-tenant results are unchanged) -------------
+    tenant_tiers: Optional[Tuple[Tuple[SLOTier, ...], ...]] = None
+    tenant_of: Optional[Mapping[int, int]] = None  # served sid -> tenant
+    t_n: Optional[np.ndarray] = None               # (T,) served chunks
+    t_sum_acc: Optional[np.ndarray] = None         # (T,)
+    t_sum_bytes: Optional[np.ndarray] = None       # (T,)
+    t_sum_delay: Optional[np.ndarray] = None       # (T,)
+    t_attained: Optional[np.ndarray] = None        # (T, K)
+    t_total: Optional[np.ndarray] = None           # (T, K)
 
     # -- headline metrics -------------------------------------------------
     @property
@@ -599,6 +731,42 @@ class AggregateResult:
                 else float("nan")
         return out
 
+    @property
+    def tenanted(self) -> bool:
+        return self.t_n is not None
+
+    @property
+    def n_tenants(self) -> int:
+        return len(self.t_n) if self.tenanted else 0
+
+    def accuracy_by_tenant(self) -> Tuple[float, ...]:
+        """Mean accuracy per served stream-chunk, per tenant (the
+        acceptance metric the 2-tenant parity test compares against
+        dedicated single-tenant engines)."""
+        if not self.tenanted:
+            raise ValueError("untenanted aggregate has no per-tenant "
+                             "accuracy")
+        return tuple(
+            float(self.t_sum_acc[t]) / int(self.t_n[t])
+            if self.t_n[t] else float("nan")
+            for t in range(self.n_tenants))
+
+    def attainment_by_tenant(self) -> Tuple[Dict[str, float], ...]:
+        """Per-tenant per-tier attainment, judged against each tenant's
+        own SLO ladder."""
+        if not self.tenanted:
+            raise ValueError("untenanted aggregate has no per-tenant "
+                             "attainment")
+        out = []
+        for t, ladder in enumerate(self.tenant_tiers):
+            d = {}
+            for i, tier in enumerate(ladder):
+                tot = int(self.t_total[t, i])
+                d[tier.name] = float(self.t_attained[t, i]) / tot if tot \
+                    else float("nan")
+            out.append(d)
+        return tuple(out)
+
     def summary(self) -> dict:
         s = {"stream_chunks": self.n, "n_streams": self.n_streams,
              "accuracy": self.accuracy, "bytes_per_chunk": self.mean_bytes,
@@ -606,19 +774,31 @@ class AggregateResult:
              "p90_delay_s": self.p90_delay, "max_delay_s": self.max_delay}
         for name, frac in self.attainment().items():
             s[f"slo_{name}"] = frac
+        if self.tenanted:
+            accs = self.accuracy_by_tenant()
+            atts = self.attainment_by_tenant()
+            for t in range(self.n_tenants):
+                s[f"tenant{t}_chunks"] = int(self.t_n[t])
+                s[f"tenant{t}_accuracy"] = accs[t]
+                for name, frac in atts[t].items():
+                    s[f"tenant{t}_slo_{name}"] = frac
         return s
 
     def relabel(self, mapping: Mapping[int, int]) -> "AggregateResult":
         """Translate stream ids through ``mapping`` (host-local lane ->
         global stream id, for the cross-host wire). Only identity moves;
         every counter and sketch is id-agnostic."""
+        tenant_of = self.tenant_of
+        if tenant_of is not None:
+            tenant_of = {int(mapping[s]): t for s, t in tenant_of.items()}
         return dataclasses.replace(
             self, stream_ids=tuple(sorted(int(mapping[s])
-                                          for s in self.stream_ids)))
+                                          for s in self.stream_ids)),
+            tenant_of=tenant_of)
 
     # -- wire + cross-host merge ------------------------------------------
     def to_wire(self) -> dict:
-        return {
+        d = {
             "window": self.window, "quantile": self.quantile,
             "tiers": [{"name": t.name, "slo_s": t.slo_s,
                        "weight": t.weight} for t in self.tiers],
@@ -632,9 +812,44 @@ class AggregateResult:
             "cis": [int(c) for c in self.cis],
             "p2": self.p2_state, "res": self.res_state,
         }
+        if self.tenanted:
+            # tenant ids on the wire: per-tenant ladders, the served
+            # sid -> tenant map ([sid, tenant] pairs — JSON object keys
+            # would stringify the sids), and the per-tenant counters.
+            # Untenanted payloads omit the key entirely: old consumers
+            # and old payloads both keep working
+            d["tenants"] = {
+                "tiers": [[{"name": t.name, "slo_s": t.slo_s,
+                            "weight": t.weight} for t in ladder]
+                          for ladder in self.tenant_tiers],
+                "tenant_of": [[int(s), int(t)]
+                              for s, t in sorted(self.tenant_of.items())],
+                "t_n": [int(x) for x in self.t_n],
+                "t_sum_acc": [float(x) for x in self.t_sum_acc],
+                "t_sum_bytes": [float(x) for x in self.t_sum_bytes],
+                "t_sum_delay": [float(x) for x in self.t_sum_delay],
+                "t_attained": [[int(x) for x in row]
+                               for row in self.t_attained],
+                "t_total": [[int(x) for x in row] for row in self.t_total],
+            }
+        return d
 
     @classmethod
     def from_wire(cls, d: dict) -> "AggregateResult":
+        tenant_kw = {}
+        ten = d.get("tenants")
+        if ten is not None:
+            tenant_kw = dict(
+                tenant_tiers=tuple(
+                    tuple(SLOTier(t["name"], t["slo_s"], t["weight"])
+                          for t in ladder) for ladder in ten["tiers"]),
+                tenant_of={int(s): int(t) for s, t in ten["tenant_of"]},
+                t_n=np.asarray(ten["t_n"], np.int64),
+                t_sum_acc=np.asarray(ten["t_sum_acc"], np.float64),
+                t_sum_bytes=np.asarray(ten["t_sum_bytes"], np.float64),
+                t_sum_delay=np.asarray(ten["t_sum_delay"], np.float64),
+                t_attained=np.asarray(ten["t_attained"], np.int64),
+                t_total=np.asarray(ten["t_total"], np.int64))
         return cls(
             window=int(d["window"]), quantile=float(d["quantile"]),
             tiers=tuple(SLOTier(t["name"], t["slo_s"], t["weight"])
@@ -648,7 +863,7 @@ class AggregateResult:
             windows=tuple(WindowStats.from_wire(w) for w in d["windows"]),
             stream_ids=tuple(int(s) for s in d["stream_ids"]),
             cis=tuple(int(c) for c in d["cis"]),
-            p2_state=d["p2"], res_state=d["res"])
+            p2_state=d["p2"], res_state=d["res"], **tenant_kw)
 
     @classmethod
     def merge(cls, parts: Sequence["AggregateResult"]) -> "AggregateResult":
@@ -668,6 +883,12 @@ class AggregateResult:
             if p.window != first.window:
                 raise ValueError("cannot merge aggregates with different "
                                  "window sizes")
+            if p.tenanted != first.tenanted or (
+                    first.tenanted and p.tenant_tiers != first.tenant_tiers):
+                raise ValueError(
+                    "cannot merge aggregates with different tenant "
+                    "declarations; every host of one fleet shares the "
+                    "TenantSpec tuple")
         seen: Dict[int, int] = {}
         for h, p in enumerate(parts):
             for sid in p.stream_ids:
@@ -717,6 +938,21 @@ class AggregateResult:
               "pos": [1.0], "want": [1.0]}
         if p2["n"] == 0:
             p2["heights"] = []
+        tenant_kw = {}
+        if first.tenanted:
+            # hosts hold disjoint sids (validated above), so the tenant
+            # maps union cleanly and the counters sum exactly
+            merged_of: Dict[int, int] = {}
+            for p in parts:
+                merged_of.update(p.tenant_of)
+            tenant_kw = dict(
+                tenant_tiers=first.tenant_tiers, tenant_of=merged_of,
+                t_n=np.sum([p.t_n for p in parts], axis=0),
+                t_sum_acc=np.sum([p.t_sum_acc for p in parts], axis=0),
+                t_sum_bytes=np.sum([p.t_sum_bytes for p in parts], axis=0),
+                t_sum_delay=np.sum([p.t_sum_delay for p in parts], axis=0),
+                t_attained=np.sum([p.t_attained for p in parts], axis=0),
+                t_total=np.sum([p.t_total for p in parts], axis=0))
         return cls(
             window=first.window, quantile=first.quantile,
             tiers=first.tiers,
@@ -730,4 +966,4 @@ class AggregateResult:
             windows=tuple(windows[wi] for wi in sorted(windows)),
             stream_ids=tuple(sorted(seen)),
             cis=tuple(cis),
-            p2_state=p2, res_state=merged_res)
+            p2_state=p2, res_state=merged_res, **tenant_kw)

@@ -1,5 +1,6 @@
 """Unified streaming engine: one chunk loop, pluggable QP policies, and
 vmap-batched multi-stream serving. See engine/README.md."""
+from repro.engine.config import EngineConfig
 from repro.engine.engine import ChunkContext, StreamingEngine, jit_encode
 from repro.engine.multistream import FleetResult, MultiStreamEngine
 from repro.engine.policies import (AccMPEGPolicy, DDSPolicy, EAARPolicy,
@@ -11,6 +12,7 @@ from repro.engine.policies import (AccMPEGPolicy, DDSPolicy, EAARPolicy,
 
 __all__ = [
     "AccMPEGPolicy", "ChunkContext", "DDSPolicy", "EAARPolicy",
+    "EngineConfig",
     "FleetResult", "MultiStreamEngine", "QPPolicy", "ReductoAccMPEGPolicy",
     "ReductoPolicy", "SiEVEPolicy", "StreamingEngine", "UniformPolicy",
     "VigilPolicy", "boxes_to_mask", "class_presence", "frame_diff_feature",

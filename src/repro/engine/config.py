@@ -1,0 +1,111 @@
+"""Typed engine configuration: the one object that replaces
+``MultiStreamEngine``'s historical kwarg sprawl.
+
+Every serving knob the engine ever grew — codec impl, stream mesh,
+pipeline depth, uplink trace, controller, autoscaler, accounting detail,
+windowed aggregation — lives here as a named, defaulted field, and the
+multi-tenant plane (``tenants``/``tenant_of``) plugs in as config rather
+than as a 16th loose keyword. The engine seeds its *mutable* runtime
+attributes from this frozen snapshot at construction (``apply_scale``
+and ``serve_loop`` legitimately move ``mesh``/``overlap``/``depth`` at
+run time; the config records where they started).
+
+Legacy keyword construction (``MultiStreamEngine(dnn, acc, impl=...,
+mesh=...)``) still works through a shim that assembles an
+``EngineConfig`` from the overrides and emits ``DeprecationWarning`` —
+parity-tested bit-exact against the new surface. See
+``engine/README.md`` for the full kwarg -> field migration table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Tuple, Union
+
+from jax.sharding import Mesh
+
+from repro.core.aggregate import AggregateConfig
+from repro.core.pipeline import NetworkConfig
+from repro.core.quality import QualityConfig
+from repro.serve.tenants import TenantSpec
+
+#: the accounting modes ``detail=`` accepts (validated here so a typo
+#: fails at config build, before any engine exists)
+DETAIL_MODES = ("chunks", "legacy", "windowed")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Frozen serving configuration for :class:`~repro.engine.
+    multistream.MultiStreamEngine` (``MultiStreamEngine(dnn, accmodel,
+    config=EngineConfig(...))``).
+
+    Fields mirror the engine's historical constructor kwargs one for one
+    (same names, same defaults — the migration is mechanical), plus the
+    multi-tenant plane:
+
+    ``tenants``
+        optional tuple of :class:`~repro.serve.tenants.TenantSpec`. One
+        tenant: the engine adopts its DNN/AccModel/QualityConfig and
+        serves exactly the single-tenant path (bit-identical to an
+        untenanted engine). Several: the fleet steps become
+        tenant-routed — camera scoring gathers each lane's AccModel out
+        of a stacked-params tree, the server step runs every lane's own
+        backbone/heads, accuracy dispatches per tenant task.
+    ``tenant_of``
+        stream id -> index into ``tenants`` (default: every stream is
+        tenant 0). Rides the engine as traced data, so tenant-mix churn
+        at a fixed padded fleet shape costs zero recompiles.
+    """
+
+    qcfg: QualityConfig = QualityConfig()
+    net: Optional[NetworkConfig] = None
+    chunk_size: int = 10
+    impl: str = "fast"
+    mesh: Union[Mesh, str, None] = None
+    overlap: bool = True
+    depth: int = 2
+    trace: object = None
+    controller: object = None
+    autoscaler: object = None
+    fps: float = 30.0
+    sim_encode_s: Optional[float] = None
+    detail: str = "chunks"
+    aggregate: Optional[AggregateConfig] = None
+    device_reduce: bool = True
+    tenants: Optional[Tuple[TenantSpec, ...]] = None
+    tenant_of: Optional[Mapping[int, int]] = None
+
+    def __post_init__(self):
+        if self.detail not in DETAIL_MODES:
+            raise ValueError(f"detail must be 'chunks', 'legacy', or "
+                             f"'windowed', got {self.detail!r}")
+        if self.chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got "
+                             f"{self.chunk_size}")
+        if self.depth < 1:
+            raise ValueError(f"depth must be >= 1, got {self.depth}")
+        if self.tenants is not None:
+            from repro.serve.tenants import validate_tenants
+
+            object.__setattr__(self, "tenants",
+                               validate_tenants(self.tenants, self.impl))
+        if self.tenant_of is not None:
+            if self.tenants is None:
+                raise ValueError("tenant_of without tenants: declare the "
+                                 "TenantSpec tuple the ids index")
+            n = len(self.tenants)
+            tof = {}
+            for sid, t in dict(self.tenant_of).items():
+                if not 0 <= int(t) < n:
+                    raise ValueError(f"tenant_of maps stream {sid} to "
+                                     f"tenant {t}; config has {n} "
+                                     f"tenants")
+                tof[int(sid)] = int(t)
+            object.__setattr__(self, "tenant_of", tof)
+
+    @property
+    def tenanted(self) -> bool:
+        """True when the engine must run the tenant-routed fleet steps
+        (two or more tenants; a single tenant folds into the classic
+        single-DNN path)."""
+        return self.tenants is not None and len(self.tenants) > 1

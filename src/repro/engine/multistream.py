@@ -44,6 +44,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import warnings
 from typing import List, Optional, Sequence, Union
 
 import jax
@@ -56,11 +57,19 @@ from repro.core.pipeline import (ChunkResult, FleetTiming, NetworkConfig,
                                  RunResult, UplinkClock,
                                  shared_stream_delays)
 from repro.core.quality import QualityConfig
+from repro.engine.config import EngineConfig
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.serve.steps import (make_accuracy_reduce_step,
                                make_camera_fleet_step, make_server_fleet_step,
+                               make_tenant_accuracy_reduce_step,
+                               make_tenant_camera_fleet_step,
+                               make_tenant_server_fleet_step,
                                stream_sharding)
+
+#: sentinel distinguishing "caller passed this legacy kwarg" from the
+#: default — the deprecation shim only fires on kwargs actually given
+_LEGACY = object()
 
 
 class _EngineObs:
@@ -155,13 +164,32 @@ class _EngineObs:
             self.reg.counter("churn_joins_total").inc(len(event.join))
             self.reg.counter("churn_leaves_total").inc(len(event.leave))
 
-    def slo_attainment(self, aggregate) -> None:
+    def slo_attainment(self, aggregate, tenants=None) -> None:
         """Windowed runs: export the aggregator's per-tier SLO
-        attainment as gauges at run end."""
+        attainment as gauges at run end — and, on tenanted fleets, the
+        per-tenant attainment/volume split (labelled by tenant name)."""
         if self.reg is not None and aggregate is not None:
             for tier, frac in aggregate.attainment().items():
                 if frac == frac:  # skip empty tiers (NaN)
                     self.reg.gauge("slo_attainment", tier=tier).set(frac)
+            if tenants is not None and aggregate.tenanted:
+                for t, atts in enumerate(aggregate.attainment_by_tenant()):
+                    name = tenants[t].name
+                    self.reg.gauge("tenant_chunks_served",
+                                   tenant=name).set(int(aggregate.t_n[t]))
+                    for tier, frac in atts.items():
+                        if frac == frac:
+                            self.reg.gauge("tenant_slo_attainment",
+                                           tenant=name,
+                                           tier=tier).set(frac)
+
+    def tenant_lanes(self, tenants, counts) -> None:
+        """Per-interval active-lane split across tenants (the occupancy
+        the capacity split divides by)."""
+        if self.reg is not None:
+            for t, spec in enumerate(tenants):
+                self.reg.gauge("tenant_lanes_active",
+                               tenant=spec.name).set(int(counts[t]))
 
 
 @functools.lru_cache()
@@ -197,6 +225,9 @@ class FleetResult:
     # each ``camera_s`` entry (all-quiet intervals append neither) — the
     # explicit record the cross-host camera_s merge aligns on, and what
     # failure-time re-serve dedup keys by
+    tenant_ids: Optional[List[int]] = None  # multi-tenant fleets: the
+    # tenant index each entry of ``streams`` belongs to (windowed runs
+    # carry the split inside ``aggregate`` instead)
 
     @property
     def n_streams(self):
@@ -218,6 +249,27 @@ class FleetResult:
     def chunks_per_s(self):
         """Fleet camera throughput: stream-chunks processed per second."""
         return self.n_streams / max(self.mean_camera_s, 1e-12)
+
+    def accuracy_by_tenant(self):
+        """Per-tenant mean accuracy (tuple indexed by tenant id) — the
+        number the 2-tenant acceptance test pins against dedicated
+        single-tenant engines. Windowed runs read the aggregate's exact
+        per-tenant sums; per-chunk runs group ``streams`` by
+        ``tenant_ids`` and mean the per-stream accuracies (matching the
+        dedicated engines' ``FleetResult.accuracy``)."""
+        if not self.streams and self.aggregate is not None \
+                and self.aggregate.tenanted:
+            return self.aggregate.accuracy_by_tenant()
+        if self.tenant_ids is None:
+            raise ValueError("untenanted result has no per-tenant "
+                             "accuracy; serve with EngineConfig(tenants"
+                             "=...)")
+        by_t: dict = {}
+        for t, r in zip(self.tenant_ids, self.streams):
+            by_t.setdefault(int(t), []).append(r.accuracy)
+        n = max(by_t) + 1 if by_t else 0
+        return tuple(float(np.mean(by_t[t])) if t in by_t
+                     else float("nan") for t in range(n))
 
     def _delay_percentile(self, q: float) -> float:
         if not self.streams and self.aggregate is not None:
@@ -307,45 +359,93 @@ class MultiStreamEngine:
     apply between chunks without tearing the engine down.
     """
 
-    def __init__(self, final_dnn, accmodel,
-                 qcfg: QualityConfig = QualityConfig(),
-                 net: Optional[NetworkConfig] = None,
-                 chunk_size: int = 10, impl: str = "fast",
-                 mesh: Union[Mesh, str, None] = None,
-                 overlap: bool = True, depth: int = 2, trace=None,
-                 controller=None, autoscaler=None, fps: float = 30.0,
-                 sim_encode_s: Optional[float] = None,
-                 detail: str = "chunks",
-                 aggregate: Optional[AggregateConfig] = None,
-                 device_reduce: bool = True):
-        if detail not in ("chunks", "legacy", "windowed"):
-            raise ValueError(f"detail must be 'chunks', 'legacy', or "
-                             f"'windowed', got {detail!r}")
+    def __init__(self, final_dnn=None, accmodel=None,
+                 qcfg=_LEGACY, net=_LEGACY, *,
+                 config: Optional[EngineConfig] = None,
+                 chunk_size=_LEGACY, impl=_LEGACY, mesh=_LEGACY,
+                 overlap=_LEGACY, depth=_LEGACY, trace=_LEGACY,
+                 controller=_LEGACY, autoscaler=_LEGACY, fps=_LEGACY,
+                 sim_encode_s=_LEGACY, detail=_LEGACY, aggregate=_LEGACY,
+                 device_reduce=_LEGACY):
+        # -- typed-config surface + legacy-kwarg shim ----------------------
+        # the supported construction is MultiStreamEngine(dnn, accmodel,
+        # config=EngineConfig(...)); loose serving kwargs still work but
+        # assemble the same EngineConfig under a DeprecationWarning (and
+        # are parity-tested bit-exact against the config path)
+        given = {k: v for k, v in (
+            ("qcfg", qcfg), ("net", net), ("chunk_size", chunk_size),
+            ("impl", impl), ("mesh", mesh), ("overlap", overlap),
+            ("depth", depth), ("trace", trace), ("controller", controller),
+            ("autoscaler", autoscaler), ("fps", fps),
+            ("sim_encode_s", sim_encode_s), ("detail", detail),
+            ("aggregate", aggregate), ("device_reduce", device_reduce),
+        ) if v is not _LEGACY}
+        if config is not None and given:
+            raise ValueError(
+                f"pass serving options through config=EngineConfig(...) "
+                f"OR as legacy kwargs, not both (got config plus "
+                f"{sorted(given)})")
+        if config is None:
+            if given:
+                warnings.warn(
+                    "MultiStreamEngine's loose serving kwargs are "
+                    "deprecated; pass config=EngineConfig(...) (see "
+                    "engine/README.md for the kwarg -> field table)",
+                    DeprecationWarning, stacklevel=2)
+            config = EngineConfig(**given)
+        self.config = config
+        # -- tenancy -------------------------------------------------------
+        # one tenant folds into the classic single-DNN engine (adopting
+        # the tenant's DNN/AccModel/QualityConfig — bit-identical path);
+        # two or more light up the tenant-routed fleet steps
+        self.tenants = config.tenants
+        self._tenanted = config.tenanted
+        self._tenant_of = dict(config.tenant_of or {})
+        if self.tenants is not None:
+            if final_dnn is not None or accmodel is not None:
+                raise ValueError(
+                    "EngineConfig(tenants=...) declares the served "
+                    "DNN/AccModel per tenant; do not also pass "
+                    "final_dnn/accmodel")
+            if self._tenanted and config.controller is not None:
+                raise ValueError(
+                    "multi-tenant fleets do not support the rate "
+                    "controller yet: its knob array is fleet-wide while "
+                    "tenants carry per-tenant quality configs")
+            final_dnn = self.tenants[0].dnn
+            accmodel = self.tenants[0].accmodel
         self.final_dnn = final_dnn
         self.accmodel = accmodel
-        self.qcfg = qcfg
-        self.net = net
-        self.chunk_size = chunk_size
-        self.impl = impl
-        self.mesh = mesh
-        self.overlap = overlap
-        self.depth = depth
-        self.trace = trace
-        self.controller = controller
-        self.autoscaler = autoscaler
-        self.fps = fps
-        self.sim_encode_s = sim_encode_s
+        # a single tenant's qcfg IS the engine's qcfg; multi-tenant
+        # engines keep per-lane configs inside the tenant camera step and
+        # never read self.qcfg on the data path
+        self.qcfg = self.tenants[0].qcfg if self.tenants is not None \
+            and not self._tenanted else config.qcfg
+        # mutable runtime attributes seeded from the frozen config —
+        # apply_scale and serve_loop legitimately move mesh/overlap/depth
+        # at run time, so the instance owns them from here on
+        self.net = config.net
+        self.chunk_size = config.chunk_size
+        self.impl = config.impl
+        self.mesh = config.mesh
+        self.overlap = config.overlap
+        self.depth = config.depth
+        self.trace = config.trace
+        self.controller = config.controller
+        self.autoscaler = config.autoscaler
+        self.fps = config.fps
+        self.sim_encode_s = config.sim_encode_s
         # host accounting mode: "chunks" keeps full per-chunk ChunkResult
         # lists but scores all lanes in one vectorized pass (bit-identical
         # to "legacy", the preserved per-lane loop / parity oracle);
         # "windowed" streams chunk batches into a FleetAggregator so the
         # result carries O(window) summaries — the fleet-scale mode
-        self.detail = detail
-        self.aggregate = aggregate  # AggregateConfig for detail="windowed"
+        self.detail = config.detail
+        self.aggregate = config.aggregate  # for detail="windowed"
         # with detail="windowed" and no precomputed refs, reduce per-lane
         # accuracy on device (segmentation/keypoint) so dense output trees
         # never cross to host — only (N,) scalars do
-        self.device_reduce = device_reduce
+        self.device_reduce = config.device_reduce
         self.last_scale = None  # autoscaler's most recent ScaleDecision
         self.last_serve_state = None  # serve_loop's exported resume state
         self._steps = {}  # resolved mesh (or None) -> (camera, server)
@@ -354,6 +454,44 @@ class MultiStreamEngine:
         self._refs_prepared = None  # (refs object, prepared copy)
         self._agg = None  # live FleetAggregator during a windowed run
         self._obs = None  # per-run telemetry handles (None = plane off)
+
+    # -- tenancy helpers ------------------------------------------------------
+    def _tenant_idx(self, sid: int) -> int:
+        return self._tenant_of.get(sid, 0)
+
+    def _dnn_for_sid(self, sid: int):
+        """The server DNN that scores stream ``sid`` (per-tenant on
+        tenanted fleets; the engine's single DNN otherwise)."""
+        if self._tenanted:
+            return self.tenants[self._tenant_idx(sid)].dnn
+        return self.final_dnn
+
+    def _tenant_lane_ids(self, sids, n_lanes: int) -> np.ndarray:
+        """Dense (n_lanes,) int32 tenant-id lane for a fleet batch whose
+        active prefix serves ``sids``; padded lanes route to tenant 0
+        (their outputs are masked downstream like every padding lane)."""
+        lane = np.zeros(n_lanes, np.int32)
+        for i, sid in enumerate(sids):
+            lane[i] = self._tenant_idx(sid)
+        return lane
+
+    def _tenant_counts(self, sids) -> List[int]:
+        """Per-tenant active stream counts — the occupancy the
+        autoscaler's capacity split divides by."""
+        counts = [0] * len(self.tenants)
+        for sid in sids:
+            counts[self._tenant_idx(sid)] += 1
+        return counts
+
+    def _build_agg(self):
+        """The windowed run's aggregator; tenanted fleets thread the
+        stream -> tenant map and per-tenant SLO ladders through so the
+        result carries per-tenant attainment."""
+        cfg = self.aggregate or AggregateConfig()
+        if not self._tenanted:
+            return cfg.build()
+        return cfg.build(tenant_of=dict(self._tenant_of),
+                         tenant_tiers=tuple(t.tiers for t in self.tenants))
 
     # -- step construction ---------------------------------------------------
     def _resolve_mesh(self, n_streams: int) -> Optional[Mesh]:
@@ -371,28 +509,47 @@ class MultiStreamEngine:
         # into a step of the wrong arity)
         key = (mesh, self.controller is not None, masked)
         if key not in self._steps:
-            self._steps[key] = (
-                make_camera_fleet_step(self.accmodel, self.qcfg,
-                                       impl=self.impl, mesh=mesh,
-                                       knobs=self.controller is not None,
-                                       mask=masked),
-                make_server_fleet_step(self.final_dnn, mesh=mesh),
-            )
+            if self._tenanted:
+                # tenant-routed steps: per-lane tenant ids ride as traced
+                # data, so tenant-mix churn at a fixed padded shape costs
+                # zero recompiles (same guarantee as the lane mask)
+                self._steps[key] = (
+                    make_tenant_camera_fleet_step(self.tenants,
+                                                  impl=self.impl,
+                                                  mesh=mesh, mask=masked),
+                    make_tenant_server_fleet_step(self.tenants, mesh=mesh),
+                )
+            else:
+                self._steps[key] = (
+                    make_camera_fleet_step(self.accmodel, self.qcfg,
+                                           impl=self.impl, mesh=mesh,
+                                           knobs=self.controller is not None,
+                                           mask=masked),
+                    make_server_fleet_step(self.final_dnn, mesh=mesh),
+                )
         return self._steps[key] + (mesh,)
 
     def _use_device_reduce(self, refs) -> bool:
         """Device accuracy reduction applies only when the run is windowed
         (no per-chunk results wanted), references are computed in-loop
         (precomputed refs live on host), and the task has a jnp-reducible
-        metric."""
+        metric (on tenanted fleets: every tenant's task)."""
+        if self._tenanted:
+            reducible = all(t.dnn.supports_device_accuracy
+                            for t in self.tenants)
+        else:
+            reducible = self.final_dnn.supports_device_accuracy
         return (self.detail == "windowed" and self.device_reduce
-                and refs is None
-                and self.final_dnn.supports_device_accuracy)
+                and refs is None and reducible)
 
     def _acc_step_for(self, mesh):
         if mesh not in self._acc_steps:
-            self._acc_steps[mesh] = make_accuracy_reduce_step(
-                self.final_dnn, mesh=mesh)
+            if self._tenanted:
+                self._acc_steps[mesh] = make_tenant_accuracy_reduce_step(
+                    self.tenants, mesh=mesh)
+            else:
+                self._acc_steps[mesh] = make_accuracy_reduce_step(
+                    self.final_dnn, mesh=mesh)
         return self._acc_steps[mesh]
 
     def _mesh_width(self) -> int:
@@ -482,13 +639,16 @@ class MultiStreamEngine:
             return None
         if self._refs_prepared is not None and self._refs_prepared[0] is refs:
             return self._refs_prepared[1]  # same refs across runs: once
-        detection = self.final_dnn.task == "detection"
         prepared = []
-        for stream_refs in refs:
+        for sid, stream_refs in enumerate(refs):
+            # refs index by stream id, so each stream's references run
+            # through its *own* tenant's DNN on tenanted fleets
+            dnn = self._dnn_for_sid(sid)
+            detection = dnn.task == "detection"
             row = []
             for r in stream_refs:
                 if not isinstance(r, dict):  # raw frames -> D(ref)
-                    r = self.final_dnn.predict(jnp.asarray(r))
+                    r = dnn.predict(jnp.asarray(r))
                 if detection and "keep" not in r:
                     r = dict(r, keep=np.asarray(_jit_nms()(r)))
                 row.append(r)
@@ -568,7 +728,7 @@ class MultiStreamEngine:
                     ref = refs[sid][ci]
                 else:
                     ref = {k: v[i] for k, v in ref_outs.items()}
-                acc = self.final_dnn.accuracy(out_i, ref)
+                acc = self._dnn_for_sid(sid).accuracy(out_i, ref)
                 per_stream[sid].append(ChunkResult(
                     acc, lane_bytes[i], encode_s=p["cam_dt"],
                     overhead_s=0.0, stream_s=delays[i], queue_s=queue_s,
@@ -577,7 +737,7 @@ class MultiStreamEngine:
             sids = list(range(n_active)) if ids is None else list(ids)
             if acc_dev is not None:
                 accs = np.asarray(acc_dev, np.float64)[:n_active]
-            else:
+            elif not self._tenanted:
                 outs_a = {k: v[:n_active] for k, v in outs.items()}
                 if refs is not None:
                     keys = refs[sids[0]][ci].keys()
@@ -586,6 +746,27 @@ class MultiStreamEngine:
                 else:
                     ref_a = {k: v[:n_active] for k, v in ref_outs.items()}
                 accs = self.final_dnn.accuracy_batched(outs_a, ref_a)
+            else:
+                # tenant-grouped host scoring: each tenant's DNN scores
+                # its own lanes in one batched call (the union output
+                # tree carries every task's keys, and each metric reads
+                # only its task's — foreign-lane garbage never surfaces)
+                accs = np.zeros(n_active, np.float64)
+                lane_t = np.asarray([self._tenant_idx(sid)
+                                     for sid in sids])
+                for t in np.unique(lane_t):
+                    rows = np.flatnonzero(lane_t == t)
+                    dnn = self.tenants[int(t)].dnn
+                    o_t = {k: v[rows] for k, v in outs.items()}
+                    if refs is not None:
+                        keys = refs[sids[int(rows[0])]][ci].keys()
+                        ref_t = {k: np.stack(
+                            [np.asarray(refs[sids[int(i)]][ci][k])
+                             for i in rows]) for k in keys}
+                    else:
+                        ref_t = {k: v[rows] for k, v in ref_outs.items()}
+                    accs[rows] = np.asarray(
+                        dnn.accuracy_batched(o_t, ref_t), np.float64)
             if self.detail == "windowed":
                 total = (np.asarray(delays[:n_active], np.float64)
                          + p["cam_dt"] + queue_s)
@@ -642,7 +823,7 @@ class MultiStreamEngine:
         refs = self._prepare_refs(refs)
         windowed = self.detail == "windowed"
         if windowed:
-            self._agg = (self.aggregate or AggregateConfig()).build()
+            self._agg = self._build_agg()
         use_dev = self._use_device_reduce(refs)
         acc_step = self._acc_step_for(mesh) if use_dev else None
         controlled = self.controller is not None
@@ -652,8 +833,21 @@ class MultiStreamEngine:
             UplinkClock(self.trace, cs, self.fps)
         self._obs = _EngineObs() \
             if (obs_trace.enabled() or obs_metrics.enabled()) else None
+        tids_dev = None
+        if self._tenanted:
+            # the per-lane tenant-id lane: stream i IS lane i in run(),
+            # and the tenant steps take it as a trailing traced argument
+            tids_dev = self._put(
+                self._tenant_lane_ids(range(N), N), sharding)
+            server_step = (lambda d, _s=server_step, _t=tids_dev:
+                           _s(d, _t))
+            if use_dev:
+                acc_step = (lambda o, r, _a=acc_step, _t=tids_dev:
+                            _a(o, r, _t))
 
         def camera(batch):
+            if tids_dev is not None:  # tenant-routed step
+                return cam_step(batch, tids_dev)
             if controlled:  # traced knob array: fresh values, same program
                 return cam_step(batch, self.controller.knob_array())
             return cam_step(batch)
@@ -739,20 +933,27 @@ class MultiStreamEngine:
         timing.wall_s = time.perf_counter() - t_run
         if self.autoscaler is not None:
             width = mesh.devices.size if mesh is not None else 1
+            # tenant_streams only rides when tenanted: autoscaler
+            # subclasses predating the kwarg keep working untouched
+            tkw = ({"tenant_streams": self._tenant_counts(range(N))}
+                   if self._tenanted else {})
             self.last_scale = self.autoscaler.decide(
                 timing, N, mesh_width=width,
-                batch_depth=self.depth if self.overlap else 1)
+                batch_depth=self.depth if self.overlap else 1, **tkw)
         served_cis = list(range(len(starts)))  # run(): ci == position
+        tenant_ids = [self._tenant_idx(i) for i in range(N)] \
+            if self._tenanted else None
         if windowed:
             agg, self._agg = self._agg.result(), None
             if self._obs is not None:
-                self._obs.slo_attainment(agg)
+                self._obs.slo_attainment(agg, self.tenants
+                                         if self._tenanted else None)
             return FleetResult([], timing.camera_s, timing=timing,
                                aggregate=agg, served_cis=served_cis)
         streams = [RunResult(f"accmpeg_fleet[{i}]", per_stream[i])
                    for i in range(N)]
         return FleetResult(streams, timing.camera_s, timing=timing,
-                           served_cis=served_cis)
+                           served_cis=served_cis, tenant_ids=tenant_ids)
 
     # -- the closed-loop churn serving loop ------------------------------------
     def serve_loop(self, frames, events=(), refs=None, initial=None,
@@ -880,7 +1081,7 @@ class MultiStreamEngine:
         refs = self._prepare_refs(refs)
         windowed = self.detail == "windowed"
         if windowed:
-            self._agg = (self.aggregate or AggregateConfig()).build()
+            self._agg = self._build_agg()
         # resume: the suspended run's serving state picks up where it
         # left off — clock backlog, controller level, aggregate window
         if state is not None:
@@ -940,14 +1141,34 @@ class MultiStreamEngine:
             # advanced index + slice in one step: copies one chunk's
             # worth of frames, not each active stream's whole timeline
             batch_np = pad_streams(frames[ids, s : s + cs], plan.n_padded)
+            tids_dev = None
+            t_counts = None
+            if self._tenanted:
+                # tenant ids ride as traced data beside the lane mask:
+                # padded lanes route to tenant 0 and are masked exactly
+                # like untenanted padding, so tenant-mix churn at a fixed
+                # padded shape reuses the one compiled program
+                tids_dev = self._put(
+                    self._tenant_lane_ids(ids, plan.n_padded), sharding)
+                server_step = (lambda d, _s=server_step, _t=tids_dev:
+                               _s(d, _t))
+                t_counts = self._tenant_counts(ids)
+                if self._obs is not None:
+                    self._obs.tenant_lanes(self.tenants, t_counts)
 
-            def camera(batch, _cam=cam_step, _mask=mask_dev):
+            def camera(batch, _cam=cam_step, _mask=mask_dev,
+                       _tids=tids_dev):
+                if _tids is not None:  # tenant-routed masked step
+                    return _cam(batch, _tids, _mask)
                 if controlled:  # traced knobs: fresh values, same program
                     return _cam(batch, _mask,
                                 self.controller.knob_array())
                 return _cam(batch, _mask)
 
             acc_step = self._acc_step_for(mesh) if use_dev else None
+            if use_dev and self._tenanted:
+                acc_step = (lambda o, r, _a=acc_step, _t=tids_dev:
+                            _a(o, r, _t))
             warm_key = (batch_np.shape, mesh, refs is None, self.overlap,
                         controlled, use_dev, "masked")
             if warm_key in self._warm:  # hot shape: skip the warm put
@@ -1021,9 +1242,11 @@ class MultiStreamEngine:
                     camera_s=[cam_dt], server_s=[srv_est],
                     host_s=list(timing.host_s[host_before:]),
                     wall_s=time.perf_counter() - t_int)
+                tkw = ({"tenant_streams": t_counts}
+                       if t_counts is not None else {})
                 d = scaler.decide(window, plan.n_padded,
                                   mesh_width=self._mesh_width(),
-                                  batch_depth=depth)
+                                  batch_depth=depth, **tkw)
                 decisions.append(d)
                 self.last_scale = d
                 if (d.mesh_width, d.batch_depth) != (self._mesh_width(),
@@ -1060,7 +1283,8 @@ class MultiStreamEngine:
         if windowed:
             agg, self._agg = self._agg.result(), None
             if self._obs is not None:
-                self._obs.slo_attainment(agg)
+                self._obs.slo_attainment(agg, self.tenants
+                                         if self._tenanted else None)
             return FleetResult([], timing.camera_s, timing=timing,
                                stream_ids=list(agg.stream_ids),
                                decisions=decisions,
@@ -1072,4 +1296,7 @@ class MultiStreamEngine:
         return FleetResult(streams, timing.camera_s, timing=timing,
                            stream_ids=served, decisions=decisions,
                            shapes=list(scaler.compiled_shapes),
-                           served_cis=served_cis)
+                           served_cis=served_cis,
+                           tenant_ids=[self._tenant_idx(sid)
+                                       for sid in served]
+                           if self._tenanted else None)

@@ -175,7 +175,7 @@ def _smoke_result():
     from repro.control.traces import constant_trace
     from repro.core.accmodel import AccModel, accmodel_init
     from repro.data.video import make_scene
-    from repro.engine import MultiStreamEngine
+    from repro.engine import EngineConfig, MultiStreamEngine
     from repro.serve.fleet import FleetTopology, serve_fleet
     from repro.vision.dnn import FinalDNN, init_net
 
@@ -190,10 +190,10 @@ def _smoke_result():
 
     def make_engine(host):
         # per-host uplink: each ingestion host carries its own trace
-        return MultiStreamEngine(
-            dnn, am, impl="fast", chunk_size=cs,
+        return MultiStreamEngine(dnn, am, config=EngineConfig(
+            impl="fast", chunk_size=cs,
             trace=constant_trace(1.5e5 * (host + 1), rtt_s=0.02),
-            autoscaler=FleetAutoscaler(), sim_encode_s=0.05)
+            autoscaler=FleetAutoscaler(), sim_encode_s=0.05))
 
     return serve_fleet(
         make_engine, frames, topology,
@@ -323,7 +323,7 @@ def _elastic_smoke_result(mode: str, ckpt_dir: Optional[str]):
     from repro.control.traces import constant_trace
     from repro.core.accmodel import AccModel, accmodel_init
     from repro.data.video import make_scene
-    from repro.engine import MultiStreamEngine
+    from repro.engine import EngineConfig, MultiStreamEngine
     from repro.serve.fleet import FleetTopology, HostEvent, serve_fleet
     from repro.vision.dnn import FinalDNN, init_net
 
@@ -353,10 +353,10 @@ def _elastic_smoke_result(mode: str, ckpt_dir: Optional[str]):
         for i in range(4)])
 
     def make_engine(host):
-        return MultiStreamEngine(
-            dnn, am, impl="fast", chunk_size=cs,
+        return MultiStreamEngine(dnn, am, config=EngineConfig(
+            impl="fast", chunk_size=cs,
             trace=constant_trace(1.5e5 * (host + 1), rtt_s=0.02),
-            autoscaler=FleetAutoscaler(), sim_encode_s=0.05)
+            autoscaler=FleetAutoscaler(), sim_encode_s=0.05))
 
     if mode.endswith("_ref"):
         return serve_fleet(make_engine, frames, topology, events=events)

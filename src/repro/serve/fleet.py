@@ -198,7 +198,10 @@ def host_payload(host: int, owned: Sequence[int], res: FleetResult) -> dict:
         },
         "decisions": [
             {"mesh_width": d.mesh_width, "batch_depth": d.batch_depth,
-             "reason": d.reason} for d in (res.decisions or [])],
+             "reason": d.reason,
+             "tenant_share": None if d.tenant_share is None
+             else [float(x) for x in d.tenant_share]}
+            for d in (res.decisions or [])],
         "shapes": [int(s) for s in (res.shapes or [])],
     }
 

@@ -238,6 +238,223 @@ def make_accuracy_reduce_step(final_dnn, mesh: Mesh = None):
     return jax.jit(sharded)
 
 
+# ---------------------------------------------------------------------------
+# tenant-routed fleet steps (multi-tenant serving: one fleet, many DNNs)
+# ---------------------------------------------------------------------------
+def make_tenant_camera_fleet_step(tenants, impl: str = "fast",
+                                  mesh: Mesh = None, mask: bool = False):
+    """Tenant-routed camera step: ``step(chunks, tenant_ids[, active])``.
+
+    Same contract as :func:`make_camera_fleet_step` plus a traced
+    ``(N,)`` int32 tenant-id lane: scoring gathers each lane's AccModel
+    parameters out of a stacked ``(T, ...)`` params tree (the
+    ``models.moe`` routed-dispatch idiom — tenant mix is *data*, so
+    re-mixing tenants at a fixed padded shape costs zero recompiles),
+    and QP assignment applies each lane's own tenant
+    :class:`~repro.core.quality.QualityConfig` by computing every
+    tenant's (cheap, macroblock-resolution) QP map and selecting per
+    lane — bit-identical per lane to a dedicated engine running that
+    tenant's static config. ``qcfg.gamma`` must agree across tenants
+    (static dilation window); the fused encoder fast-paths additionally
+    need one shared config (``serve.tenants.validate_tenants`` enforces
+    both loudly).
+    """
+    from repro.codec.codec import CHUNK_ENCODERS
+    from repro.core.accmodel import accmodel_apply
+    from repro.core.quality import dilate_scores, qp_maps_from_scores_batched
+    from repro.distributed.mesh import STREAM_AXIS
+    from repro.distributed.sharding import assert_addressable_mesh
+    from repro.serve.tenants import gather_tree, stack_trees, validate_tenants
+
+    tenants = validate_tenants(tenants, impl)
+    if mesh is not None:
+        assert_addressable_mesh(mesh, "make_tenant_camera_fleet_step")
+
+    acc_stack = stack_trees([t.accmodel.params for t in tenants])
+    qcfgs = [t.qcfg for t in tenants]
+    enc = CHUNK_ENCODERS.resolve(impl)
+    fused_scores = impl in ("fused", "fused_exact")
+    if fused_scores:
+        from repro.kernels.mbcodec.ops import encode_chunk_fused_scores
+        enc_scores = functools.partial(encode_chunk_fused_scores,
+                                       clip_refs=(impl == "fused_exact"))
+
+    def _score(chunks, tids):
+        heads = chunks[:, 0]
+        return jax.nn.sigmoid(jax.vmap(
+            lambda f, i: accmodel_apply(gather_tree(acc_stack, i),
+                                        f[None])[0])(heads, tids))
+
+    def _tenant_step(chunks, tids, active=None):
+        scores = _score(chunks, tids)
+        if fused_scores:
+            # validate_tenants pinned one shared config for fused impls
+            q = qcfgs[0]
+            pooled = dilate_scores(scores, q.gamma)
+            ktriple = jnp.array([q.alpha, float(q.qp_hi), float(q.qp_lo)],
+                                jnp.float32)
+            decoded, pbytes = jax.vmap(
+                lambda c, p: enc_scores(c, p, ktriple))(chunks, pooled)
+        else:
+            # every tenant's two-level QP map on all lanes (macroblock
+            # resolution: cheap next to the encode), then one per-lane
+            # gather — each lane sees exactly its tenant's static map
+            per_t = jnp.stack([qp_maps_from_scores_batched(scores, q)[0]
+                               for q in qcfgs])
+            qmaps = per_t[tids, jnp.arange(chunks.shape[0])]
+            decoded, pbytes = jax.vmap(enc)(chunks, qmaps)
+        if active is not None:  # zero padded lanes' wire bytes in-program
+            lane = active.astype(pbytes.dtype)
+            pbytes = pbytes * lane.reshape((-1,) + (1,) * (pbytes.ndim - 1))
+        return decoded, pbytes, scores
+
+    def _step(chunks, tids):
+        return _tenant_step(chunks, tids)
+
+    def _step_mask(chunks, tids, active):
+        return _tenant_step(chunks, tids, active)
+
+    fn = _step_mask if mask else _step
+    if mesh is None:
+        return jax.jit(fn)
+    spec = P(STREAM_AXIS)
+    in_specs = (spec, spec) + ((spec,) if mask else ())
+    sharded = shard_map(fn, mesh, in_specs=in_specs,
+                        out_specs=(spec, spec, spec))
+    return jax.jit(sharded)
+
+
+def make_tenant_server_fleet_step(tenants, mesh: Mesh = None):
+    """Tenant-grouped server step: ``server(decoded, tenant_ids)`` ->
+    union pytree of ``(N, T, ...)`` dense outputs.
+
+    The backbone — which dominates server FLOPs — runs exactly once per
+    lane with that lane's tenant parameters (per-lane gather out of the
+    stacked backbone tree, so N lanes cost N backbone applies no matter
+    how many tenants share the fleet — the capacity win the multitenant
+    bench measures against dedicated fleets). Heads are grouped per
+    task: each distinct task's heads run densely over all lanes with
+    per-lane-gathered head parameters, and the output tree is the
+    *union* of every task's keys — lanes of other tenants carry
+    well-shaped garbage under foreign keys, which the host scorer (and
+    the device accuracy reduce) never reads because it groups lanes by
+    tenant. Padded admission lanes route to tenant 0 and are masked
+    downstream exactly like today.
+
+    Tenants must share backbone geometry (``stack_trees`` raises
+    otherwise); heads within one task likewise.
+    """
+    from repro.distributed.mesh import STREAM_AXIS
+    from repro.distributed.sharding import assert_addressable_mesh
+    from repro.serve.tenants import gather_tree, stack_trees, validate_tenants
+    from repro.vision.dnn import backbone, detection_keep_heat, head
+
+    tenants = validate_tenants(tenants)
+    if mesh is not None:
+        assert_addressable_mesh(mesh, "make_tenant_server_fleet_step")
+
+    bb_stack = stack_trees([t.dnn.params["backbone"] for t in tenants])
+    # per task: its head-key -> stacked head params over the task's
+    # members, plus the dense tenant-id -> position-in-task-stack map
+    # (foreign tenants map to slot 0: their lanes compute valid-shaped
+    # garbage that is masked at scoring)
+    tasks = []
+    seen = []
+    for t in tenants:
+        if t.task not in seen:
+            seen.append(t.task)
+            tasks.append(t.task)
+    head_keys = {"detection": ("heat", "wh", "off"),
+                 "segmentation": ("seg",), "keypoint": ("kp",)}
+    task_specs = []
+    for task in tasks:
+        members = [i for i, t in enumerate(tenants) if t.task == task]
+        stacks = {k: stack_trees([tenants[i].dnn.params[k]
+                                  for i in members])
+                  for k in head_keys[task]}
+        pos = jnp.zeros(len(tenants), jnp.int32)
+        for slot, i in enumerate(members):
+            pos = pos.at[i].set(slot)
+        task_specs.append((task, stacks, pos))
+
+    def _server(decoded, tids):
+        N, T = decoded.shape[:2]
+        # one lax.map over lanes, params gathered per lane: inside the
+        # loop every conv runs with ordinary (unbatched) kernels, which
+        # lowers to the fast conv path — a vmap over lane-varying
+        # kernels hits XLA's batched-kernel lowering and costs ~1.3x,
+        # enough to erase the shared fleet's lane advantage outright
+        bb_lane = gather_tree(bb_stack, tids)
+        hstacks_lane = []
+        for task, stacks, pos in task_specs:
+            hidx = pos[tids]
+            hstacks_lane.append({k: gather_tree(h, hidx)
+                                 for k, h in stacks.items()})
+
+        def one_lane(args):
+            frames, bb_p, heads_p = args
+            feats = backbone(bb_p, frames)
+            return {k: head(p, feats)
+                    for hp in heads_p for k, p in hp.items()}
+
+        out = jax.lax.map(one_lane, (decoded, bb_lane, hstacks_lane))
+        if "heat" in out:
+            flat = {"heat": out["heat"].reshape(
+                (N * T,) + out["heat"].shape[2:])}
+            out["keep"] = detection_keep_heat(flat).reshape(
+                (N, T) + out["heat"].shape[2:-1])
+        return out
+
+    if mesh is None:
+        return jax.jit(_server)
+    spec = P(STREAM_AXIS)
+    sharded = shard_map(_server, mesh, in_specs=(spec, spec),
+                        out_specs=spec)
+    return jax.jit(sharded)
+
+
+def make_tenant_accuracy_reduce_step(tenants, mesh: Mesh = None):
+    """Tenant-routed device accuracy reduce: ``acc(outs, ref_outs,
+    tenant_ids) -> (N,)`` over the tenant server step's union trees.
+    Each distinct task's :func:`~repro.vision.dnn.device_lane_accuracy`
+    runs over all lanes and the per-lane result selects by tenant task —
+    only built when every tenant's task reduces on device (the engine
+    falls back to grouped host scoring otherwise)."""
+    from repro.distributed.mesh import STREAM_AXIS
+    from repro.distributed.sharding import assert_addressable_mesh
+    from repro.serve.tenants import validate_tenants
+    from repro.vision.dnn import device_lane_accuracy
+
+    tenants = validate_tenants(tenants)
+    if mesh is not None:
+        assert_addressable_mesh(mesh, "make_tenant_accuracy_reduce_step")
+
+    tasks = []
+    for t in tenants:
+        if t.task not in tasks:
+            tasks.append(t.task)
+    task_idx = jnp.array([tasks.index(t.task) for t in tenants],
+                         jnp.int32)
+
+    def _acc(outs, ref_outs, tids):
+        vals = [device_lane_accuracy(task, outs, ref_outs)
+                for task in tasks]
+        if len(vals) == 1:
+            return vals[0]
+        sel = task_idx[tids]
+        acc = vals[0]
+        for k in range(1, len(vals)):
+            acc = jnp.where(sel == k, vals[k], acc)
+        return acc
+
+    if mesh is None:
+        return jax.jit(_acc)
+    spec = P(STREAM_AXIS)
+    sharded = shard_map(_acc, mesh, in_specs=(spec, spec, spec),
+                        out_specs=spec)
+    return jax.jit(sharded)
+
+
 def make_prefill_step(model, cfg: ArchConfig, rules: Rules):
     def prefill(params, batch):
         extras = {k: batch[k] for k in ("context", "frames") if k in batch}

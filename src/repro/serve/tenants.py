@@ -1,0 +1,233 @@
+"""Multi-tenant serving specs: one fleet, many server DNNs.
+
+AccMPEG's onboarding story (PAPER.md §4) is "given a new server-side
+DNN, quickly create a cheap model to infer its accuracy gradient". This
+module makes that a first-class serving object:
+
+- :class:`TenantSpec` bundles everything one tenant contributes to a
+  shared fleet: its server DNN (the black box D), the AccModel
+  calibrated against it, the per-tenant :class:`QualityConfig` (alpha /
+  QP ladder — keypoint tenants run (30, 51) per §6.1 while detection
+  runs (30, 40)), and the tenant's SLO tier ladder.
+- :func:`calibrate_tenant` is the repeatable onboarding pipeline: it
+  wraps ``core.training.train_accmodel`` (seeded, so the result is a
+  pure function of its inputs) and caches the trained AccModel per
+  *spec hash* through ``checkpoint.manager.CheckpointManager`` — the
+  second onboarding of the same DNN on the same clips is a restore, not
+  a training run.
+
+Engine side, ``TenantSpec`` plugs into ``engine.EngineConfig``
+(``tenants=``/``tenant_of=``) — tenancy rides the typed config, never a
+loose constructor kwarg. The fleet steps that consume a tenant tuple
+(stacked-params routed dispatch over a per-lane tenant gather) live in
+``serve.steps``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.accmodel import AccModel, accmodel_init
+from repro.core.aggregate import DEFAULT_TIERS, SLOTier
+from repro.core.quality import QualityConfig
+
+#: output-tree keys each task's server net contributes to the union tree
+#: the tenant-grouped server step emits (detection's ``keep`` is the
+#: in-program NMS the host decode consumes)
+TASK_KEYS = {
+    "detection": ("heat", "wh", "off", "keep"),
+    "segmentation": ("seg",),
+    "keypoint": ("kp",),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant of a shared serving fleet.
+
+    ``dnn`` is the tenant's server-side :class:`repro.vision.dnn.FinalDNN`
+    and ``accmodel`` the camera-side selector calibrated against it
+    (:func:`calibrate_tenant`). ``qcfg`` is the tenant's quality config;
+    ``tiers`` its SLO ladder (per-tenant attainment is accounted against
+    it in ``core.aggregate``). ``name`` labels telemetry gauges and bench
+    rows.
+    """
+
+    name: str
+    dnn: object          # vision.dnn.FinalDNN
+    accmodel: AccModel
+    qcfg: QualityConfig = QualityConfig()
+    tiers: Tuple[SLOTier, ...] = DEFAULT_TIERS
+
+    def __post_init__(self):
+        object.__setattr__(self, "tiers", tuple(self.tiers))
+        if not self.tiers:
+            raise ValueError(f"tenant {self.name!r} needs at least one "
+                             f"SLO tier")
+        if self.task not in TASK_KEYS:
+            raise ValueError(f"tenant {self.name!r} serves unknown task "
+                             f"{self.task!r}; known: "
+                             f"{sorted(TASK_KEYS)}")
+
+    @property
+    def task(self) -> str:
+        return self.dnn.task
+
+
+def _tree_bytes(tree) -> bytes:
+    """Deterministic byte serialization of a param pytree (sorted paths +
+    raw leaf bytes) — the spec hash's view of 'the same DNN'."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    h = hashlib.sha256()
+    for path, leaf in sorted(leaves, key=lambda kv: str(kv[0])):
+        arr = np.asarray(leaf)
+        h.update(str(path).encode())
+        h.update(str(arr.shape).encode())
+        h.update(str(arr.dtype).encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return h.digest()
+
+
+def tenant_spec_hash(dnn, frames, hyper: dict) -> str:
+    """Content hash of one calibration job: the server DNN's identity
+    (task + parameters), the training clips, and every hyperparameter
+    that changes the trained AccModel. Two calls agree iff the seeded
+    training run would produce the identical model."""
+    h = hashlib.sha256()
+    h.update(dnn.task.encode())
+    h.update(_tree_bytes(dnn.params))
+    frames = np.asarray(frames)
+    h.update(str(frames.shape).encode())
+    h.update(str(frames.dtype).encode())
+    h.update(np.ascontiguousarray(frames).tobytes())
+    h.update(json.dumps(hyper, sort_keys=True).encode())
+    return h.hexdigest()
+
+
+def calibrate_tenant(name: str, dnn, frames, *,
+                     qcfg: QualityConfig = QualityConfig(),
+                     tiers: Sequence[SLOTier] = DEFAULT_TIERS,
+                     qp_hi: int = 30, qp_lo: int = 40, epochs: int = 15,
+                     batch: int = 4, width: int = 16, seed: int = 0,
+                     pos_weight: float = 4.0, label_alpha: float = 0.1,
+                     cache_dir=None) -> TenantSpec:
+    """Onboard a new server DNN as a fleet tenant.
+
+    Trains the tenant's AccModel with ``core.training.train_accmodel``
+    (fully seeded: the result is a pure function of the DNN, the clips,
+    and the hyperparameters) and returns the assembled
+    :class:`TenantSpec`. With ``cache_dir`` set, the trained parameters
+    are cached per spec hash via :class:`~repro.checkpoint.manager.
+    CheckpointManager` — re-onboarding the identical spec restores
+    instead of retraining, which is what makes "quickly create a cheap
+    model" an idempotent pipeline step rather than a one-off script.
+    """
+    hyper = {"qp_hi": int(qp_hi), "qp_lo": int(qp_lo),
+             "epochs": int(epochs), "batch": int(batch),
+             "width": int(width), "seed": int(seed),
+             "pos_weight": float(pos_weight),
+             "label_alpha": float(label_alpha)}
+    mgr = None
+    if cache_dir is not None:
+        from pathlib import Path
+
+        from repro.checkpoint.manager import CheckpointManager
+
+        spec = tenant_spec_hash(dnn, frames, hyper)
+        mgr = CheckpointManager(Path(cache_dir) / f"tenant_{spec[:16]}",
+                                async_save=False)
+        if mgr.steps():
+            extra = mgr.manifest(mgr.latest_step())["extra"]
+            if extra.get("spec_hash") == spec:
+                like = accmodel_init(jax.random.PRNGKey(seed), width)
+                params = mgr.restore(like, step=mgr.latest_step())
+                return TenantSpec(
+                    name=name, dnn=dnn,
+                    accmodel=AccModel(params, name=f"accmodel[{name}]"),
+                    qcfg=qcfg, tiers=tuple(tiers))
+    from repro.core.training import train_accmodel
+
+    rep = train_accmodel(dnn, frames, qp_hi=qp_hi, qp_lo=qp_lo,
+                         epochs=epochs, batch=batch, width=width,
+                         seed=seed, pos_weight=pos_weight,
+                         label_alpha=label_alpha)
+    accmodel = dataclasses.replace(rep.accmodel, name=f"accmodel[{name}]")
+    if mgr is not None:
+        mgr.save(0, accmodel.params, extra={"spec_hash": spec,
+                                            "tenant": name})
+    return TenantSpec(name=name, dnn=dnn, accmodel=accmodel, qcfg=qcfg,
+                      tiers=tuple(tiers))
+
+
+# ---------------------------------------------------------------------------
+# stacked-params plumbing for the routed-dispatch fleet steps
+# ---------------------------------------------------------------------------
+def stack_trees(trees: Sequence[dict]):
+    """Stack per-tenant param trees leaf-wise into one (T, ...) tree —
+    the routed-dispatch layout (``models.moe`` idiom): a traced per-lane
+    tenant id gathers each lane's parameters out of the stack, so tenant
+    mix is *data* and churning it never recompiles. Raises loudly when
+    the trees disagree in structure or leaf shapes (tenants must share
+    network geometry to ride one stacked program)."""
+    import jax.numpy as jnp
+
+    first = jax.tree_util.tree_structure(trees[0])
+    for i, t in enumerate(trees[1:], start=1):
+        if jax.tree_util.tree_structure(t) != first:
+            raise ValueError(
+                f"tenant {i}'s param tree structure differs from tenant "
+                f"0's; stacked routed dispatch needs identical trees")
+    shapes = [tuple(np.shape(l) for l in jax.tree_util.tree_leaves(t))
+              for t in trees]
+    if any(s != shapes[0] for s in shapes[1:]):
+        raise ValueError(
+            "tenant param leaf shapes differ across tenants; stacked "
+            "routed dispatch needs a shared network geometry (same "
+            "width) — onboard the tenants at one width or serve them "
+            "on dedicated engines")
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def gather_tree(stacked, idx):
+    """Per-lane parameter gather out of a :func:`stack_trees` stack:
+    ``idx`` is a traced scalar tenant id."""
+    return jax.tree_util.tree_map(lambda s: s[idx], stacked)
+
+
+def validate_tenants(tenants: Sequence[TenantSpec], impl: str = "fast"):
+    """Fleet-level compatibility checks, raised loudly at engine build:
+
+    - at least one tenant; unique names;
+    - ``gamma`` must agree across tenants (the dilation window is a
+      *static* shape in the fused camera program — per-lane alpha/QP
+      ride as gathered data, the window cannot);
+    - the chunk-fused encoder fast-paths (``fused``/``fused_exact``)
+      additionally need one shared quality config (they consume a single
+      fleet-wide knob triple in-register).
+    """
+    tenants = tuple(tenants)
+    if not tenants:
+        raise ValueError("a tenanted engine needs at least one TenantSpec")
+    names = [t.name for t in tenants]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate tenant names: {names}")
+    gammas = {t.qcfg.gamma for t in tenants}
+    if len(gammas) > 1:
+        raise ValueError(
+            f"tenants disagree on qcfg.gamma ({sorted(gammas)}): the "
+            f"dilation window is a static shape in the fused camera "
+            f"program, so every tenant of one fleet must share it")
+    if impl in ("fused", "fused_exact"):
+        qcfgs = {t.qcfg for t in tenants}
+        if len(qcfgs) > 1:
+            raise ValueError(
+                f"impl={impl!r} fuses one fleet-wide (alpha, qp_hi, "
+                f"qp_lo) triple into the chunk kernel; tenants with "
+                f"heterogeneous QualityConfigs need impl='fast' or "
+                f"'exact'")
+    return tenants

@@ -23,7 +23,7 @@ from repro.control import (ChurnEvent, FleetAutoscaler, RateController,
 from repro.control.traces import constant_trace
 from repro.core.accmodel import AccModel, accmodel_init
 from repro.core.pipeline import NetworkConfig
-from repro.engine import MultiStreamEngine
+from repro.engine import EngineConfig, MultiStreamEngine
 from repro.vision.dnn import FinalDNN, init_net
 
 H, W = 64, 112
@@ -76,9 +76,9 @@ def test_padded_lanes_contribute_exactly_zero(dnn, accmodel, fleet):
     net = NetworkConfig.shared(2.5e6, 3)
     runs = {}
     for name, pad_pow2 in (("padded", True), ("unpadded", False)):
-        eng = MultiStreamEngine(dnn, accmodel, impl="fast", net=net,
-                                autoscaler=FleetAutoscaler(
-                                    pad_pow2=pad_pow2))
+        eng = MultiStreamEngine(dnn, accmodel, config=EngineConfig(
+            impl="fast", net=net,
+            autoscaler=FleetAutoscaler(pad_pow2=pad_pow2)))
         runs[name] = eng.serve_loop(fleet[:3], rescale=False)
         # padding really was the only difference between the two runs
         assert eng.autoscaler.compiled_shapes == ((4,) if pad_pow2
@@ -104,9 +104,9 @@ def test_padded_lanes_grant_no_phantom_uplink(dnn, accmodel, fleet):
     net = NetworkConfig(bandwidth_bps=1e6)  # no uplink_bps: fallback path
     runs = {}
     for name, pad_pow2 in (("padded", True), ("unpadded", False)):
-        eng = MultiStreamEngine(dnn, accmodel, impl="fast", net=net,
-                                autoscaler=FleetAutoscaler(
-                                    pad_pow2=pad_pow2))
+        eng = MultiStreamEngine(dnn, accmodel, config=EngineConfig(
+            impl="fast", net=net,
+            autoscaler=FleetAutoscaler(pad_pow2=pad_pow2)))
         runs[name] = eng.serve_loop(fleet[:3], rescale=False)
     for rp, ru in zip(runs["padded"].streams, runs["unpadded"].streams):
         for cp, cu in zip(rp.chunks, ru.chunks):
@@ -131,8 +131,8 @@ def test_serve_loop_validates_initial_and_events():
 def test_empty_fleet_result_reports_nan_not_crash(dnn, accmodel, fleet):
     """A schedule where nobody ever serves is legal (admit(0) idles every
     interval); aggregates must degrade to nan, not crash."""
-    eng = MultiStreamEngine(dnn, accmodel, impl="fast",
-                            autoscaler=FleetAutoscaler())
+    eng = MultiStreamEngine(dnn, accmodel, config=EngineConfig(
+        impl="fast", autoscaler=FleetAutoscaler()))
     res = eng.serve_loop(fleet[:2, :20], initial=())
     assert res.streams == [] and res.stream_ids == []
     assert res.shapes == []  # nothing compiled either
@@ -146,10 +146,9 @@ def test_churn_zero_recompiles_and_log_shapes(dnn, accmodel, fleet):
     — O(log N_max) — and a second schedule over the same shapes plus a
     fresh knob path compiles NOTHING new."""
     ctrl = RateController(delay_budget_s=0.4)
-    eng = MultiStreamEngine(dnn, accmodel, impl="fast",
-                            trace=constant_trace(1e5, rtt_s=0.02),
-                            controller=ctrl,
-                            autoscaler=FleetAutoscaler())
+    eng = MultiStreamEngine(dnn, accmodel, config=EngineConfig(
+        impl="fast", trace=constant_trace(1e5, rtt_s=0.02),
+        controller=ctrl, autoscaler=FleetAutoscaler()))
     first = eng.serve_loop(
         fleet, initial=(0,),
         events=[ChurnEvent(1, join=(1,)), ChurnEvent(2, join=(2, 3)),
@@ -189,15 +188,15 @@ def test_scale_decisions_apply_mid_loop_without_teardown(dnn, accmodel,
                                  reason="forced: deepen")
 
     net = NetworkConfig.shared(2.5e6, 3)
-    eng = MultiStreamEngine(dnn, accmodel, impl="fast", net=net,
-                            autoscaler=DeepenOnce())
+    eng = MultiStreamEngine(dnn, accmodel, config=EngineConfig(
+        impl="fast", net=net, autoscaler=DeepenOnce()))
     rescaled = eng.serve_loop(fleet[:3])
     assert eng.depth == 3 and eng.overlap  # adopted inside the loop
     assert eng.last_scale.batch_depth == 3
     assert [d.batch_depth for d in rescaled.decisions] == [3, 3, 3, 3]
-    baseline = MultiStreamEngine(
-        dnn, accmodel, impl="fast", net=net,
-        autoscaler=FleetAutoscaler()).serve_loop(fleet[:3], rescale=False)
+    baseline = MultiStreamEngine(dnn, accmodel, config=EngineConfig(
+        impl="fast", net=net,
+        autoscaler=FleetAutoscaler())).serve_loop(fleet[:3], rescale=False)
     for rr, rb in zip(rescaled.streams, baseline.streams):
         for cr, cb in zip(rr.chunks, rb.chunks):
             assert cr.accuracy == pytest.approx(cb.accuracy, abs=1e-6)
@@ -209,8 +208,8 @@ def test_scale_decisions_apply_mid_loop_without_teardown(dnn, accmodel,
             return ScaleDecision(mesh_width=1, batch_depth=1,
                                  reason="forced: serialize")
 
-    eng2 = MultiStreamEngine(dnn, accmodel, impl="fast", net=net,
-                             autoscaler=Serialize())
+    eng2 = MultiStreamEngine(dnn, accmodel, config=EngineConfig(
+        impl="fast", net=net, autoscaler=Serialize()))
     serial = eng2.serve_loop(fleet[:3])
     assert not eng2.overlap and eng2.depth == 1
     assert all(len(r.chunks) == 4 for r in serial.streams)
@@ -222,8 +221,8 @@ def test_all_quiet_interval_idles_and_resumes(dnn, accmodel, fleet):
     lull (it is one timeline, not reset per membership change), and the
     lull genuinely relieves the queue relative to serving through it."""
     trace = constant_trace(3e4, rtt_s=0.02)  # heavily saturated uplink
-    eng = MultiStreamEngine(dnn, accmodel, impl="fast", trace=trace,
-                            autoscaler=FleetAutoscaler())
+    eng = MultiStreamEngine(dnn, accmodel, config=EngineConfig(
+        impl="fast", trace=trace, autoscaler=FleetAutoscaler()))
     res = eng.serve_loop(
         fleet[:2], initial=(0, 1),
         events=[ChurnEvent(2, leave=(0, 1)),
@@ -240,9 +239,9 @@ def test_all_quiet_interval_idles_and_resumes(dnn, accmodel, fleet):
     assert post_lull.queue_s > pre_lull.queue_s
     # ... but less than if the fleet had served straight through: the
     # quiet interval put no bytes on the wire
-    straight = MultiStreamEngine(
-        dnn, accmodel, impl="fast", trace=trace,
-        autoscaler=FleetAutoscaler()).serve_loop(fleet[:2])
+    straight = MultiStreamEngine(dnn, accmodel, config=EngineConfig(
+        impl="fast", trace=trace,
+        autoscaler=FleetAutoscaler())).serve_loop(fleet[:2])
     straight_ch3 = _chunks_by_stream(straight)[0].chunks[3]
     assert post_lull.queue_s < straight_ch3.queue_s
     assert res.shapes == [2]  # one shape for the whole churny run

@@ -30,7 +30,7 @@ from repro.control.traces import constant_trace
 from repro.core.accmodel import AccModel, accmodel_init
 from repro.core.pipeline import (FleetTiming, NetworkConfig, UplinkClock,
                                  stream_delay)
-from repro.engine import MultiStreamEngine, StreamingEngine
+from repro.engine import EngineConfig, MultiStreamEngine, StreamingEngine
 from repro.engine.engine import _jit_encoder
 from repro.vision.dnn import FinalDNN, init_net
 
@@ -306,9 +306,9 @@ def test_fleet_controlled_trace_single_compile(dnn, accmodel, frames):
     N = 2
     fleet = np.stack([frames[:20]] * N)
     ctrl = RateController(delay_budget_s=0.4)
-    engine = MultiStreamEngine(dnn, accmodel, impl="fast",
-                               trace=constant_trace(1e5, rtt_s=0.02),
-                               controller=ctrl)
+    engine = MultiStreamEngine(dnn, accmodel, config=EngineConfig(
+        impl="fast", trace=constant_trace(1e5, rtt_s=0.02),
+        controller=ctrl))
     res = engine.run(fleet)
     cam_step = engine._steps[(None, True, False)][0]
     assert cam_step._cache_size() == 1
@@ -335,7 +335,8 @@ def test_fleet_depth_knob_matches_double_buffer(dnn, accmodel, frames):
     fleet = np.stack([frames] * 2)  # 4 chunks: depth 3 actually engages
     runs = {}
     for depth in (2, 3):
-        eng = MultiStreamEngine(dnn, accmodel, impl="exact", depth=depth)
+        eng = MultiStreamEngine(dnn, accmodel,
+                                config=EngineConfig(impl="exact", depth=depth))
         runs[depth] = eng.run(fleet)
     for s2, s3 in zip(runs[2].streams, runs[3].streams):
         for c2, c3 in zip(s2.chunks, s3.chunks):

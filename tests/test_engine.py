@@ -26,7 +26,7 @@ from repro.core.pipeline import (NetworkConfig, chunk_accuracy,
 from repro.core.quality import QualityConfig, qp_map_from_scores
 from repro.core.training import train_accmodel
 from repro.data.video import make_scene
-from repro.engine import (AccMPEGPolicy, MultiStreamEngine,
+from repro.engine import (AccMPEGPolicy, EngineConfig, MultiStreamEngine,
                           ReductoAccMPEGPolicy, StreamingEngine,
                           UniformPolicy)
 from repro.vision.dnn import decode_detections
@@ -233,7 +233,8 @@ def test_multistream_matches_sequential(dnn, accmodel, impl, acc_tol,
         AccMPEGPolicy(accmodel, QCFG), s.frames, refs=r)
         for s, r in zip(scenes, refs)]
 
-    fleet = MultiStreamEngine(dnn, accmodel, QCFG, net=net, impl=impl).run(
+    fleet = MultiStreamEngine(dnn, accmodel, config=EngineConfig(
+        qcfg=QCFG, net=net, impl=impl)).run(
         np.stack([s.frames for s in scenes]), refs=refs)
 
     assert fleet.n_streams == N
@@ -280,9 +281,11 @@ def test_multistream_overlap_matches_serialized(dnn, accmodel):
     refs = [make_reference(s.frames, dnn, qp_hi=30) for s in scenes]
     runs = {}
     for overlap in (False, True):
-        runs[overlap] = MultiStreamEngine(
-            dnn, accmodel, QCFG, impl="exact",
-            overlap=overlap).run(frames, refs=refs)
+        runs[overlap] = MultiStreamEngine(dnn, accmodel,
+                                          config=EngineConfig(
+                                              qcfg=QCFG, impl="exact",
+                                              overlap=overlap)).run(
+            frames, refs=refs)
     for i in range(N):
         for cs_, co in zip(runs[False].streams[i].chunks,
                            runs[True].streams[i].chunks):

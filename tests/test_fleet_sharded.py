@@ -100,7 +100,7 @@ def test_sharded_masked_step_and_serve_loop():
     run_sub(_SETUP + """
         from repro.control import ChurnEvent, FleetAutoscaler
         from repro.distributed.mesh import make_stream_mesh
-        from repro.engine import MultiStreamEngine
+        from repro.engine import EngineConfig, MultiStreamEngine
         from repro.serve.steps import make_camera_fleet_step, stream_sharding
         mesh = make_stream_mesh(4)
         batch = jnp.asarray(frames[:, :T])
@@ -126,10 +126,9 @@ def test_sharded_masked_step_and_serve_loop():
         events = [ChurnEvent(1, leave=(0, 5, 6, 7))]
         results = {}
         for label, eng_mesh in (("vmap", None), ("sharded", "auto")):
-            eng = MultiStreamEngine(dnn, am, qcfg, impl="fast",
-                                    mesh=eng_mesh,
-                                    autoscaler=FleetAutoscaler(
-                                        reuse_slack=1.0))
+            eng = MultiStreamEngine(dnn, am, config=EngineConfig(
+                qcfg=qcfg, impl="fast", mesh=eng_mesh,
+                autoscaler=FleetAutoscaler(reuse_slack=1.0)))
             results[label] = eng.serve_loop(frames, events=events,
                                             rescale=False)
             assert results[label].shapes == [4, 8]
@@ -150,11 +149,11 @@ def test_sharded_multistream_engine_matches_vmap():
     double-buffered) reproduces the single-device vmap path's per-stream
     accuracy and bytes; server outputs ride the same sharding."""
     run_sub(_SETUP + """
-        from repro.engine import MultiStreamEngine
-        r_v = MultiStreamEngine(dnn, am, qcfg, impl="fast",
-                                mesh=None, overlap=False).run(frames)
-        r_m = MultiStreamEngine(dnn, am, qcfg, impl="fast",
-                                mesh="auto", overlap=True).run(frames)
+        from repro.engine import EngineConfig, MultiStreamEngine
+        r_v = MultiStreamEngine(dnn, am, config=EngineConfig(
+            qcfg=qcfg, impl="fast", mesh=None, overlap=False)).run(frames)
+        r_m = MultiStreamEngine(dnn, am, config=EngineConfig(
+            qcfg=qcfg, impl="fast", mesh="auto", overlap=True)).run(frames)
         assert r_m.n_streams == N and len(r_m.camera_s) == 2
         assert r_m.timing is not None and r_m.timing.wall_s > 0
         for i in range(N):

@@ -20,7 +20,7 @@ import pytest
 from repro.control import FleetAutoscaler, RateController, make_workload
 from repro.core.aggregate import AggregateConfig
 from repro.core.pipeline import FleetTiming, NetworkConfig
-from repro.engine import MultiStreamEngine
+from repro.engine import EngineConfig, MultiStreamEngine
 from repro.serve.fleet import (FleetTopology, host_payload,
                                merge_host_results, serve_fleet)
 
@@ -61,11 +61,11 @@ def frames(workload):
 
 def _engine(models, workload, detail, device_reduce=True):
     dnn, am = models
-    return MultiStreamEngine(
-        dnn, am, net=NET, chunk_size=CHUNK, impl="fast",
+    return MultiStreamEngine(dnn, am, config=EngineConfig(
+        net=NET, chunk_size=CHUNK, impl="fast",
         autoscaler=FleetAutoscaler(), sim_encode_s=0.01, detail=detail,
         aggregate=workload.aggregate_config(window=2),
-        device_reduce=device_reduce)
+        device_reduce=device_reduce))
 
 
 def _serve(engine, workload, frames):
@@ -126,7 +126,8 @@ def test_device_reduce_stays_on_device_and_close(models, workload,
 def test_detail_knob_validated(models):
     dnn, am = models
     with pytest.raises(ValueError, match="detail"):
-        MultiStreamEngine(dnn, am, detail="everything")
+        MultiStreamEngine(dnn, am,
+                          config=EngineConfig(detail="everything"))
 
 
 # ---------------------------------------------------------------------------
@@ -137,9 +138,9 @@ def test_finish_with_empty_active_set_skips_controller(models):
     (``ids=()``) used to raise ``ValueError: max() arg is an empty
     sequence`` while building the controller observation."""
     dnn, am = models
-    engine = MultiStreamEngine(dnn, am, net=NET, chunk_size=CHUNK,
-                               controller=RateController(),
-                               sim_encode_s=0.01)
+    engine = MultiStreamEngine(dnn, am, config=EngineConfig(
+        net=NET, chunk_size=CHUNK, controller=RateController(),
+        sim_encode_s=0.01))
     per_stream = {0: []}
     timing = FleetTiming()
     p = {"ci": 3, "ids": (), "pbytes": np.zeros((2, CHUNK)),

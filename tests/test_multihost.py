@@ -24,7 +24,7 @@ from repro.control import ChurnEvent, CrossHostAutoscaler, FleetAutoscaler
 from repro.control.traces import constant_trace
 from repro.core.accmodel import AccModel, accmodel_init
 from repro.core.pipeline import FleetTiming
-from repro.engine import MultiStreamEngine
+from repro.engine import EngineConfig, MultiStreamEngine
 from repro.serve.fleet import (FleetTopology, host_payload,
                                merge_host_results, serve_fleet,
                                split_events)
@@ -219,14 +219,14 @@ def test_serve_loop_owned_guard_raises_on_stray_join():
     host's stream."""
     dnn, am = _tiny_models()
     frames = _tiny_fleet(2)
-    eng = MultiStreamEngine(dnn, am, impl="fast",
-                            autoscaler=FleetAutoscaler())
+    eng = MultiStreamEngine(dnn, am, config=EngineConfig(
+        impl="fast", autoscaler=FleetAutoscaler()))
     with pytest.raises(ValueError, match="declared\\s+ownership"):
         eng.serve_loop(frames, initial=(0,),
                        events=[ChurnEvent(1, join=(1,))], owned=(0,))
     # the same schedule with matching ownership serves fine
-    res = MultiStreamEngine(dnn, am, impl="fast",
-                            autoscaler=FleetAutoscaler()).serve_loop(
+    res = MultiStreamEngine(dnn, am, config=EngineConfig(
+        impl="fast", autoscaler=FleetAutoscaler())).serve_loop(
         frames, initial=(0,), events=[ChurnEvent(1, join=(1,))],
         owned=(0, 1))
     assert res.stream_ids == [0, 1]
@@ -256,12 +256,12 @@ def test_fallback_padding_parity_bit_exact():
 
     def engines(pad_pow2):
         def make_engine(host):
-            return MultiStreamEngine(
-                dnn, am, impl="fast",
+            return MultiStreamEngine(dnn, am, config=EngineConfig(
+                impl="fast",
                 trace=constant_trace(2e5 * (host + 1), rtt_s=0.02),
                 autoscaler=FleetAutoscaler(pad_pow2=pad_pow2,
                                            reuse_slack=1.0),
-                sim_encode_s=0.04)
+                sim_encode_s=0.04))
         return make_engine
 
     padded = serve_fleet(engines(True), frames, topo, initial=(0, 2),

@@ -302,15 +302,15 @@ CS = 5
 def engine():
     from repro.core.accmodel import AccModel, accmodel_init
     from repro.core.pipeline import NetworkConfig
-    from repro.engine import MultiStreamEngine
+    from repro.engine import EngineConfig, MultiStreamEngine
     from repro.vision.dnn import FinalDNN, init_net
 
     dnn = FinalDNN("detection",
                    init_net("detection", jax.random.PRNGKey(0), width=8))
     am = AccModel(accmodel_init(jax.random.PRNGKey(1), 8))
-    return MultiStreamEngine(dnn, am, impl="fast", chunk_size=CS,
-                             net=NetworkConfig.shared(2.5e6, 3),
-                             sim_encode_s=0.05)
+    return MultiStreamEngine(dnn, am, config=EngineConfig(
+        impl="fast", chunk_size=CS, net=NetworkConfig.shared(2.5e6, 3),
+        sim_encode_s=0.05))
 
 
 @pytest.fixture(scope="module")

@@ -1,0 +1,318 @@
+"""Multi-tenant serving plane (TenantSpec + EngineConfig): the PR's
+acceptance contracts.
+
+1. EngineConfig is the construction surface — legacy loose kwargs still
+   work through the deprecation shim, warn, and are bit-identical.
+2. A single-tenant TenantSpec folds into the classic engine path
+   bit-identically (no tenant lane, no behaviour change).
+3. The tenant-grouped server step (each DNN's backbone runs once over
+   its own gathered lanes) matches per-tenant sequential inference.
+4. A 2-tenant (detection + segmentation) fleet reports per-tenant
+   accuracy equal to two dedicated single-tenant fleets (<= 1e-6).
+5. Per-tenant AggregateResult survives wire round-trips, cross-host
+   merge, and stream-id relabel.
+6. Mixed-tenant churn compiles one fleet program per padded shape —
+   O(log N_max) — and re-admission recompiles nothing (CompileCounter).
+"""
+import json
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from _compile_counter import CompileCounter
+from repro.control import ChurnEvent, FleetAutoscaler
+from repro.core.accmodel import AccModel, accmodel_init
+from repro.core.aggregate import (DEFAULT_TIERS, AggregateConfig,
+                                  AggregateResult, SLOTier)
+from repro.core.quality import QualityConfig
+from repro.engine import EngineConfig, MultiStreamEngine
+from repro.serve.tenants import TenantSpec, gather_tree, stack_trees
+from repro.vision.dnn import FinalDNN, init_net
+
+H, W = 64, 112
+CS = 10
+QCFG = QualityConfig(alpha=0.5, gamma=2, qp_hi=30, qp_lo=42)
+
+
+@pytest.fixture(scope="module")
+def det_dnn():
+    return FinalDNN("detection",
+                    init_net("detection", jax.random.PRNGKey(0), width=8))
+
+
+@pytest.fixture(scope="module")
+def seg_dnn():
+    return FinalDNN("segmentation",
+                    init_net("segmentation", jax.random.PRNGKey(1),
+                             width=8))
+
+
+@pytest.fixture(scope="module")
+def det_am():
+    return AccModel(accmodel_init(jax.random.PRNGKey(2), 8))
+
+
+@pytest.fixture(scope="module")
+def seg_am():
+    return AccModel(accmodel_init(jax.random.PRNGKey(3), 8))
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    from repro.data.video import make_scene
+
+    return np.stack([make_scene("dashcam", seed=30 + i, T=2 * CS, H=H,
+                                W=W).frames for i in range(4)])
+
+
+def _chunk_digest(res):
+    return [[(c.ci, c.accuracy, c.bytes, c.queue_s) for c in r.chunks]
+            for r in res.streams]
+
+
+# ---------------------------------------------------------------------------
+# 1. the construction surface
+# ---------------------------------------------------------------------------
+def test_legacy_kwargs_warn_and_are_bit_identical(det_dnn, det_am, fleet):
+    with pytest.warns(DeprecationWarning, match="EngineConfig"):
+        legacy = MultiStreamEngine(det_dnn, det_am, QCFG, impl="fast",
+                                   chunk_size=CS, overlap=False)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cfg = MultiStreamEngine(det_dnn, det_am, config=EngineConfig(
+            qcfg=QCFG, impl="fast", chunk_size=CS, overlap=False))
+    r_legacy = legacy.run(fleet)
+    r_cfg = cfg.run(fleet)
+    assert _chunk_digest(r_legacy) == _chunk_digest(r_cfg)
+
+
+def test_config_and_loose_kwargs_are_mutually_exclusive(det_dnn, det_am):
+    with pytest.raises(ValueError, match="config"):
+        MultiStreamEngine(det_dnn, det_am, impl="fast",
+                          config=EngineConfig())
+
+
+def test_engine_config_validates_early():
+    with pytest.raises(ValueError, match="detail"):
+        EngineConfig(detail="everything")
+    with pytest.raises(ValueError):
+        EngineConfig(chunk_size=0)
+
+
+# ---------------------------------------------------------------------------
+# 2. single tenant == today's engine, bit for bit
+# ---------------------------------------------------------------------------
+def test_single_tenant_spec_is_bit_identical(det_dnn, det_am, fleet):
+    plain = MultiStreamEngine(det_dnn, det_am, config=EngineConfig(
+        qcfg=QCFG, impl="fast", chunk_size=CS)).run(fleet)
+    spec = TenantSpec("only", det_dnn, det_am, qcfg=QCFG)
+    tenant = MultiStreamEngine(config=EngineConfig(
+        impl="fast", chunk_size=CS, tenants=(spec,))).run(fleet)
+    assert _chunk_digest(plain) == _chunk_digest(tenant)
+
+
+def test_tenant_spec_validation(det_dnn, det_am):
+    with pytest.raises(ValueError):  # empty tier ladder
+        TenantSpec("t", det_dnn, det_am, tiers=())
+    spec = TenantSpec("t", det_dnn, det_am)
+    assert spec.task == "detection" and spec.tiers == DEFAULT_TIERS
+    with pytest.raises(ValueError, match="gamma"):  # non-uniform gamma
+        EngineConfig(tenants=(
+            spec, TenantSpec("u", det_dnn, det_am,
+                             qcfg=QualityConfig(gamma=4))))
+    with pytest.raises(ValueError):  # tenant_of out of range
+        EngineConfig(tenants=(spec,), tenant_of={0: 3})
+
+
+# ---------------------------------------------------------------------------
+# 3. tenant-grouped server step vs per-tenant sequential inference
+# ---------------------------------------------------------------------------
+def test_tenant_server_step_matches_sequential(det_dnn, seg_dnn, det_am,
+                                               seg_am):
+    from repro.serve.steps import make_tenant_server_fleet_step
+    from repro.vision.dnn import backbone, detection_keep_heat, head
+
+    tenants = (TenantSpec("det", det_dnn, det_am, qcfg=QCFG),
+               TenantSpec("seg", seg_dnn, seg_am, qcfg=QCFG))
+    step = make_tenant_server_fleet_step(tenants)
+    rng = np.random.default_rng(0)
+    decoded = rng.random((4, CS, H, W, 3)).astype(np.float32)
+    tids = np.array([0, 1, 0, 1], np.int32)
+    out = jax.jit(step)(decoded, tids)
+
+    for lane, t in enumerate(tids):
+        params = tenants[int(t)].dnn.params
+        feats = backbone(params["backbone"], decoded[lane])
+        if t == 0:
+            for k in ("heat", "wh", "off"):
+                want = head(params[k], feats)
+                np.testing.assert_allclose(out[k][lane], want, atol=1e-5)
+            keep = detection_keep_heat({"heat": head(params["heat"], feats)})
+            np.testing.assert_allclose(out["keep"][lane], keep, atol=1e-5)
+        else:
+            want = head(params["seg"], feats)
+            np.testing.assert_allclose(out["seg"][lane], want, atol=1e-5)
+
+
+def test_stack_and_gather_tree_roundtrip(det_am, seg_am):
+    stacked = stack_trees([det_am.params, seg_am.params])
+    for i, am in enumerate((det_am, seg_am)):
+        got = gather_tree(stacked, i)
+        for a, b in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(am.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# 4. heterogeneous 2-tenant fleet == dedicated fleets, per tenant
+# ---------------------------------------------------------------------------
+def _two_tenant_setup(det_dnn, seg_dnn, det_am, seg_am, fleet):
+    tenants = (TenantSpec("det", det_dnn, det_am, qcfg=QCFG),
+               TenantSpec("seg", seg_dnn, seg_am, qcfg=QCFG))
+    tenant_of = {0: 0, 1: 0, 2: 1, 3: 1}
+    return tenants, tenant_of, fleet[:2], fleet[2:]
+
+
+def test_two_tenant_run_matches_dedicated(det_dnn, seg_dnn, det_am, seg_am,
+                                          fleet):
+    tenants, tenant_of, det_frames, seg_frames = _two_tenant_setup(
+        det_dnn, seg_dnn, det_am, seg_am, fleet)
+    mixed = MultiStreamEngine(config=EngineConfig(
+        impl="fast", chunk_size=CS, tenants=tenants,
+        tenant_of=tenant_of)).run(fleet)
+    assert mixed.tenant_ids == [0, 0, 1, 1]
+    acc = mixed.accuracy_by_tenant()
+
+    def dedicated(dnn, am, frames):
+        res = MultiStreamEngine(dnn, am, config=EngineConfig(
+            qcfg=QCFG, impl="fast", chunk_size=CS)).run(frames)
+        return float(np.mean([r.summary()["accuracy"]
+                              for r in res.streams]))
+
+    assert acc[0] == pytest.approx(dedicated(det_dnn, det_am, det_frames),
+                                   abs=1e-6)
+    assert acc[1] == pytest.approx(dedicated(seg_dnn, seg_am, seg_frames),
+                                   abs=1e-6)
+
+
+def test_two_tenant_serve_loop_matches_dedicated_and_splits_capacity(
+        det_dnn, seg_dnn, det_am, seg_am, fleet):
+    tenants, tenant_of, det_frames, seg_frames = _two_tenant_setup(
+        det_dnn, seg_dnn, det_am, seg_am, fleet)
+    eng = MultiStreamEngine(config=EngineConfig(
+        impl="fast", chunk_size=CS, tenants=tenants, tenant_of=tenant_of,
+        autoscaler=FleetAutoscaler()))
+    res = eng.serve_loop(fleet, rescale=False)
+    acc = res.accuracy_by_tenant()
+
+    def dedicated(dnn, am, frames):
+        r = MultiStreamEngine(dnn, am, config=EngineConfig(
+            qcfg=QCFG, impl="fast", chunk_size=CS,
+            autoscaler=FleetAutoscaler())).serve_loop(frames, rescale=False)
+        return float(np.mean([s.summary()["accuracy"] for s in r.streams]))
+
+    assert acc[0] == pytest.approx(dedicated(det_dnn, det_am, det_frames),
+                                   abs=1e-6)
+    assert acc[1] == pytest.approx(dedicated(seg_dnn, seg_am, seg_frames),
+                                   abs=1e-6)
+    # the autoscaler's capacity split follows per-tenant occupancy
+    assert all(d.tenant_share == (0.5, 0.5) for d in res.decisions)
+
+
+def test_multi_tenant_rejects_controller(det_dnn, seg_dnn, det_am, seg_am):
+    tenants = (TenantSpec("det", det_dnn, det_am, qcfg=QCFG),
+               TenantSpec("seg", seg_dnn, seg_am, qcfg=QCFG))
+    from repro.control import RateController
+
+    with pytest.raises(ValueError, match="controller"):
+        MultiStreamEngine(config=EngineConfig(
+            tenants=tenants, controller=RateController()))
+
+
+# ---------------------------------------------------------------------------
+# 5. per-tenant aggregate: wire round-trip, merge, relabel
+# ---------------------------------------------------------------------------
+def _tenant_agg(tenant_of, seed):
+    tiers = (DEFAULT_TIERS,
+             tuple(SLOTier(t.name, t.slo_s * 2, t.weight)
+                   for t in DEFAULT_TIERS))
+    agg = AggregateConfig(window=2).build(tenant_of=tenant_of,
+                                          tenant_tiers=tiers)
+    rng = np.random.default_rng(seed)
+    for ci in range(4):
+        sids = sorted(tenant_of)
+        agg.observe(ci, sids, rng.random(len(sids)),
+                    rng.random(len(sids)) * 1e4, rng.random(len(sids)))
+    return agg.result()
+
+
+def test_per_tenant_aggregate_wire_roundtrip():
+    res = _tenant_agg({0: 0, 1: 1, 2: 0}, seed=1)
+    assert res.tenanted and res.n_tenants == 2
+    wire = json.loads(json.dumps(res.to_wire()))
+    back = AggregateResult.from_wire(wire)
+    assert back.accuracy_by_tenant() == res.accuracy_by_tenant()
+    for da, db in zip(back.attainment_by_tenant(),
+                      res.attainment_by_tenant()):
+        assert da.keys() == db.keys()
+        for k in da:  # NaN-safe: tiers no stream mapped to stay NaN
+            np.testing.assert_equal(da[k], db[k])
+    assert back.tenant_of == res.tenant_of
+    # summary carries the per-tenant rows
+    s = res.summary()
+    assert "tenant0_accuracy" in s and "tenant1_slo_gold" in s
+
+
+def test_per_tenant_aggregate_merge_and_relabel():
+    a = _tenant_agg({0: 0, 1: 1}, seed=2)
+    b = _tenant_agg({2: 1, 3: 0}, seed=3)
+    merged = AggregateResult.merge([a, b])
+    assert merged.tenant_of == {0: 0, 1: 1, 2: 1, 3: 0}
+    np.testing.assert_array_equal(merged.t_n, a.t_n + b.t_n)
+    np.testing.assert_allclose(merged.t_sum_acc, a.t_sum_acc + b.t_sum_acc)
+    np.testing.assert_array_equal(merged.t_attained,
+                                  a.t_attained + b.t_attained)
+    shifted = b.relabel({2: 7, 3: 9})
+    assert shifted.tenant_of == {7: 1, 9: 0}
+    # tenanted and untenanted results never merge silently
+    plain = AggregateConfig(window=2).build()
+    plain.observe(0, [0], np.ones(1), np.ones(1), np.ones(1))
+    with pytest.raises(ValueError):
+        AggregateResult.merge([a, plain.result()])
+
+
+# ---------------------------------------------------------------------------
+# 6. mixed-tenant churn: O(log N) shapes, zero recompiles on re-admission
+# ---------------------------------------------------------------------------
+def test_mixed_tenant_churn_keeps_compiled_shapes_logarithmic(
+        det_dnn, seg_dnn, det_am, seg_am):
+    from repro.data.video import make_scene
+
+    frames = np.stack([make_scene("dashcam", seed=50 + i, T=4 * CS, H=H,
+                                  W=W).frames for i in range(4)])
+    tenants = (TenantSpec("det", det_dnn, det_am, qcfg=QCFG),
+               TenantSpec("seg", seg_dnn, seg_am, qcfg=QCFG))
+    eng = MultiStreamEngine(config=EngineConfig(
+        impl="fast", chunk_size=CS, tenants=tenants,
+        tenant_of={0: 0, 1: 1, 2: 0, 3: 1},
+        autoscaler=FleetAutoscaler()))
+    first = eng.serve_loop(
+        frames, initial=(0,),
+        events=[ChurnEvent(1, join=(1,)), ChurnEvent(2, join=(2, 3)),
+                ChurnEvent(3, leave=(1, 2, 3))],
+        rescale=False)
+    assert first.shapes == [1, 2, 4]  # pow2 buckets only: log growth
+    cam_step, server_step = eng._steps[(None, False, True)]
+    counter = CompileCounter(camera=cam_step, server=server_step)
+    # a different mixed-tenant churn order re-admits onto the same
+    # compiled shapes — the tenant mix is data, never a new program
+    second = eng.serve_loop(
+        frames, initial=(0, 1, 2, 3),
+        events=[ChurnEvent(1, leave=(2, 3)), ChurnEvent(2, leave=(1,)),
+                ChurnEvent(3, join=(3,))],
+        rescale=False)
+    counter.assert_no_recompiles("mixed-tenant re-admission")
+    assert second.shapes == [1, 2, 4]
+    assert all(c.bytes > 0 for r in second.streams for c in r.chunks)
